@@ -1,0 +1,63 @@
+"""Kernel-level scaling benchmark (paper Table III's S_k column analogue):
+decoder throughput vs number of parallel blocks N_t, plus the per-phase
+split (K1 forward ACS vs K2 traceback) the paper reports as T_k1/T_k2.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.trellis import CCSDS_27
+from repro.kernels.ref import acs_forward_ref, traceback_ref
+
+
+def _time(fn, *args, reps=3):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(d=512, l=42) -> list[dict]:
+    code = CCSDS_27
+    T = d + 2 * l
+    rows = []
+    rng = np.random.default_rng(0)
+    k1 = jax.jit(lambda y: acs_forward_ref(y, code))
+    for n_t in (64, 256, 1024, 4096):
+        y = jnp.asarray(
+            np.clip(rng.normal(size=(T, code.R, n_t)) * 32, -127, 127).astype(np.int8)
+        )
+        sp, pm = k1(y)
+        t_k1 = _time(k1, y)
+        k2 = jax.jit(
+            lambda s: traceback_ref(s, code, l, d, jnp.zeros((s.shape[-1],), jnp.int32))
+        )
+        t_k2 = _time(k2, sp)
+        bits = d * n_t
+        rows.append(
+            dict(
+                n_t=n_t,
+                t_k1_ms=round(t_k1 * 1e3, 2),
+                t_k2_ms=round(t_k2 * 1e3, 2),
+                s_k_mbps=round(bits / (t_k1 + t_k2) / 1e6, 2),
+            )
+        )
+    return rows
+
+
+def main():
+    for r in run():
+        print(
+            f"kernel_scaling_nt{r['n_t']},{(r['t_k1_ms']+r['t_k2_ms'])*1000:.0f},"
+            f"t_k1_ms={r['t_k1_ms']},t_k2_ms={r['t_k2_ms']},s_k_mbps={r['s_k_mbps']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

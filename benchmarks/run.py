@@ -1,0 +1,33 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per the repo convention.
+
+  table3_throughput — paper Table III (orig vs optimized decoder, T/P model)
+  kernel_scaling    — paper Table III S_k column (K1/K2 split vs N_t)
+  fig4_ber          — paper Fig. 4 (BER vs Eb/N0 for L ∈ {14,28,42})
+  table4_comparison — paper Table IV (cross-work TNDC normalization)
+
+Roofline tables (assignment §Roofline) are produced by
+``python -m repro.launch.roofline`` from the dry-run reports.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import fig4_ber, kernel_scaling, table3_throughput, table4_comparison
+
+    for mod in (table3_throughput, kernel_scaling, fig4_ber, table4_comparison):
+        t0 = time.perf_counter()
+        mod.main()
+        print(
+            f"# {mod.__name__.split('.')[-1]} finished in {time.perf_counter()-t0:.1f}s",
+            file=sys.stderr,
+        )
+
+
+if __name__ == "__main__":
+    main()

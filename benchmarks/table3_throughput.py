@@ -1,0 +1,97 @@
+"""Paper Table III: original vs optimized decoder, throughput vs N_t.
+
+The paper's "original" decoder = one monolithic kernel, float32 I/O,
+unpacked outputs. The "optimized" decoder = two-phase kernels (K1/K2),
+8-bit packed inputs, bit-packed outputs.
+
+On this CPU container we measure the jnp (XLA-CPU) execution of both
+pipelines (wall time → Mbps) and additionally report the MODELED TPU-v5e
+throughput from the paper's eq. (7) with the kernel rate replaced by the
+dry-run roofline bound (see EXPERIMENTS.md §Perf for the derivation).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import transmit
+from repro.core.encoder import encode_jax, terminate
+from repro.core.pbvd import PBVDConfig, decode_stream, throughput_model
+from repro.core.quantize import pack_bits, quantize_soft
+from repro.core.trellis import CCSDS_27
+
+
+def _stream(n_bits: int, seed=0):
+    code = CCSDS_27
+    rng = np.random.default_rng(seed)
+    bits = terminate(rng.integers(0, 2, n_bits), code)
+    coded = encode_jax(jnp.asarray(bits), code)
+    return bits[:n_bits], transmit(jax.random.PRNGKey(seed), coded, 4.0, code.rate)
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(n_bits: int = 1 << 18) -> list[dict]:
+    bits, y = _stream(n_bits)
+    D, L = 512, 42
+    rows = []
+
+    # original: f32 soft symbols, unpacked int32 outputs, single fused pipeline
+    cfg_orig = PBVDConfig(D=D, L=L, q=None, backend="ref")
+    f_orig = jax.jit(lambda yy: decode_stream(yy, n_bits, cfg_orig))
+    t_orig = _time(f_orig, y)
+
+    # optimized: int8 quantized inputs, bit-packed outputs (paper §IV-C)
+    cfg_opt = PBVDConfig(D=D, L=L, q=8, backend="ref")
+
+    def opt_pipeline(yq):
+        out = decode_stream(yq.astype(jnp.int8), n_bits, cfg_opt)
+        pad = (-out.shape[0]) % 8
+        return pack_bits(jnp.pad(out, (0, pad)))
+
+    yq = quantize_soft(y, 8)
+    f_opt = jax.jit(opt_pipeline)
+    t_opt = _time(f_opt, yq)
+
+    n_blocks = -(-n_bits // D)
+    for name, t, q, packed in (("original", t_orig, None, False), ("optimized", t_opt, 8, True)):
+        s_k = n_bits / t / 1e6  # measured CPU kernel throughput, Mbps
+        rows.append(
+            dict(
+                variant=name,
+                n_bits=n_bits,
+                n_blocks=n_blocks,
+                cpu_ms=round(t * 1e3, 2),
+                cpu_mbps=round(s_k, 2),
+                # modeled deployment throughput at the paper's transfer budget
+                model_tp_paper_bw=round(
+                    throughput_model(
+                        D=D, L=L, R=2, q=q, packed_out=packed,
+                        s_kernel_mbps=s_k, n_streams=3, bandwidth_gbps=8.0,
+                    ),
+                    1,
+                ),
+            )
+        )
+    return rows
+
+
+def main():
+    for r in run():
+        extra = ",".join(f"{k}={v}" for k, v in r.items() if k not in ("variant", "cpu_ms"))
+        print(f"table3_{r['variant']},{r['cpu_ms']*1000:.1f},{extra}")
+
+
+if __name__ == "__main__":
+    main()

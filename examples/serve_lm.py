@@ -1,0 +1,53 @@
+"""Batched serving demo: KV-cache decode through the serving stack,
+including a sliding-window model (rolling cache) and an SSM (state cache).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import lm
+from repro.serve.serve_step import make_decode_step
+
+
+def serve(arch: str, n_new: int = 48, batch: int = 4):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (batch, 8)), jnp.int32)
+    s_max = prompt.shape[1] + n_new
+    cache = lm.init_cache(cfg, batch, s_max)
+    step = jax.jit(make_decode_step(cfg, s_max))
+
+    # prefill (token-by-token for simplicity; prefill_32k lowers the batched path)
+    tok = prompt[:, :1]
+    for t in range(prompt.shape[1]):
+        nxt, cache = step(params, prompt[:, t : t + 1], cache, jnp.int32(t))
+    t0 = time.perf_counter()
+    out = []
+    tok = nxt[:, None]
+    for t in range(n_new):
+        out.append(tok)
+        nxt, cache = step(params, tok, cache, jnp.int32(prompt.shape[1] + t))
+        tok = nxt[:, None]
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    toks = jnp.concatenate(out, axis=1)
+    print(f"{arch:22s} generated {batch}×{n_new} tokens in {dt*1e3:.0f} ms "
+          f"({batch*n_new/dt:.0f} tok/s) — cache kinds: "
+          + ("KV ring" if cfg.sliding_window else "state" if cfg.family == "ssm" else "KV"))
+    return toks
+
+
+def main():
+    for arch in ("starcoder2-3b", "rwkv6-3b", "mixtral-8x22b"):
+        serve(arch)
+
+
+if __name__ == "__main__":
+    main()

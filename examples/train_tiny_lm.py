@@ -1,0 +1,61 @@
+"""End-to-end driver (deliverable b): train a ~100M-param LM for a few
+hundred steps through the full production stack — data pipeline with
+prefetch, pjit train step, sharded AdamW, async checkpoints, failure
+recovery.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py --steps 300
+
+(On this CPU container a 100M model at seq 128 runs ~1 step/s; pass
+--preset tiny for a quick smoke.)
+"""
+
+import argparse
+
+from repro.configs.base import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.launch.train import TrainLoop, preset_config
+from repro.train.optimizer import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--preset", default="100m", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_tiny_lm")
+    args = ap.parse_args()
+
+    cfg = preset_config(args.arch, args.preset)
+    from repro.models import lm as _lm
+    import jax
+
+    n_params = sum(
+        int(__import__("numpy").prod(l.shape))
+        for l in jax.tree.leaves(
+            jax.eval_shape(lambda k: _lm.init_params(k, cfg), jax.random.PRNGKey(0))
+        )
+    )
+    print(f"training {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"batch {args.global_batch} × seq {args.seq_len}, {args.steps} steps")
+
+    loop = TrainLoop(
+        cfg,
+        AdamWConfig(lr=1e-3, total_steps=args.steps, warmup_steps=max(args.steps // 20, 5)),
+        make_local_mesh(),
+        ckpt_dir=args.ckpt_dir,
+        global_batch=args.global_batch,
+        seq_len=args.seq_len,
+        ckpt_every=100,
+    )
+    try:
+        log = loop.run(args.steps)
+        print(f"loss: {log[0]['loss']} → {log[-1]['loss']}")
+        assert log[-1]["loss"] < log[0]["loss"], "loss did not decrease"
+    finally:
+        loop.pipeline.close()
+
+
+if __name__ == "__main__":
+    main()

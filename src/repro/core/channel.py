@@ -1,0 +1,33 @@
+"""BPSK modulation + AWGN channel, matching the paper's Fig. 4 setup."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["bpsk", "awgn", "ebn0_to_sigma", "transmit"]
+
+
+def bpsk(bits: jnp.ndarray) -> jnp.ndarray:
+    """Map bit b ∈ {0,1} → symbol s ∈ {+1,-1} (0 → +1)."""
+    return 1.0 - 2.0 * bits.astype(jnp.float32)
+
+
+def ebn0_to_sigma(ebn0_db: float, rate: float) -> float:
+    """Noise std for unit-energy BPSK at the given Eb/N0 (dB) and code rate.
+
+    Es/N0 = rate * Eb/N0;  sigma^2 = 1 / (2 * Es/N0).
+    """
+    esn0 = rate * 10.0 ** (ebn0_db / 10.0)
+    return float(np.sqrt(1.0 / (2.0 * esn0)))
+
+
+def awgn(key: jax.Array, symbols: jnp.ndarray, sigma: float) -> jnp.ndarray:
+    return symbols + sigma * jax.random.normal(key, symbols.shape, dtype=jnp.float32)
+
+
+def transmit(key: jax.Array, coded_bits: jnp.ndarray, ebn0_db: float, rate: float) -> jnp.ndarray:
+    """bits (..., T, R) → noisy soft symbols (..., T, R), float32."""
+    sigma = ebn0_to_sigma(ebn0_db, rate)
+    return awgn(key, bpsk(coded_bits), sigma)

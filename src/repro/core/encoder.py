@@ -1,0 +1,62 @@
+"""Convolutional encoder for (R, 1, K) codes — numpy reference + JAX version.
+
+The JAX version is used by the data pipeline / benchmarks to generate test
+streams on-device; the numpy version is the oracle for tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .trellis import ConvCode
+
+__all__ = ["encode_np", "encode_jax", "terminate"]
+
+
+def terminate(bits: np.ndarray, code: ConvCode) -> np.ndarray:
+    """Append K-1 zero flush bits so the encoder returns to state 0."""
+    return np.concatenate([np.asarray(bits, dtype=np.int64), np.zeros(code.v, dtype=np.int64)])
+
+
+def encode_np(bits: np.ndarray, code: ConvCode, init_state: int = 0) -> np.ndarray:
+    """Encode a bit sequence. Returns (len(bits), R) output bits.
+
+    Stage t consumes input bit ``bits[t]`` at state ``s_t`` and emits
+    ``c(s_t, bits[t])``; ``s_{t+1} = (bits[t] << (v-1)) | (s_t >> 1)``.
+    """
+    bits = np.asarray(bits, dtype=np.int64)
+    out = np.zeros((len(bits), code.R), dtype=np.int64)
+    s = int(init_state)
+    for t, x in enumerate(bits):
+        out[t] = code.output_bits(s, int(x))
+        s = (int(x) << (code.v - 1)) | (s >> 1)
+    return out
+
+
+def encode_jax(bits: jnp.ndarray, code: ConvCode, init_state: int = 0) -> jnp.ndarray:
+    """Vectorized JAX encoder via lax.scan. bits: (..., T) int32 → (..., T, R)."""
+    lows = jnp.asarray(code.poly_ints & ((1 << code.v) - 1), dtype=jnp.int32)
+    tap_x = jnp.asarray((code.poly_ints >> (code.K - 1)) & 1, dtype=jnp.int32)
+
+    def popcount_parity(x):
+        # x: int32 >= 0, values < 2^v. Parity via repeated fold.
+        p = x
+        for shift in (16, 8, 4, 2, 1):
+            p = p ^ (p >> shift)
+        return p & 1
+
+    def step(state, x):
+        mem = popcount_parity(state[..., None] & lows)
+        out = mem ^ (x[..., None] * tap_x)
+        nxt = (x << (code.v - 1)) | (state >> 1)
+        return nxt, out
+
+    bits = bits.astype(jnp.int32)
+    batch_shape = bits.shape[:-1]
+    s0 = jnp.full(batch_shape, init_state, dtype=jnp.int32)
+    # scan over time (last axis)
+    bits_t = jnp.moveaxis(bits, -1, 0)
+    _, outs = jax.lax.scan(step, s0, bits_t)
+    return jnp.moveaxis(outs, 0, -2)  # (..., T, R)

@@ -1,0 +1,112 @@
+"""q-bit fixed-point quantization + word packing (paper §IV-C).
+
+The paper shrinks the H2D transfer by quantizing soft symbols to q bits and
+packing ``⌊32/q⌋`` of them per 32-bit word (U₁: 4R → 4R/⌊32/q⌋ bytes per
+symbol), and shrinks D2H by bit-packing decoded bits (U₂ → 1/8 byte).
+
+We implement the same transforms; the packed representations are what the
+decode engine moves across the host↔HBM boundary and what the Pallas kernels
+consume (int8 path) / produce (bit-packed decisions).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "quantize_soft",
+    "dequantize_soft",
+    "pack_words",
+    "unpack_words",
+    "pack_bits",
+    "unpack_bits",
+    "u1_bytes",
+    "u2_bytes",
+]
+
+
+def quantize_soft(y: jnp.ndarray, q: int = 8, scale: float | None = None) -> jnp.ndarray:
+    """Quantize soft symbols to q-bit signed fixed point, stored in int8/int16.
+
+    ``scale`` defaults to mapping |y| = 4σ-ish dynamic range; for unit-energy
+    BPSK ±1 with noise, scale = (2^(q-1)-1) / 4.0 keeps clipping negligible.
+    """
+    if q < 2 or q > 16:
+        raise ValueError("q must be in [2, 16]")
+    qmax = (1 << (q - 1)) - 1
+    if scale is None:
+        scale = qmax / 4.0
+    z = jnp.clip(jnp.round(y * scale), -qmax - 1, qmax)
+    dtype = jnp.int8 if q <= 8 else jnp.int16
+    return z.astype(dtype)
+
+
+def dequantize_soft(z: jnp.ndarray, q: int = 8, scale: float | None = None) -> jnp.ndarray:
+    qmax = (1 << (q - 1)) - 1
+    if scale is None:
+        scale = qmax / 4.0
+    return z.astype(jnp.float32) / scale
+
+
+def pack_words(z: jnp.ndarray, q: int = 8) -> jnp.ndarray:
+    """Pack q-bit values along the last axis into int32 words (⌊32/q⌋ per word).
+
+    Input last-dim length must be a multiple of ⌊32/q⌋.
+    """
+    per = 32 // q
+    *lead, n = z.shape
+    if n % per:
+        raise ValueError(f"last dim {n} not a multiple of {per}")
+    zi = z.astype(jnp.int32) & ((1 << q) - 1)
+    zi = zi.reshape(*lead, n // per, per)
+    shifts = jnp.arange(per, dtype=jnp.int32) * q
+    # disjoint bit ranges → sum == bitwise OR (int32 add wraps, bits preserved)
+    return (zi << shifts).sum(axis=-1, dtype=jnp.int32)
+
+
+def unpack_words(w: jnp.ndarray, q: int = 8, per_axis_len: int | None = None) -> jnp.ndarray:
+    """Inverse of pack_words; returns sign-extended int32 values."""
+    per = 32 // q
+    shifts = jnp.arange(per, dtype=jnp.int32) * q
+    vals = (w[..., None] >> shifts) & ((1 << q) - 1)
+    # sign extend
+    sign_bit = 1 << (q - 1)
+    vals = jnp.where(vals >= sign_bit, vals - (1 << q), vals)
+    *lead, nw, per_ = vals.shape
+    out = vals.reshape(*lead, nw * per_)
+    if per_axis_len is not None:
+        out = out[..., :per_axis_len]
+    return out.astype(jnp.int32)
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Pack bits (..., T) with T % 8 == 0 into uint8 bytes (..., T/8). LSB-first."""
+    *lead, t = bits.shape
+    if t % 8:
+        raise ValueError(f"bit length {t} not a multiple of 8")
+    b = bits.astype(jnp.uint8).reshape(*lead, t // 8, 8)
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    return (b * weights).sum(axis=-1).astype(jnp.uint8)
+
+
+def unpack_bits(bytes_: jnp.ndarray, n_bits: int | None = None) -> jnp.ndarray:
+    *lead, nb = bytes_.shape
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (bytes_[..., None] >> shifts) & jnp.uint8(1)
+    out = bits.reshape(*lead, nb * 8).astype(jnp.int32)
+    if n_bits is not None:
+        out = out[..., :n_bits]
+    return out
+
+
+def u1_bytes(R: int, q: int | None) -> float:
+    """Bytes per input symbol (paper's U₁). q=None → float32 unpacked."""
+    if q is None:
+        return 4.0 * R
+    return 4.0 * R / (32 // q)
+
+
+def u2_bytes(packed: bool) -> float:
+    """Bytes per decoded bit (paper's U₂)."""
+    return 1.0 / 8.0 if packed else 4.0

@@ -1,0 +1,223 @@
+"""Trellis description of an (R, 1, K) convolutional code.
+
+Implements the paper's state/butterfly formalism (§II, §III-B):
+
+* state ``d = (D_{v-1} ... D_0)_2`` with ``v = K-1`` memory cells; ``D_{v-1}``
+  is the most recently shifted-in bit, ``D_0`` the oldest.
+* encoder output for input bit ``x`` at state ``S_d`` (eq. 2)::
+
+      c^{(r)} = (x · g^{(r)}_{K-1}) ⊕ (D_{K-2} · g^{(r)}_{K-2}) ⊕ ... ⊕ (D_0 · g^{(r)}_0)
+
+* transition: ``next = (x << (v-1)) | (d >> 1)``.
+* butterfly ``j`` (``j = 0 .. N/2-1``): source states ``2j, 2j+1``; target
+  ``j`` for input 0 and ``j + N/2`` for input 1. Butterfly outputs (eqs. 3-6)::
+
+      α = c(S_{2j}, 0)      β = α ⊕ g_{K-1}      γ = α ⊕ g_0      θ = α ⊕ g_{K-1} ⊕ g_0
+
+  (XORs applied per filter r; as R-bit integers the masks are ``x_mask``
+  = bits ``g^{(r)}_{K-1}`` and ``l_mask`` = bits ``g^{(r)}_0``.)
+
+The group classification (§III-B / Table II) groups butterflies by ``α``:
+at most ``2^R`` groups, hence only ``2^R`` distinct branch metrics per stage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["ConvCode", "CCSDS_27", "parity"]
+
+
+def parity(x: np.ndarray | int) -> np.ndarray | int:
+    """Bitwise parity (popcount mod 2) of non-negative ints, vectorized."""
+    x = np.asarray(x)
+    out = np.zeros_like(x)
+    while np.any(x):
+        out ^= x & 1
+        x = x >> 1
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvCode:
+    """An (R, 1, K) convolutional code described by generator polynomials.
+
+    ``polys[r]`` is the r-th generator polynomial as a bit sequence
+    ``[g_{K-1}, g_{K-2}, ..., g_0]`` (paper order — MSB = input tap).
+    """
+
+    polys: Tuple[Tuple[int, ...], ...]
+
+    def __post_init__(self):
+        ks = {len(p) for p in self.polys}
+        if len(ks) != 1:
+            raise ValueError(f"all generator polynomials must share K, got {ks}")
+        if not all(b in (0, 1) for p in self.polys for b in p):
+            raise ValueError("generator polynomials must be binary")
+
+    # ---- scalar shape parameters -------------------------------------------------
+    @property
+    def R(self) -> int:
+        return len(self.polys)
+
+    @property
+    def K(self) -> int:
+        return len(self.polys[0])
+
+    @property
+    def v(self) -> int:  # number of memory cells
+        return self.K - 1
+
+    @property
+    def n_states(self) -> int:
+        return 1 << self.v
+
+    @property
+    def n_butterflies(self) -> int:
+        return self.n_states // 2
+
+    @property
+    def rate(self) -> float:
+        return 1.0 / self.R
+
+    # ---- integer-mask views of the polynomials -----------------------------------
+    @cached_property
+    def poly_ints(self) -> np.ndarray:
+        """polys as integers with bit i = g^{(r)}_i (so bit K-1 = input tap)."""
+        out = []
+        for p in self.polys:
+            val = 0
+            for i, bit in enumerate(p):  # p[0] = g_{K-1}
+                val |= bit << (self.K - 1 - i)
+            out.append(val)
+        return np.array(out, dtype=np.int64)
+
+    @cached_property
+    def x_mask(self) -> int:
+        """R-bit integer whose bit r (MSB-first) = g^{(r)}_{K-1} (input tap)."""
+        m = 0
+        for r in range(self.R):
+            m = (m << 1) | ((self.poly_ints[r] >> (self.K - 1)) & 1)
+        return int(m)
+
+    @cached_property
+    def l_mask(self) -> int:
+        """R-bit integer whose bit r (MSB-first) = g^{(r)}_0 (oldest-bit tap)."""
+        m = 0
+        for r in range(self.R):
+            m = (m << 1) | (self.poly_ints[r] & 1)
+        return int(m)
+
+    # ---- encoder output tables ----------------------------------------------------
+    def output_bits(self, state: np.ndarray | int, x: np.ndarray | int) -> np.ndarray:
+        """Per-filter output bits c^{(r)}(S_state, x): shape (..., R)."""
+        state = np.asarray(state, dtype=np.int64)
+        x = np.asarray(x, dtype=np.int64)
+        lows = self.poly_ints & ((1 << self.v) - 1)  # memory taps
+        tap_x = (self.poly_ints >> (self.K - 1)) & 1  # input tap
+        mem = parity(state[..., None] & lows)  # (..., R)
+        return (mem ^ (x[..., None] * tap_x)).astype(np.int64)
+
+    def output_int(self, state: np.ndarray | int, x: np.ndarray | int) -> np.ndarray:
+        """Encoder output as an R-bit integer, c^{(1)} in the MSB (paper order)."""
+        bits = self.output_bits(state, x)
+        val = np.zeros(bits.shape[:-1], dtype=np.int64)
+        for r in range(self.R):
+            val = (val << 1) | bits[..., r]
+        return val
+
+    # ---- butterfly group classification (§III-B) ----------------------------------
+    @cached_property
+    def alpha(self) -> np.ndarray:
+        """α for each butterfly j: output int of source state 2j with input 0."""
+        j = np.arange(self.n_butterflies)
+        return self.output_int(2 * j, 0)
+
+    @cached_property
+    def butterfly_codewords(self) -> np.ndarray:
+        """(n_butterflies, 4) int codewords [α, β, γ, θ] per butterfly."""
+        a = self.alpha
+        return np.stack(
+            [a, a ^ self.x_mask, a ^ self.l_mask, a ^ self.x_mask ^ self.l_mask],
+            axis=1,
+        )
+
+    @cached_property
+    def n_groups(self) -> int:
+        return len(np.unique(self.alpha))
+
+    @cached_property
+    def groups(self) -> list[dict]:
+        """Paper Table II: one entry per distinct α, with member source states.
+
+        Each dict has keys ``alpha, beta, gamma, theta`` (R-bit ints) and
+        ``states`` (sorted source-state indices 2j, 2j+1 of member butterflies).
+        """
+        out = []
+        for a in sorted(np.unique(self.alpha)):
+            js = np.nonzero(self.alpha == a)[0]
+            states = sorted(np.concatenate([2 * js, 2 * js + 1]).tolist())
+            out.append(
+                dict(
+                    alpha=int(a),
+                    beta=int(a ^ self.x_mask),
+                    gamma=int(a ^ self.l_mask),
+                    theta=int(a ^ self.x_mask ^ self.l_mask),
+                    states=states,
+                )
+            )
+        return out
+
+    # ---- ACS constant tables (consumed by kernels/ref) ----------------------------
+    @cached_property
+    def acs_tables(self) -> dict:
+        """Static per-butterfly codeword indices for the vectorized ACS update.
+
+        For target state j (top half):    predecessors 2j (codeword α_j)
+                                          and 2j+1 (codeword γ_j).
+        For target state j+N/2 (bottom):  predecessors 2j (codeword β_j)
+                                          and 2j+1 (codeword θ_j).
+
+        Returns int32 arrays of shape (n_butterflies,):
+          ``cw_top_even, cw_top_odd, cw_bot_even, cw_bot_odd``
+        plus ``onehot_{...}`` float32 one-hot matrices (n_butterflies, 2^R)
+        used by the Pallas kernel to expand the 2^R-entry BM table with a
+        static matmul (the TPU-native form of the paper's group lookup).
+        """
+        cw = self.butterfly_codewords
+        tabs = dict(
+            cw_top_even=cw[:, 0].astype(np.int32),  # α
+            cw_bot_even=cw[:, 1].astype(np.int32),  # β
+            cw_top_odd=cw[:, 2].astype(np.int32),  # γ
+            cw_bot_odd=cw[:, 3].astype(np.int32),  # θ
+        )
+        n_cw = 1 << self.R
+        for key in list(tabs):
+            idx = tabs[key]
+            oh = np.zeros((self.n_butterflies, n_cw), dtype=np.float32)
+            oh[np.arange(self.n_butterflies), idx] = 1.0
+            tabs["onehot_" + key[3:]] = oh
+        return tabs
+
+    # ---- codeword ±1 sign table (for correlation branch metrics) ------------------
+    @cached_property
+    def codeword_signs(self) -> np.ndarray:
+        """(2^R, R) float32: row c = (2·bits(c) - 1), c^{(1)} at column 0.
+
+        Branch metric (to MINIMIZE) for received soft symbols y (BPSK map
+        bit b → 1-2b, i.e. 0 → +1): BM(c) = Σ_r y_r · (2 c_r - 1).
+        """
+        n_cw = 1 << self.R
+        rows = []
+        for c in range(n_cw):
+            bits = [(c >> (self.R - 1 - r)) & 1 for r in range(self.R)]
+            rows.append([2.0 * b - 1.0 for b in bits])
+        return np.array(rows, dtype=np.float32)
+
+
+# The paper's reference code: CCSDS (2,1,7), g1 = 1111001, g2 = 1011011.
+CCSDS_27 = ConvCode(polys=((1, 1, 1, 1, 0, 0, 1), (1, 0, 1, 1, 0, 1, 1)))

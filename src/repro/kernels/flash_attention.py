@@ -1,0 +1,177 @@
+"""Flash attention Pallas TPU kernel (GQA, causal, sliding-window).
+
+The §Roofline analysis found the dominant memory term of every train/prefill
+cell is the (B·H·S·S_kv) score traffic that pure-XLA streaming attention
+materializes between fusions (e.g. ~80 TB/device/step for
+deepseek-v2 × train_4k). This kernel keeps the running-softmax state and the
+score block in VMEM — HBM traffic drops to Q/K/V/O only, O(B·S·d).
+
+Layout: grid (batch·kv_head, q_chunks); the kernel loops KV chunks with an
+online softmax carried in VMEM scratch. Causal/windowed blocks outside the
+band are skipped via `pl.when` on block indices (removing the 2× causal
+FLOP waste of the masked-full-scan XLA path). Group dim (q heads per kv
+head) rides inside the block.
+
+Validated bit-level against `ref_mha` (and against the model's XLA streaming
+path) in interpret mode — `tests/test_flash_attention.py` sweeps shapes,
+dtypes, GQA ratios, causal/window.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention", "ref_mha"]
+
+NEG_INF = -1e30
+
+
+def ref_mha(q, k, v, *, causal=True, window=None, scale=None):
+    """Oracle: q (B,S,Hkv,G,dh), k/v (B,T,Hkv,dh) → (B,S,Hkv,G,dh), f32 math."""
+    B, S, Hkv, G, dh = q.shape
+    T = k.shape[1]
+    scale = scale or 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bshgd,bthd->bhgst", q.astype(jnp.float32) * scale, k.astype(jnp.float32))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgst,bthd->bshgd", p, v.astype(jnp.float32))
+
+
+def _flash_kernel(
+    q_ref,  # (1, Cq, G, dh)
+    k_ref,  # (1, T, dh)
+    v_ref,  # (1, T, dh)
+    o_ref,  # (1, Cq, G, dh)
+    m_scr,  # VMEM (Cq, G) f32
+    l_scr,  # VMEM (Cq, G) f32
+    acc_scr,  # VMEM (Cq, G, dh) f32
+    *,
+    kv_chunk: int,
+    causal: bool,
+    window: int | None,
+    scale: float,
+    seq_q: int,
+    seq_kv: int,
+):
+    qi = pl.program_id(1)
+    Cq, G, dh = q_ref.shape[1:]
+    n_kv = seq_kv // kv_chunk
+
+    m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+    l_scr[...] = jnp.zeros_like(l_scr)
+    acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (Cq, G, dh)
+    q_start = qi * Cq
+
+    def kv_body(ki, _):
+        k_start = ki * kv_chunk
+        k_blk = k_ref[0, pl.ds(k_start, kv_chunk)].astype(jnp.float32)  # (Ck, dh)
+        v_blk = v_ref[0, pl.ds(k_start, kv_chunk)].astype(jnp.float32)
+
+        s = jnp.einsum("qgd,kd->qgk", q, k_blk)  # (Cq, G, Ck)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (Cq, G, kv_chunk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (Cq, G, kv_chunk), 2)
+        mask = kpos < seq_kv
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(-1)
+        acc_new = acc_prev * alpha[..., None] + jnp.einsum("qgk,kd->qgd", p, v_blk)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc_new
+        return ()
+
+    if causal and window is None:
+        # only blocks up to the diagonal participate (no wasted FLOPs)
+        last = jax.lax.div(q_start + Cq - 1, kv_chunk) + 1
+        jax.lax.fori_loop(0, jnp.minimum(last, n_kv), kv_body, ())
+    elif window is not None:
+        first = jnp.maximum(jax.lax.div(q_start - (window or 0), kv_chunk), 0)
+        last = jax.lax.div(q_start + Cq - 1, kv_chunk) + 1 if causal else n_kv
+        jax.lax.fori_loop(first, jnp.minimum(last, n_kv), kv_body, ())
+    else:
+        jax.lax.fori_loop(0, n_kv, kv_body, ())
+
+    out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "q_chunk", "kv_chunk", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, Hkv, G, dh)
+    k: jnp.ndarray,  # (B, T, Hkv, dh)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    q_chunk: int = 256,
+    kv_chunk: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, S, Hkv, G, dh = q.shape
+    T = k.shape[1]
+    scale = scale or 1.0 / math.sqrt(dh)
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    if S % q_chunk or T % kv_chunk:
+        raise ValueError(f"S={S} % {q_chunk} or T={T} % {kv_chunk} != 0")
+
+    # fold (B, Hkv) into the grid's first axis
+    qf = q.transpose(0, 2, 1, 3, 4).reshape(B * Hkv, S, G, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, T, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, T, dh)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        kv_chunk=kv_chunk,
+        causal=causal,
+        window=window,
+        scale=scale,
+        seq_q=S,
+        seq_kv=T,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hkv, S // q_chunk),
+        in_specs=[
+            pl.BlockSpec((1, q_chunk, G, dh), lambda bh, qi: (bh, qi, 0, 0)),
+            pl.BlockSpec((1, T, dh), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((1, T, dh), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_chunk, G, dh), lambda bh, qi: (bh, qi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, S, G, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_chunk, G), jnp.float32),
+            pltpu.VMEM((q_chunk, G), jnp.float32),
+            pltpu.VMEM((q_chunk, G, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hkv, S, G, dh).transpose(0, 2, 1, 3, 4)

@@ -1,0 +1,118 @@
+"""jit'd public wrappers around the PBVD Pallas kernels.
+
+Handles the shape plumbing the kernels require (lane padding to 128, stage
+padding to the stage-chunk — end-padding with zero symbols is BM-neutral and
+keeps the state-0 walk stable, see tests), the traceback start-state policy,
+and the paper's packed-I/O transforms.
+
+On CPU (this container) the kernels run in interpret mode; on TPU they
+compile natively. ``backend="ref"`` selects the pure-jnp oracle (which is
+also the fast path on CPU and the one XLA fuses well — used by the
+benchmarks).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trellis import ConvCode
+from . import ref as _ref
+from .acs import LANE_TILE, DEFAULT_STAGE_CHUNK, acs_forward_pallas
+from .traceback import traceback_pallas
+
+__all__ = ["pbvd_decode_blocks", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "code",
+        "decode_start",
+        "n_decode",
+        "start_policy",
+        "backend",
+        "stage_chunk",
+        "interpret",
+    ),
+)
+def pbvd_decode_blocks(
+    y_blocks: jnp.ndarray,
+    code: ConvCode,
+    *,
+    decode_start: int,
+    n_decode: int,
+    start_policy: Literal["zero", "argmin"] = "zero",
+    backend: Literal["pallas", "ref", "fused"] = "pallas",
+    stage_chunk: int = DEFAULT_STAGE_CHUNK,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Decode framed parallel blocks.
+
+    y_blocks: (T, R, B) soft symbols (float32, or int8/int16 for the exact
+        quantized path), framed [trunc M | decode D | traceback L].
+    Returns (n_decode, B) int32 decoded bits.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    T, R, B = y_blocks.shape
+
+    if backend == "fused":
+        # single-kernel path (ACS + in-VMEM traceback, bit-packed output) —
+        # see kernels/fused.py; unpacked here for API compatibility.
+        from repro.core.quantize import unpack_bits
+        from .fused import pbvd_fused_pallas
+
+        nd = -(-n_decode // 32) * 32  # kernel emits 32-bit words
+        y = _pad_axis(y_blocks, 2, LANE_TILE)
+        packed = pbvd_fused_pallas(
+            y, code, decode_start=decode_start, n_decode=nd, interpret=interpret
+        )
+        shifts = jnp.arange(32, dtype=jnp.int32)
+        bits = ((packed[:, None, :] >> shifts[None, :, None]) & 1).reshape(-1, y.shape[2])
+        return bits[:n_decode, :B].astype(jnp.int32)
+
+    if backend == "ref":
+        sp, pm = _ref.acs_forward_ref(y_blocks, code)
+        if start_policy == "argmin":
+            start = jnp.argmin(pm, axis=0).astype(jnp.int32)
+        else:
+            start = jnp.zeros((B,), jnp.int32)
+        return _ref.traceback_ref(sp, code, decode_start, n_decode, start)
+
+    # ---- pallas path: pad lanes and stages --------------------------------------
+    y = _pad_axis(y_blocks, 2, LANE_TILE)  # lane padding
+    y = _pad_axis(y, 0, stage_chunk)  # stage padding (end; BM-neutral zeros)
+    Bp = y.shape[2]
+
+    sp, pm = acs_forward_pallas(y, code, stage_chunk=stage_chunk, interpret=interpret)
+    if start_policy == "argmin":
+        start = jnp.argmin(pm, axis=0).astype(jnp.int32)
+    else:
+        start = jnp.zeros((Bp,), jnp.int32)
+    bits = traceback_pallas(
+        sp,
+        start,
+        code,
+        decode_start=decode_start,
+        n_decode=n_decode,
+        interpret=interpret,
+    )
+    return bits[:, :B]

@@ -1,0 +1,213 @@
+"""Pure-jnp oracles for the PBVD kernels.
+
+Three levels of reference, each used to validate the next:
+
+1. ``viterbi_classic_np`` — textbook full-sequence Viterbi (numpy, per-state
+   loops). Ground truth for everything.
+2. ``acs_forward_ref`` / ``traceback_ref`` — vectorized jnp implementations of
+   the paper's two phases (K1/K2) with the group-based BM reduction and
+   bit-packed survivor words. These mirror the Pallas kernels' math exactly
+   (same packing layout, same tie-breaking) and serve as their allclose
+   oracles.
+3. ``pbvd_decode_ref`` — the block decoder composed of (2).
+
+Conventions (see DESIGN.md §5):
+  state ``d``; transition with input x: next = (x << (v-1)) | (d >> 1)
+  butterfly j: sources 2j (even), 2j+1 (odd); targets j (x=0), j+N/2 (x=1)
+  BM(c) = Σ_r y_r (2 c_r - 1)  — minimized (y: received soft symbols,
+  BPSK map 0 → +1). Ties select the EVEN predecessor.
+  Survivor word layout: SP[stage, word, block] int32, bit (state % 32) of
+  word (state // 32) = 1 iff the ODD predecessor was selected for ``state``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.trellis import ConvCode
+
+__all__ = [
+    "viterbi_classic_np",
+    "branch_metric_table",
+    "acs_forward_ref",
+    "traceback_ref",
+    "pbvd_decode_ref",
+]
+
+
+# ---------------------------------------------------------------------------
+# Level 1: textbook Viterbi (numpy, slow, ground truth)
+# ---------------------------------------------------------------------------
+def viterbi_classic_np(
+    y: np.ndarray, code: ConvCode, init_state: int | None = 0, final_state: int | None = 0
+) -> np.ndarray:
+    """Full-sequence ML Viterbi. y: (T, R) soft symbols. Returns (T,) bits.
+
+    init_state/final_state None → unknown (uniform PM / argmin pick).
+    """
+    T = y.shape[0]
+    N = code.n_states
+    INF = 1e18
+    pm = np.full(N, INF)
+    pm[init_state if init_state is not None else slice(None)] = 0.0
+    if init_state is None:
+        pm[:] = 0.0
+    signs = code.codeword_signs  # (2^R, R)
+    # per-state transition tables
+    states = np.arange(N)
+    decisions = np.zeros((T, N), dtype=np.int8)
+    for t in range(T):
+        bm = signs @ y[t]  # (2^R,)
+        new_pm = np.full(N, INF)
+        dec = np.zeros(N, dtype=np.int8)
+        for j in range(N // 2):
+            for tgt, cw_even, cw_odd in (
+                (j, code.butterfly_codewords[j, 0], code.butterfly_codewords[j, 2]),
+                (j + N // 2, code.butterfly_codewords[j, 1], code.butterfly_codewords[j, 3]),
+            ):
+                m_even = pm[2 * j] + bm[cw_even]
+                m_odd = pm[2 * j + 1] + bm[cw_odd]
+                if m_odd < m_even:
+                    new_pm[tgt] = m_odd
+                    dec[tgt] = 1
+                else:
+                    new_pm[tgt] = m_even
+                    dec[tgt] = 0
+        pm = new_pm
+        decisions[t] = dec
+    state = int(np.argmin(pm)) if final_state is None else int(final_state)
+    bits = np.zeros(T, dtype=np.int64)
+    for t in range(T - 1, -1, -1):
+        bits[t] = state >> (code.v - 1)  # MSB = input bit of transition t
+        b = decisions[t, state]
+        state = 2 * (state % (N // 2)) + b
+    return bits
+
+
+# ---------------------------------------------------------------------------
+# Level 2: vectorized jnp K1/K2 references (the Pallas oracles)
+# ---------------------------------------------------------------------------
+def branch_metric_table(y: jnp.ndarray, code: ConvCode) -> jnp.ndarray:
+    """BM table for all 2^R codewords. y: (..., R) → (..., 2^R).
+
+    This is the paper's group reduction: 2^R metrics per stage, not 2^K.
+    """
+    signs = jnp.asarray(code.codeword_signs)  # (2^R, R)
+    return jnp.einsum("...r,cr->...c", y, signs)
+
+
+def _pack_decisions(dec_bits: jnp.ndarray) -> jnp.ndarray:
+    """dec_bits: (N, B) {0,1} → (ceil(N/32), B) int32, bit (n%32) of word n//32."""
+    n, b = dec_bits.shape
+    pad = (-n) % 32
+    if pad:
+        dec_bits = jnp.concatenate([dec_bits, jnp.zeros((pad, b), dec_bits.dtype)], 0)
+    n_words = dec_bits.shape[0] // 32
+    d = dec_bits.astype(jnp.int32).reshape(n_words, 32, b)
+    weights = (jnp.int32(1) << jnp.arange(32, dtype=jnp.int32))[None, :, None]
+    return (d * weights).sum(axis=1, dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("code",))
+def acs_forward_ref(y: jnp.ndarray, code: ConvCode) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Forward ACS over a batch of parallel blocks (paper K1).
+
+    y: (T, R, B) soft symbols (float32 or int-like; int inputs accumulate in
+       int32 — exact integer path used by the quantized decoder).
+    Returns (sp, pm_final):
+      sp: (T, ceil(N/32), B) int32 bit-packed survivor decisions
+      pm_final: (N, B) final path metrics.
+    """
+    T, R, B = y.shape
+    N = code.n_states
+    nb = N // 2
+    tabs = code.acs_tables
+    cw_te = jnp.asarray(tabs["cw_top_even"])  # α
+    cw_to = jnp.asarray(tabs["cw_top_odd"])  # γ
+    cw_be = jnp.asarray(tabs["cw_bot_even"])  # β
+    cw_bo = jnp.asarray(tabs["cw_bot_odd"])  # θ
+
+    integer = jnp.issubdtype(y.dtype, jnp.integer)
+    acc_dtype = jnp.int32 if integer else jnp.float32
+    signs = jnp.asarray(code.codeword_signs, dtype=acc_dtype)  # (2^R, R)
+
+    def step(pm, y_t):
+        # y_t: (R, B) → bm table (2^R, B)
+        bm = signs @ y_t.astype(acc_dtype)
+        pairs = pm.reshape(nb, 2, B)
+        pm_even, pm_odd = pairs[:, 0], pairs[:, 1]
+        # top targets j: even pred uses α, odd pred uses γ
+        m_te = pm_even + bm[cw_te]
+        m_to = pm_odd + bm[cw_to]
+        dec_top = (m_to < m_te).astype(jnp.int32)
+        pm_top = jnp.minimum(m_te, m_to)
+        # bottom targets j+N/2: even pred uses β, odd pred uses θ
+        m_be = pm_even + bm[cw_be]
+        m_bo = pm_odd + bm[cw_bo]
+        dec_bot = (m_bo < m_be).astype(jnp.int32)
+        pm_bot = jnp.minimum(m_be, m_bo)
+        new_pm = jnp.concatenate([pm_top, pm_bot], axis=0)
+        sp_words = _pack_decisions(jnp.concatenate([dec_top, dec_bot], axis=0))
+        return new_pm, sp_words
+
+    pm0 = jnp.zeros((N, B), dtype=acc_dtype)
+    pm_final, sp = jax.lax.scan(step, pm0, y)
+    return sp, pm_final
+
+
+@partial(jax.jit, static_argnames=("code", "decode_start", "n_decode"))
+def traceback_ref(
+    sp: jnp.ndarray,
+    code: ConvCode,
+    decode_start: int,
+    n_decode: int,
+    start_state: jnp.ndarray | int = 0,
+) -> jnp.ndarray:
+    """Traceback + decode (paper K2).
+
+    sp: (T, W, B) packed survivor words from acs_forward_ref, laid out as
+        [truncation M | decode D | traceback L | optional pad]. The walk
+        starts at stage T (state ``start_state``) and emits bits for stages
+        [decode_start, decode_start + n_decode) — with the paper's framing
+        (M = L) ``decode_start = L``.
+    Returns (D, B) decoded bits (int32), in forward order.
+    """
+    T, W, B = sp.shape
+    N = code.n_states
+    v = code.v
+    D = n_decode
+
+    def step(state, sp_t):
+        # sp_t: (W, B). decision bit for `state` = bit (state%32) of word state//32
+        word_idx = state >> 5  # (B,)
+        # gather per-lane word: W is tiny (ceil(N/32)); select via comparisons
+        word = jnp.zeros_like(state)
+        for wi in range(W):
+            word = jnp.where(word_idx == wi, sp_t[wi], word)
+        bit = (word >> (state & 31)) & 1
+        out_bit = state >> (v - 1)  # MSB = input bit of this transition
+        prev_state = 2 * (state % (N // 2)) + bit
+        return prev_state, out_bit
+
+    state0 = jnp.broadcast_to(jnp.asarray(start_state, jnp.int32), (B,))
+    # walk stages T-1 .. 0 (we only need down to decode_start, but walking to
+    # 0 is harmless and keeps shapes static; earlier bits are discarded)
+    _, bits_rev = jax.lax.scan(step, state0, sp[::-1])
+    bits = bits_rev[::-1]  # (T, B), bits[t] = decoded input bit of stage t
+    return jax.lax.dynamic_slice_in_dim(bits, decode_start, D, axis=0)
+
+
+def pbvd_decode_ref(
+    y_blocks: jnp.ndarray,
+    code: ConvCode,
+    n_decode: int,
+    n_traceback: int,
+    start_state: int = 0,
+) -> jnp.ndarray:
+    """Decode framed parallel blocks: y_blocks (T, R, B) → (D, B) bits."""
+    sp, _ = acs_forward_ref(y_blocks, code)
+    return traceback_ref(sp, code, n_traceback, n_decode, start_state)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel for the PBVD traceback/decode phase (paper kernel K2).
+
+The traceback is inherently serial in stages but embarrassingly parallel in
+blocks. On the GPU the paper assigns one *thread* per block; on TPU we assign
+one *lane* per block: the walked state is a ``(1, 128)`` int32 vector, the
+stage loop is a ``fori_loop``, and each step does
+
+  * a W-way select to fetch the survivor word of the current state
+    (W = ceil(N/32) = 2 for the CCSDS code — cheaper than any gather),
+  * a per-lane variable bit-shift to extract the decision bit,
+  * the state walk ``state' = 2·(state mod N/2) + bit``,
+  * emits the decoded bit (the state's MSB) for stages inside the decode
+    region.
+
+Decoded bits are written stage-major ``(T, TILE)`` and bit-packed by the ops
+wrapper (the paper's U₂ = 1/8 D2H compression).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.trellis import ConvCode
+from .acs import LANE_TILE
+
+__all__ = ["traceback_pallas"]
+
+
+def _traceback_kernel(
+    sp_ref,  # (T, W, TILE) int32 packed survivor words
+    start_ref,  # (1, TILE) int32 traceback start state per block
+    bits_ref,  # (D, TILE) int32 out: decoded bits, forward order
+    *,
+    code: ConvCode,
+    n_stages: int,
+    decode_start: int,
+    n_decode: int,
+):
+    W = sp_ref.shape[1]
+    tile = sp_ref.shape[-1]
+    v = code.v
+    half = code.n_states // 2
+
+    def step(i, state):
+        s = n_stages - 1 - i  # walk stages T-1 .. 0
+        sp_t = sp_ref[pl.ds(s, 1)][0]  # (W, TILE)
+        word_idx = state >> 5
+        word = sp_t[0][None, :] if W == 1 else jnp.zeros((1, tile), jnp.int32)
+        if W > 1:
+            for wi in range(W):
+                word = jnp.where(word_idx == wi, sp_t[wi][None, :], word)
+        bit = (word >> (state & 31)) & 1
+        out_bit = state >> (v - 1)  # MSB = input bit of transition s
+
+        # store decoded bit if s ∈ [decode_start, decode_start + n_decode)
+        in_region = jnp.logical_and(s >= decode_start, s < decode_start + n_decode)
+        offset = jnp.clip(s - decode_start, 0, n_decode - 1)
+
+        @pl.when(in_region)
+        def _emit():
+            bits_ref[pl.ds(offset, 1)] = out_bit.astype(jnp.int32)
+
+        return 2 * (state % half) + bit
+
+    state0 = start_ref[...]  # (1, TILE)
+    jax.lax.fori_loop(0, n_stages, step, state0, unroll=False)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("code", "decode_start", "n_decode", "interpret")
+)
+def traceback_pallas(
+    sp: jnp.ndarray,
+    start_state: jnp.ndarray,
+    code: ConvCode,
+    *,
+    decode_start: int,
+    n_decode: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Traceback/decode. sp: (T, W, B); start_state: (B,) int32 → bits (D, B)."""
+    T, W, B = sp.shape
+    if B % LANE_TILE:
+        raise ValueError(f"B={B} not a multiple of {LANE_TILE}")
+    n_bt = B // LANE_TILE
+    kernel = functools.partial(
+        _traceback_kernel,
+        code=code,
+        n_stages=T,
+        decode_start=decode_start,
+        n_decode=n_decode,
+    )
+    bits = pl.pallas_call(
+        kernel,
+        grid=(n_bt,),
+        in_specs=[
+            pl.BlockSpec((T, W, LANE_TILE), lambda bt: (0, 0, bt)),
+            pl.BlockSpec((1, LANE_TILE), lambda bt: (0, bt)),
+        ],
+        out_specs=pl.BlockSpec((n_decode, LANE_TILE), lambda bt: (0, bt)),
+        out_shape=jax.ShapeDtypeStruct((n_decode, B), jnp.int32),
+        interpret=interpret,
+    )(sp, start_state.reshape(1, B).astype(jnp.int32))
+    return bits

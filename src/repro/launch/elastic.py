@@ -1,0 +1,93 @@
+"""Elastic scaling: rebuild the mesh after node loss/gain and reshard state.
+
+Strategy (single-controller JAX):
+  * the `model` axis extent is fixed (TP degree is baked into layer math
+    perf-wise, but **not** into the checkpoint — shards are reassembled to
+    global arrays on restore, so even TP can change);
+  * the (`pod` × `data`) product absorbs failures: losing a host rebuilds a
+    mesh with a smaller `data` extent, restores the latest checkpoint with
+    the new shardings, and rescales the data pipeline (`host_count` drops);
+  * a failed step is retried from the last checkpoint — see
+    launch/train.py's failure loop (tested with failure injection).
+
+`plan_rescale` computes the largest valid mesh after losing `lost` chips;
+`reshard` moves a live pytree onto a new mesh (host round-trip — the
+simple, always-correct path; production would use device-to-device
+resharding collectives).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.sharding.rules import LogicalRules, tree_shardings
+
+__all__ = ["plan_rescale", "reshard", "RescalePlan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalePlan:
+    old_shape: tuple
+    new_shape: tuple
+    axis_names: tuple
+    dropped_chips: int
+
+    @property
+    def new_chip_count(self) -> int:
+        return int(np.prod(self.new_shape))
+
+
+def plan_rescale(mesh: jax.sharding.Mesh, lost_chips: int) -> RescalePlan:
+    """Largest mesh obtainable by shrinking the data-ish axes after losing
+    ``lost_chips`` devices (model axis preserved)."""
+    names = mesh.axis_names
+    shape = dict(mesh.shape)
+    total = int(np.prod(list(shape.values())))
+    target = total - lost_chips
+    model = shape.get("model", 1)
+    # shrink data (and pod if present) to the largest product that fits
+    data_like = [n for n in names if n != "model"]
+    best = None
+    cur = [shape[n] for n in data_like]
+
+    def candidates(idx, remaining):
+        if idx == len(data_like):
+            yield ()
+            return
+        for v in range(cur[idx], 0, -1):
+            for rest in candidates(idx + 1, remaining):
+                yield (v,) + rest
+
+    for cand in candidates(0, target):
+        prod = int(np.prod(cand)) * model
+        if prod <= target:
+            if best is None or prod > int(np.prod(best)) * model:
+                best = cand
+            break  # candidates are generated in decreasing order per axis
+    if best is None:
+        best = tuple(1 for _ in data_like)
+    new_shape = tuple(
+        best[data_like.index(n)] if n in data_like else model for n in names
+    )
+    return RescalePlan(
+        old_shape=tuple(shape[n] for n in names),
+        new_shape=new_shape,
+        axis_names=names,
+        dropped_chips=total - int(np.prod(new_shape)),
+    )
+
+
+def reshard(tree: Any, axes_tree: Any, new_mesh: jax.sharding.Mesh, rules_map=None) -> Any:
+    """Move a pytree onto ``new_mesh`` with its logical axes re-resolved."""
+    from repro.sharding.rules import DEFAULT_RULES, SINGLE_POD_RULES
+
+    if rules_map is None:
+        rules_map = DEFAULT_RULES if "pod" in new_mesh.axis_names else SINGLE_POD_RULES
+    rules = LogicalRules(new_mesh, rules_map)
+    shardings = tree_shardings(tree, axes_tree, rules)
+    host = jax.tree.map(lambda l: np.asarray(l), tree)
+    return jax.tree.map(jax.device_put, host, shardings)

@@ -1,0 +1,98 @@
+"""ShapeDtypeStruct input specs for every (architecture × shape) dry-run cell.
+
+No allocation happens here: params/caches come from ``jax.eval_shape`` over
+the real init functions, inputs are literal ShapeDtypeStructs. The dry-run
+lowers the exact train/prefill/decode step the runtime would execute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec, get_config
+from repro.models import lm
+
+__all__ = ["Cell", "make_cell", "iter_cells", "SKIPS", "ENCODER_CTX", "input_specs"]
+
+ENCODER_CTX = 4096  # enc-dec: encoder context length for decode shapes
+
+# long_500k runs only for sub-quadratic-attention archs (DESIGN.md §4)
+LONG_OK = {"mixtral-8x22b", "jamba-v0.1-52b", "rwkv6-3b"}
+
+SKIPS: dict[tuple[str, str], str] = {}
+for _a in [
+    "seamless-m4t-medium", "qwen2.5-32b", "minitron-8b", "command-r-35b",
+    "starcoder2-3b", "pixtral-12b", "deepseek-v2-236b",
+]:
+    SKIPS[(_a, "long_500k")] = "full-attention arch: 500k KV cache is the quadratic regime this shape excludes"
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    kind: str  # train | prefill | decode
+    cfg: ModelConfig
+
+    def __str__(self):
+        return f"{self.arch}×{self.shape.name}"
+
+
+def make_cell(arch: str, shape_name: str) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    return Cell(arch=arch, shape=shape, kind=shape.kind, cfg=cfg)
+
+
+def iter_cells(include_skips: bool = False):
+    from repro.configs.base import list_archs
+
+    for arch in list_archs():
+        for shape_name in SHAPES:
+            if (arch, shape_name) in SKIPS and not include_skips:
+                continue
+            yield make_cell(arch, shape_name)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def input_specs(cell: Cell) -> dict[str, Any]:
+    """Returns {params, batch | (tokens, cache, cache_len), ...} as SDS pytrees."""
+    cfg, shape = cell.cfg, cell.shape
+    B, S = shape.global_batch, shape.seq_len
+    specs: dict[str, Any] = {}
+    specs["params"] = jax.eval_shape(lambda k: lm.init_params(k, cfg), jax.random.PRNGKey(0))
+    if cell.kind in ("prefill", "decode") and os.environ.get("REPRO_SERVE_F32") != "1":
+        # serving checkpoints hold bf16 weights at rest (f32 masters are a
+        # training-time artifact); halves every weight read.
+        specs["params"] = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            if s.dtype == jnp.float32 and len(s.shape) >= 2
+            else s,
+            specs["params"],
+        )
+
+    if cell.kind in ("train", "prefill"):
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cell.kind == "train":
+            batch["labels"] = _sds((B, S), jnp.int32)
+        if cfg.frontend == "vision_patches":
+            batch["patch_embeds"] = _sds((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.encdec:
+            batch["frames"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        specs["batch"] = batch
+    else:  # decode: one token against a seq_len cache
+        specs["tokens"] = _sds((B, 1), jnp.int32)
+        cross = ENCODER_CTX if cfg.encdec else 0
+        specs["cache"] = jax.eval_shape(
+            lambda: lm.init_cache(cfg, B, S, dtype=jnp.bfloat16, cross_len=cross)
+        )
+        specs["cache_len"] = _sds((), jnp.int32)
+    return specs

@@ -1,0 +1,402 @@
+"""Attention mixers: GQA (with optional bias / sliding window / cross-attn)
+and MLA (DeepSeek-V2 multi-head latent attention).
+
+Train/prefill use a chunked, numerically-stable streaming softmax (flash
+style, pure XLA: scan over KV chunks with running max/denominator) so the
+(S × S) score matrix is never materialized — required for `prefill_32k`.
+The baseline scans ALL kv chunks under a causal mask (compact HLO, ~2×
+attention-FLOP overhead for causal shapes); the §Perf hillclimb replaces it
+with a diagonal-aware schedule. Decode attends a single query against the
+KV cache (optionally ring-buffered for sliding-window models, or sharded
+over the `model` axis for context-parallel long decode).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import shard
+from .layers import apply_rope, cdtype, dense_apply, dense_axes, dense_init, norm_apply, norm_axes, norm_init, rope_sin_cos
+
+__all__ = [
+    "gqa_init", "gqa_axes", "gqa_apply", "mla_init", "mla_axes", "mla_apply",
+    "KVCache", "flash_enabled",
+]
+
+NEG_INF = -1e30
+
+# ---------------------------------------------------------------------------------
+# flash-kernel switch (trace-time): on TPU the Pallas flash kernel replaces the
+# XLA streaming softmax (removes the O(B·H·S·S_kv) score HBM traffic that §Perf
+# identified as the dominant memory term). Backward runs through the XLA
+# streaming path via custom_vjp until a bwd kernel lands. On CPU (this
+# container / the dry-run) the XLA path is used — the kernel itself is
+# validated in interpret mode by tests/test_flash_attention.py.
+# ---------------------------------------------------------------------------------
+import contextlib
+import os as _os
+
+_FLASH = {"on": _os.environ.get("REPRO_FLASH", "auto")}
+
+
+@contextlib.contextmanager
+def flash_enabled(mode: str = "on"):
+    prev = _FLASH["on"]
+    _FLASH["on"] = mode
+    try:
+        yield
+    finally:
+        _FLASH["on"] = prev
+
+
+def _use_flash() -> bool:
+    mode = _FLASH["on"]
+    if mode == "off" or mode == "0":
+        return False
+    if mode in ("on", "1", "force"):
+        return True
+    return jax.default_backend() == "tpu"  # auto
+
+
+def _flash_with_xla_bwd(q, k, v, *, causal, window, scale):
+    from repro.kernels.flash_attention import flash_attention
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        return flash_attention(q, k, v, causal=causal, window=window, scale=scale)
+
+    def fwd(q, k, v):
+        return f(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(
+            lambda q_, k_, v_: _attend_chunked(
+                q_, k_, v_, causal=causal, window=window, scale=scale
+            ),
+            q, k, v,
+        )
+        return vjp(g.astype(jnp.float32))
+
+    f.defvjp(fwd, bwd)
+    return f(q, k, v)
+
+
+class KVCache(NamedTuple):
+    """Decode-time cache. For GQA: k/v (B, S_max, Hkv, dh). For SWA models
+    S_max = window (ring buffer). For MLA: k = latent c_kv (B, S, kv_lora),
+    v = shared rope key (B, S, rope_dim)."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+def _cache_write(buf: jnp.ndarray, new: jnp.ndarray, slot: jnp.ndarray, ctx_parallel: bool):
+    """Write ``new`` (B, 1, ...) at position ``slot`` of ``buf``'s seq axis.
+
+    With a context-parallel (seq-sharded) cache a dynamic_update_slice at a
+    traced offset makes GSPMD gather the whole buffer per layer (§Perf cell 2
+    found 931 GB/step of exactly this). The masked iota-compare write is
+    fully local on the sharded axis: each shard touches only its slice.
+    """
+    if not ctx_parallel:
+        start = (0, slot) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), start)
+    seq = jnp.arange(buf.shape[1], dtype=jnp.int32)
+    mask = (seq == slot)[None, :] if buf.ndim == 2 else (seq == slot).reshape(
+        (1, -1) + (1,) * (buf.ndim - 2)
+    )
+    return jnp.where(mask, new.astype(buf.dtype), buf)
+
+
+# =====================================================================================
+# chunked streaming attention core
+# =====================================================================================
+def _attend_chunked(
+    q: jnp.ndarray,  # (B, S, Hkv, G, dh)  — grouped query
+    k: jnp.ndarray,  # (B, T, Hkv, dh)
+    v: jnp.ndarray,  # (B, T, Hkv, dhv)
+    *,
+    causal: bool,
+    window: Optional[int],
+    scale: float,
+    q_offset: int = 0,  # absolute position of q[0] minus that of k[0]
+    kv_chunk: int = 1024,
+    softcap: Optional[float] = None,
+    p_dtype=jnp.bfloat16,  # probability-tensor storage across the PV fusion
+):
+    """Streaming-softmax attention, scanning KV chunks. Returns (B,S,Hkv,G,dhv)."""
+    B, S, Hkv, G, dh = q.shape
+    T = k.shape[1]
+    dhv = v.shape[-1]
+    n_chunks = -(-T // kv_chunk)
+    Tp = n_chunks * kv_chunk
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, kv_chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, Hkv, dhv).transpose(1, 0, 2, 3, 4)
+
+    q32 = q.astype(jnp.float32) * scale
+    qpos = q_offset + jnp.arange(S)  # absolute q positions (relative to k[0])
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ci, k_i, v_i = xs
+        kpos = ci * kv_chunk + jnp.arange(kv_chunk)
+        s_ij = jnp.einsum("bshgd,bthd->bhgst", q32, k_i.astype(jnp.float32))
+        if softcap is not None:
+            s_ij = softcap * jnp.tanh(s_ij / softcap)
+        mask = kpos[None, :] <= (qpos[:, None] if causal else jnp.full((S, 1), Tp))
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        mask &= (kpos < T)[None, :]  # padding
+        s_ij = jnp.where(mask[None, None, None], s_ij, NEG_INF)
+        m_ij = jnp.max(s_ij, axis=-1)  # (B,H,G,S)
+        m_new = jnp.maximum(m, m_ij)
+        p = jnp.exp(s_ij - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(-1)
+        # §Perf: p crosses an XLA fusion boundary into the PV matmul — store
+        # it in the compute dtype (bf16 halves the dominant score-tensor HBM
+        # traffic; f32 row max/sum above keep the softmax numerics).
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgst,bthd->bhgsd",
+            p.astype(p_dtype),
+            v_i.astype(p_dtype),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, S), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, G, S, dhv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4)  # (B,S,Hkv,G,dhv)
+
+
+def _attend_decode(
+    q: jnp.ndarray,  # (B, 1, Hkv, G, dh)
+    k: jnp.ndarray,  # (B, T, Hkv, dh)
+    v: jnp.ndarray,  # (B, T, Hkv, dhv)
+    *,
+    scale: float,
+    valid: jnp.ndarray,  # (B, T) bool — which cache slots participate
+    softcap: Optional[float] = None,
+):
+    """Single-token attention against the cache (context-parallel friendly:
+    when the cache's T axis is sharded over `model`, the max/sum reductions
+    below become the 3-collective flash-decode combine under GSPMD)."""
+    q32 = q.astype(jnp.float32) * scale
+    s = jnp.einsum("bxhgd,bthd->bhgxt", q32, k.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhgxt,bthd->bhgxd", p / jnp.maximum(l, 1e-30), v.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4)  # (B,1,Hkv,G,dhv)
+
+
+# =====================================================================================
+# GQA
+# =====================================================================================
+def gqa_init(key, cfg: ModelConfig):
+    d, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, (H, dh), cfg, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, (Hkv, dh), cfg, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, (Hkv, dh), cfg, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], H * dh, (d,), cfg),
+    }
+
+
+def gqa_axes(cfg: ModelConfig):
+    b = cfg.qkv_bias
+    return {
+        "wq": dense_axes("fsdp", ("heads", "head_dim"), bias=b),
+        "wk": dense_axes("fsdp", ("kv_heads", "head_dim"), bias=b),
+        "wv": dense_axes("fsdp", ("kv_heads", "head_dim"), bias=b),
+        "wo": dense_axes("mlp", ("fsdp",)),
+    }
+
+
+def gqa_apply(
+    p,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray,  # (S,) absolute positions of x
+    causal: bool = True,
+    cache: Optional[KVCache] = None,
+    cache_len: Optional[jnp.ndarray] = None,  # tokens already in cache
+    xa: Optional[jnp.ndarray] = None,  # cross-attention context (B, Sx, d)
+    ctx_parallel: bool = False,
+):
+    """Returns (out (B,S,d), new_cache)."""
+    B, S, d = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+
+    q = dense_apply(p["wq"], x, cfg, contract="bsd,dhe->bshe")  # (B,S,H,dh)
+    kv_src = x if xa is None else xa
+    k = dense_apply(p["wk"], kv_src, cfg, contract="bsd,dhe->bshe")
+    v = dense_apply(p["wv"], kv_src, cfg, contract="bsd,dhe->bshe")
+    q = shard(q, ("batch", "seq", "heads", "head_dim"))
+    k = shard(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = shard(v, ("batch", "seq", "kv_heads", "head_dim"))
+
+    if xa is None:  # self-attention: rotary positions
+        sin, cos = rope_sin_cos(positions, dh, cfg.rope_theta)
+        q = apply_rope(q, sin[None], cos[None])
+        kpos = positions if cache is None else positions  # same stage positions
+        ksin, kcos = rope_sin_cos(kpos, dh, cfg.rope_theta)
+        k = apply_rope(k, ksin[None], kcos[None])
+
+    qg = q.reshape(B, S, Hkv, G, dh)
+    new_cache = None
+
+    if cache is not None:
+        # decode: write k,v at the cache cursor, attend to the whole cache
+        S_max = cache.k.shape[1]
+        if cfg.sliding_window and S_max == cfg.sliding_window:
+            slot = (cache_len % cfg.sliding_window).astype(jnp.int32)
+        else:
+            slot = cache_len.astype(jnp.int32)
+        ck = _cache_write(cache.k, k, slot, ctx_parallel)
+        cv = _cache_write(cache.v, v, slot, ctx_parallel)
+        new_cache = KVCache(ck, cv)
+        t_idx = jnp.arange(S_max)
+        if cfg.sliding_window and S_max == cfg.sliding_window:
+            valid = jnp.broadcast_to(t_idx[None, :] <= jnp.minimum(cache_len, S_max - 1), (B, S_max))
+        else:
+            valid = jnp.broadcast_to(t_idx[None, :] <= cache_len, (B, S_max))
+            if cfg.sliding_window:
+                valid &= t_idx[None, :] > cache_len - cfg.sliding_window
+        axes = ("batch", "seq_ctx" if ctx_parallel else None, "kv_heads", "head_dim")
+        ck, cv = shard(ck, axes), shard(cv, axes)
+        out = _attend_decode(
+            qg, ck, cv, scale=scale, valid=valid, softcap=cfg.attn_logit_softcap
+        )
+    else:
+        is_causal = causal and xa is None
+        win = cfg.sliding_window if xa is None else None
+        if _use_flash() and cfg.attn_logit_softcap is None:
+            out = _flash_with_xla_bwd(qg, k, v, causal=is_causal, window=win, scale=scale)
+        else:
+            out = _attend_chunked(
+                qg, k, v, causal=is_causal, window=win, scale=scale,
+                softcap=cfg.attn_logit_softcap, p_dtype=cdtype(cfg),
+            )
+
+    out = out.reshape(B, S, H * dh).astype(cdtype(cfg))
+    out = shard(out, ("batch", "seq", "mlp"))
+    return dense_apply(p["wo"], out, cfg), new_cache
+
+
+# =====================================================================================
+# MLA (DeepSeek-V2)
+# =====================================================================================
+def mla_init(key, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 8)
+    return {
+        "wdq": dense_init(ks[0], d, (qr,), cfg),
+        "q_norm": norm_init(qr, cfg),
+        "wuq": dense_init(ks[1], qr, (H, dn + dr), cfg),
+        "wdkv": dense_init(ks[2], d, (kr,), cfg),
+        "kv_norm": norm_init(kr, cfg),
+        "wkr": dense_init(ks[3], d, (dr,), cfg),  # shared rope key
+        "wuk": dense_init(ks[4], kr, (H, dn), cfg),
+        "wuv": dense_init(ks[5], kr, (H, dv), cfg),
+        "wo": dense_init(ks[6], H * dv, (d,), cfg),
+    }
+
+
+def mla_axes(cfg: ModelConfig):
+    return {
+        "wdq": dense_axes("fsdp", (None,)),
+        "q_norm": norm_axes(cfg),
+        "wuq": dense_axes("fsdp", ("heads", "head_dim")),
+        "wdkv": dense_axes("fsdp", (None,)),
+        "kv_norm": norm_axes(cfg),
+        "wkr": dense_axes("fsdp", (None,)),
+        "wuk": dense_axes("fsdp", ("heads", "head_dim")),
+        "wuv": dense_axes("fsdp", ("heads", "head_dim")),
+        "wo": dense_axes("mlp", ("fsdp",)),
+    }
+
+
+def mla_apply(
+    p,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray,
+    causal: bool = True,
+    cache: Optional[KVCache] = None,
+    cache_len: Optional[jnp.ndarray] = None,
+    xa=None,  # unused (MLA models are decoder-only here)
+    ctx_parallel: bool = False,
+):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    cq = norm_apply(p["q_norm"], dense_apply(p["wdq"], x, cfg), cfg)
+    q = dense_apply(p["wuq"], cq, cfg, contract="bsq,qhe->bshe")  # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    sin, cos = rope_sin_cos(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin[None], cos[None])
+
+    ckv = norm_apply(p["kv_norm"], dense_apply(p["wdkv"], x, cfg), cfg)  # (B,S,kr)
+    k_rope = dense_apply(p["wkr"], x, cfg)[:, :, None, :]  # (B,S,1,dr)
+    k_rope = apply_rope(k_rope, sin[None], cos[None])[:, :, 0]  # (B,S,dr)
+
+    new_cache = None
+    if cache is not None:
+        slot = cache_len.astype(jnp.int32)
+        ck = _cache_write(cache.k, ckv, slot, ctx_parallel)
+        cr = _cache_write(cache.v, k_rope, slot, ctx_parallel)
+        new_cache = KVCache(ck, cr)
+        ckv_all, k_rope_all = ck, cr
+        T = ck.shape[1]
+        valid = jnp.broadcast_to(jnp.arange(T)[None, :] <= cache_len, (B, T))
+    else:
+        ckv_all, k_rope_all = ckv, k_rope
+        T = S
+
+    # reconstruct per-head keys/values from the latent
+    k_nope = dense_apply(p["wuk"], ckv_all, cfg, contract="btq,qhe->bthe")  # (B,T,H,dn)
+    vv = dense_apply(p["wuv"], ckv_all, cfg, contract="btq,qhe->bthe")  # (B,T,H,dv)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_all[:, :, None, :], (B, T, H, dr)).astype(k_nope.dtype)],
+        axis=-1,
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1).reshape(B, S, H, 1, dn + dr)
+
+    if cache is not None:
+        out = _attend_decode(q_full, k_full, vv, scale=scale, valid=valid)
+    else:
+        out = _attend_chunked(
+            q_full, k_full, vv, causal=causal, window=None, scale=scale, p_dtype=cdtype(cfg)
+        )
+
+    out = out.reshape(B, S, H * dv).astype(cdtype(cfg))
+    out = shard(out, ("batch", "seq", "mlp"))
+    return dense_apply(p["wo"], out, cfg), new_cache

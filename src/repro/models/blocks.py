@@ -1,0 +1,214 @@
+"""Block assembly: (norm → mixer → residual → norm → FFN → residual) for every
+mixer/FFN combination in the architecture pool, plus per-block decode caches.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerDesc, ModelConfig
+from .attention import KVCache, gqa_apply, gqa_axes, gqa_init, mla_apply, mla_axes, mla_init
+from .layers import ffn_apply, ffn_axes, ffn_init, norm_apply, norm_axes, norm_init
+from .moe import moe_apply, moe_axes, moe_init
+from .ssm import MambaCache, RwkvCache, mamba_apply, mamba_axes, mamba_init, rwkv_apply, rwkv_axes, rwkv_init
+
+__all__ = ["block_init", "block_axes", "block_apply", "block_cache_init"]
+
+_MIXER_INIT = {"gqa": gqa_init, "mla": mla_init, "mamba": mamba_init, "rwkv6": rwkv_init}
+_MIXER_AXES = {"gqa": gqa_axes, "mla": mla_axes, "mamba": mamba_axes, "rwkv6": rwkv_axes}
+
+
+def block_init(key, cfg: ModelConfig, desc: LayerDesc, *, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict = {"norm1": norm_init(d, cfg)}
+    if desc.mixer != "none":
+        p["mixer"] = _MIXER_INIT[desc.mixer](ks[0], cfg)
+    if cross:
+        p["norm_x"] = norm_init(d, cfg)
+        p["cross"] = gqa_init(ks[2], cfg)
+    if desc.ffn != "none" and not cfg.parallel_block:
+        p["norm2"] = norm_init(d, cfg)
+    if desc.ffn == "dense":
+        p["ffn"] = ffn_init(ks[1], cfg, cfg.d_ff_dense or cfg.d_ff)
+    elif desc.ffn == "moe":
+        p["ffn"] = moe_init(ks[1], cfg)
+    return p
+
+
+def block_axes(cfg: ModelConfig, desc: LayerDesc, *, cross: bool = False):
+    a: dict = {"norm1": norm_axes(cfg)}
+    if desc.mixer != "none":
+        a["mixer"] = _MIXER_AXES[desc.mixer](cfg)
+    if cross:
+        a["norm_x"] = norm_axes(cfg)
+        a["cross"] = gqa_axes(cfg)
+    if desc.ffn != "none" and not cfg.parallel_block:
+        a["norm2"] = norm_axes(cfg)
+    if desc.ffn == "dense":
+        a["ffn"] = ffn_axes(cfg)
+    elif desc.ffn == "moe":
+        a["ffn"] = moe_axes(cfg)
+    return a
+
+
+def block_cache_init(cfg: ModelConfig, desc: LayerDesc, batch: int, s_max: int, dtype, *, cross_len: int = 0):
+    """ShapeDtype-compatible cache pytree for one block (None where stateless)."""
+    d = cfg.d_model
+    caches = {}
+    if desc.mixer == "gqa":
+        s = min(s_max, cfg.sliding_window) if cfg.sliding_window else s_max
+        kv = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+        caches["mixer"] = KVCache(jnp.zeros(kv, dtype), jnp.zeros(kv, dtype))
+    elif desc.mixer == "mla":
+        caches["mixer"] = KVCache(
+            jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+            jnp.zeros((batch, s_max, cfg.qk_rope_head_dim), dtype),
+        )
+    elif desc.mixer == "mamba":
+        caches["mixer"] = MambaCache(
+            jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.mamba_d_inner), dtype),
+            jnp.zeros((batch, cfg.mamba_d_inner, cfg.mamba_d_state), jnp.float32),
+        )
+    elif desc.mixer == "rwkv6":
+        H = d // cfg.rwkv_head_dim
+        caches["mixer"] = RwkvCache(
+            jnp.zeros((batch, 1, d), dtype),
+            jnp.zeros((batch, 1, d), dtype),
+            jnp.zeros((batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+        )
+    if cross_len:
+        kv = (batch, cross_len, cfg.n_kv_heads, cfg.head_dim)
+        caches["cross"] = KVCache(jnp.zeros(kv, dtype), jnp.zeros(kv, dtype))
+    return caches
+
+
+def block_cache_axes(cfg: ModelConfig, desc: LayerDesc, *, ctx_parallel: bool = False, cross: bool = False):
+    """Logical axes for the cache pytree of one block (mirrors block_cache_init)."""
+    seq_ax = "seq_ctx" if ctx_parallel else None
+    axes = {}
+    if desc.mixer == "gqa":
+        kv = ("batch", seq_ax, "kv_heads", None)
+        axes["mixer"] = KVCache(kv, kv)
+    elif desc.mixer == "mla":
+        axes["mixer"] = KVCache(("batch", seq_ax, None), ("batch", seq_ax, None))
+    elif desc.mixer == "mamba":
+        axes["mixer"] = MambaCache(("batch", None, "mlp"), ("batch", "mlp", None))
+    elif desc.mixer == "rwkv6":
+        axes["mixer"] = RwkvCache(
+            ("batch", None, None), ("batch", None, None), ("batch", "heads", None, None)
+        )
+    if cross:
+        kv = ("batch", None, "kv_heads", None)
+        axes["cross"] = KVCache(kv, kv)
+    return axes
+
+
+def _apply_mixer(p, x, cfg, desc, *, positions, cache, cache_len, causal, ctx_parallel):
+    if desc.mixer == "gqa":
+        return gqa_apply(
+            p, x, cfg, positions=positions, causal=causal,
+            cache=cache, cache_len=cache_len, ctx_parallel=ctx_parallel,
+        )
+    if desc.mixer == "mla":
+        return mla_apply(
+            p, x, cfg, positions=positions, causal=causal,
+            cache=cache, cache_len=cache_len, ctx_parallel=ctx_parallel,
+        )
+    if desc.mixer == "mamba":
+        return mamba_apply(p, x, cfg, cache=cache)
+    if desc.mixer == "rwkv6":
+        return rwkv_apply(p, x, cfg, cache=cache)
+    raise ValueError(desc.mixer)
+
+
+def block_apply(
+    p,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    desc: LayerDesc,
+    *,
+    positions: jnp.ndarray,
+    cache: Optional[dict] = None,
+    cache_len=None,
+    xa: Optional[jnp.ndarray] = None,  # encoder context (cross-attn blocks)
+    causal: bool = True,
+    ctx_parallel: bool = False,
+):
+    """Returns (x', new_cache)."""
+    new_cache: dict = {}
+    mixer_cache = (cache or {}).get("mixer")
+
+    if cfg.parallel_block:  # command-r style: shared norm, parallel attn + ffn
+        xn = norm_apply(p["norm1"], x, cfg)
+        attn_out, mc = _apply_mixer(
+            p["mixer"], xn, cfg, desc, positions=positions, cache=mixer_cache,
+            cache_len=cache_len, causal=causal, ctx_parallel=ctx_parallel,
+        )
+        ffn_out = ffn_apply(p["ffn"], xn, cfg) if desc.ffn == "dense" else moe_apply(p["ffn"], xn, cfg)
+        if mc is not None:
+            new_cache["mixer"] = mc
+        return x + attn_out + ffn_out, (new_cache or None)
+
+    h = x
+    if desc.mixer != "none":
+        xn = norm_apply(p["norm1"], x, cfg)
+        if desc.mixer == "rwkv6" and mixer_cache is not None:
+            # time-mix token shift consumes the previous *normed* input
+            mixer_cache = mixer_cache._replace(x_tm=mixer_cache.x_tm)
+        out, mc = _apply_mixer(
+            p["mixer"], xn, cfg, desc, positions=positions, cache=mixer_cache,
+            cache_len=cache_len, causal=causal, ctx_parallel=ctx_parallel,
+        )
+        h = x + out
+        if mc is not None:
+            new_cache["mixer"] = mc
+
+    if "cross" in p:
+        xn = norm_apply(p["norm_x"], h, cfg)
+        cross_cache = (cache or {}).get("cross")
+        if cross_cache is not None and xa is None:
+            # decode: reuse precomputed encoder K/V (no update)
+            from .attention import _attend_decode  # local to avoid cycle
+            import math
+
+            B, S, _ = xn.shape
+            H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            from .layers import dense_apply
+
+            q = dense_apply(p["cross"]["wq"], xn, cfg, contract="bsd,dhe->bshe")
+            qg = q.reshape(B, S, Hkv, H // Hkv, dh)
+            T = cross_cache.k.shape[1]
+            valid = jnp.ones((B, T), bool)
+            out = _attend_decode(
+                qg, cross_cache.k, cross_cache.v, scale=1.0 / math.sqrt(dh), valid=valid
+            )
+            out = out.reshape(B, S, H * dh).astype(x.dtype)
+            out = dense_apply(p["cross"]["wo"], out, cfg)
+            new_cache["cross"] = cross_cache
+        else:
+            out, _ = gqa_apply(p["cross"], xn, cfg, positions=positions, causal=False, xa=xa)
+        h = h + out
+
+    if desc.ffn != "none":
+        xn = norm_apply(p["norm2"], h, cfg)
+        if desc.ffn == "moe":
+            f = moe_apply(p["ffn"], xn, cfg)
+        else:
+            x_prev = None
+            if cfg.ffn_act == "rwkv_cm":
+                if cache is not None and "mixer" in (cache or {}):
+                    x_prev = cache["mixer"].x_cm.astype(xn.dtype)
+                else:
+                    x_prev = jnp.pad(xn, ((0, 0), (1, 0), (0, 0)))[:, : xn.shape[1]]
+            f = ffn_apply(p["ffn"], xn, cfg, x_prev=x_prev)
+            if cfg.ffn_act == "rwkv_cm" and "mixer" in new_cache:
+                new_cache["mixer"] = new_cache["mixer"]._replace(
+                    x_cm=xn.astype(new_cache["mixer"].x_cm.dtype)
+                )
+        h = h + f
+
+    return h, (new_cache or None)

@@ -1,0 +1,187 @@
+"""Foundational layers: params-as-pytrees, norms, embeddings, RoPE, FFNs.
+
+No framework dependency: a "module" is an ``init_*`` function returning a
+dict-of-arrays pytree plus a parallel ``axes_*`` function returning the same
+structure with logical-axis tuples (consumed by ``repro.sharding.rules``).
+``tests/test_models_smoke.py`` asserts the two structures stay in sync.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import shard
+
+__all__ = [
+    "dense_init", "dense_axes", "dense_apply",
+    "norm_init", "norm_axes", "norm_apply",
+    "embed_init", "embed_axes",
+    "rope_sin_cos", "apply_rope",
+    "ffn_init", "ffn_axes", "ffn_apply",
+    "cdtype",
+]
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---- dense / linear -----------------------------------------------------------
+def dense_init(key, in_dim: int, out_dims: Sequence[int], cfg, *, bias=False, scale=None):
+    out = int(np.prod(out_dims))
+    if scale is None:
+        scale = 1.0 / np.sqrt(in_dim)
+    w = jax.random.normal(key, (in_dim, *out_dims), dtype=pdtype(cfg)) * scale
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros(tuple(out_dims), dtype=pdtype(cfg))
+    return p
+
+
+def dense_axes(in_axis, out_axes, *, bias=False):
+    a = {"w": (in_axis, *out_axes)}
+    if bias:
+        a["b"] = tuple(out_axes)
+    return a
+
+
+def dense_apply(p, x, cfg, *, contract: str = "...d,dh->...h"):
+    w = p["w"].astype(cdtype(cfg))
+    y = jnp.einsum(contract, x, w)
+    if "b" in p:
+        y = y + p["b"].astype(cdtype(cfg))
+    return y
+
+
+# ---- norms ---------------------------------------------------------------------
+def norm_init(dim: int, cfg):
+    p = {"scale": jnp.ones((dim,), dtype=pdtype(cfg))}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype=pdtype(cfg))
+    return p
+
+
+def norm_axes(cfg):
+    a = {"scale": ("embed",)}
+    if cfg.norm_type == "layernorm":
+        a["bias"] = ("embed",)
+    return a
+
+
+def norm_apply(p, x, cfg):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---- embeddings ------------------------------------------------------------------
+def round_vocab(vocab: int, multiple: int = 256) -> int:
+    return -(-vocab // multiple) * multiple
+
+
+def embed_init(key, cfg):
+    v = round_vocab(cfg.vocab)
+    return {"table": jax.random.normal(key, (v, cfg.d_model), dtype=pdtype(cfg)) * 0.02}
+
+
+def embed_axes():
+    return {"table": ("vocab", "fsdp")}
+
+
+# ---- rotary position embeddings ---------------------------------------------------
+def rope_sin_cos(positions: jnp.ndarray, dim: int, theta: float):
+    """positions (...,) int → sin, cos (..., dim/2) f32."""
+    inv = 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv[None, :]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray):
+    """x (..., S, H, dh) with sin/cos (..., S, dh/2) — rotate-half convention."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    s, c = sin[..., None, :], cos[..., None, :]  # broadcast over heads
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ---- feed-forward variants ---------------------------------------------------------
+def ffn_init(key, cfg: ModelConfig, d_ff: int):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_act == "swiglu":
+        return {
+            "wi": dense_init(ks[0], d, (d_ff,), cfg),
+            "wg": dense_init(ks[1], d, (d_ff,), cfg),
+            "wo": dense_init(ks[2], d_ff, (d,), cfg),
+        }
+    if cfg.ffn_act == "rwkv_cm":  # RWKV channel mix
+        return {
+            "mu": 0.5 * jnp.ones((2, d), dtype=pdtype(cfg)),  # token-shift mix (k, r)
+            "wk": dense_init(ks[0], d, (d_ff,), cfg),
+            "wv": dense_init(ks[1], d_ff, (d,), cfg),
+            "wr": dense_init(ks[2], d, (d,), cfg),
+        }
+    # relu2 / gelu: ungated
+    return {
+        "wi": dense_init(ks[0], d, (d_ff,), cfg),
+        "wo": dense_init(ks[2], d_ff, (d,), cfg),
+    }
+
+
+def ffn_axes(cfg: ModelConfig):
+    if cfg.ffn_act == "swiglu":
+        return {
+            "wi": dense_axes("fsdp", ("mlp",)),
+            "wg": dense_axes("fsdp", ("mlp",)),
+            "wo": dense_axes("mlp", ("fsdp",)),
+        }
+    if cfg.ffn_act == "rwkv_cm":
+        return {
+            "mu": (None, "embed"),
+            "wk": dense_axes("fsdp", ("mlp",)),
+            "wv": dense_axes("mlp", ("fsdp",)),
+            "wr": dense_axes("fsdp", ("embed",)),
+        }
+    return {"wi": dense_axes("fsdp", ("mlp",)), "wo": dense_axes("mlp", ("fsdp",))}
+
+
+def ffn_apply(p, x, cfg: ModelConfig, *, x_prev=None):
+    """x (B, S, d) → (B, S, d). ``x_prev`` is the token-shifted input used by
+    the RWKV channel mix (ignored by other variants)."""
+    if cfg.ffn_act == "swiglu":
+        h = jax.nn.silu(dense_apply(p["wg"], x, cfg)) * dense_apply(p["wi"], x, cfg)
+        h = shard(h, ("batch", None, "mlp"))
+        return dense_apply(p["wo"], h, cfg)
+    if cfg.ffn_act == "rwkv_cm":
+        xp = x if x_prev is None else x_prev
+        mu = p["mu"].astype(x.dtype)
+        xk = x * mu[0] + xp * (1 - mu[0])
+        xr = x * mu[1] + xp * (1 - mu[1])
+        k = jnp.square(jax.nn.relu(dense_apply(p["wk"], xk, cfg)))
+        k = shard(k, ("batch", None, "mlp"))
+        v = dense_apply(p["wv"], k, cfg)
+        r = jax.nn.sigmoid(dense_apply(p["wr"], xr, cfg))
+        return r * v
+    h = dense_apply(p["wi"], x, cfg)
+    if cfg.ffn_act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, ("batch", None, "mlp"))
+    return dense_apply(p["wo"], h, cfg)

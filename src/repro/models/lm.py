@@ -1,0 +1,260 @@
+"""Model assembly: decoder-only LMs, the enc-dec (seamless) variant, the VLM
+embedding stub, scan-over-layer-groups with remat, and decode caches.
+
+Public API:
+  init_params / param_axes       — params pytree + logical-axis pytree
+  apply_train(params, batch)     — full-sequence logits (train / prefill)
+  init_cache / apply_decode      — KV/state-cached single-token decode
+  encode / prefill_cross         — enc-dec support
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerDesc, ModelConfig
+from repro.sharding.rules import shard
+from .blocks import block_apply, block_axes, block_cache_init, block_init
+from .layers import cdtype, embed_axes, embed_init, norm_apply, norm_axes, norm_init, round_vocab
+
+__all__ = [
+    "init_params",
+    "param_axes",
+    "apply_train",
+    "init_cache",
+    "apply_decode",
+    "encode",
+    "prefill_cross",
+    "count_params",
+]
+
+
+# =====================================================================================
+# init
+# =====================================================================================
+def _init_group(key, cfg: ModelConfig, pattern, repeat: int, *, cross: bool = False):
+    def one(k):
+        ks = jax.random.split(k, len(pattern))
+        return {f"l{i}": block_init(ks[i], cfg, d, cross=cross) for i, d in enumerate(pattern)}
+
+    return jax.vmap(one)(jax.random.split(key, repeat))
+
+
+def _group_axes(cfg: ModelConfig, pattern, *, cross: bool = False):
+    one = {f"l{i}": block_axes(cfg, d, cross=cross) for i, d in enumerate(pattern)}
+    # prepend the stacked (scan) axis to every leaf
+    return jax.tree.map(lambda a: (None, *a), one, is_leaf=lambda a: type(a) is tuple)
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg),
+        "final_norm": norm_init(cfg.d_model, cfg),
+    }
+    if not cfg.tie_embeddings:
+        v = round_vocab(cfg.vocab)
+        params["lm_head"] = {
+            "w": jax.random.normal(ks[1], (cfg.d_model, v), dtype=jnp.dtype(cfg.param_dtype))
+            * (1.0 / np.sqrt(cfg.d_model))
+        }
+    params["groups"] = [
+        _init_group(jax.random.fold_in(ks[2], gi), cfg, pattern, repeat, cross=cfg.encdec)
+        for gi, (pattern, repeat) in enumerate(cfg.layer_list)
+    ]
+    if cfg.encdec:
+        enc_pattern = (LayerDesc(mixer="gqa", ffn="dense"),)
+        params["encoder"] = _init_group(ks[3], cfg, enc_pattern, cfg.n_encoder_layers)
+        params["enc_norm"] = norm_init(cfg.d_model, cfg)
+    return params
+
+
+def param_axes(cfg: ModelConfig):
+    axes: dict[str, Any] = {
+        "embed": embed_axes(),
+        "final_norm": norm_axes(cfg),
+    }
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = {"w": ("fsdp", "vocab")}
+    axes["groups"] = [
+        _group_axes(cfg, pattern, cross=cfg.encdec) for pattern, _ in cfg.layer_list
+    ]
+    if cfg.encdec:
+        axes["encoder"] = _group_axes(cfg, (LayerDesc(mixer="gqa", ffn="dense"),))
+        axes["enc_norm"] = norm_axes(cfg)
+    return axes
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+
+
+# =====================================================================================
+# forward (train / prefill)
+# =====================================================================================
+def _embed_input(params, batch, cfg: ModelConfig):
+    """Token / frontend-stub embedding → (B, S, d) in compute dtype."""
+    table = params["embed"]["table"].astype(cdtype(cfg))
+    if cfg.frontend == "audio_frames" and cfg.encdec:
+        x = batch["tokens"]
+        emb = table[x]
+    elif cfg.frontend == "vision_patches":
+        tok_emb = table[batch["tokens"]]  # (B,S,d)
+        P = cfg.n_patches
+        patches = batch["patch_embeds"].astype(cdtype(cfg))  # (B,P,d)
+        emb = jnp.concatenate([patches, tok_emb[:, P:]], axis=1)
+    else:
+        emb = table[batch["tokens"]]
+    return shard(emb, ("batch", "seq", "embed"))
+
+
+def _remat_policy():
+    """Layer remat policy. REPRO_REMAT=dots saves matmul outputs (recompute
+    only elementwise ops in the backward re-forward — trades HBM for ~25%
+    less recompute FLOPs); default recomputes everything (min memory)."""
+    import os
+
+    mode = os.environ.get("REPRO_REMAT", "full")
+    if mode == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+def _run_groups(params_groups, x, cfg, *, positions, causal=True, xa=None):
+    policy = _remat_policy()
+    for (pattern, repeat), p_g in zip(cfg.layer_list, params_groups):
+        def body(h, p_slice, _pattern=pattern):
+            for i, desc in enumerate(_pattern):
+                h, _ = block_apply(
+                    p_slice[f"l{i}"], h, cfg, desc, positions=positions, causal=causal, xa=xa
+                )
+            return h, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(body, policy=policy), x, p_g)
+    return x
+
+
+def _logits(params, x, cfg):
+    x = norm_apply(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(cdtype(cfg)).T
+    else:
+        w = params["lm_head"]["w"].astype(cdtype(cfg))
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return shard(logits.astype(jnp.float32), ("batch", "seq", "vocab"))
+
+
+def encode(params, frames: jnp.ndarray, cfg: ModelConfig):
+    """Encoder stack over precomputed frame embeddings (audio stub)."""
+    x = shard(frames.astype(cdtype(cfg)), ("batch", "seq", "embed"))
+    positions = jnp.arange(x.shape[1])
+    enc_pattern = (LayerDesc(mixer="gqa", ffn="dense"),)
+
+    def body(h, p_slice):
+        h, _ = block_apply(p_slice["l0"], h, cfg, enc_pattern[0], positions=positions, causal=False)
+        return h, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["encoder"])
+    return norm_apply(params["enc_norm"], x, cfg)
+
+
+def apply_train(params, batch: dict, cfg: ModelConfig):
+    """Full-sequence forward → logits (B, S, vocab_padded) f32."""
+    if cfg.encdec:
+        enc_out = encode(params, batch["frames"], cfg)
+        x = _embed_input(params, batch, cfg)
+        positions = jnp.arange(x.shape[1])
+        x = _run_groups(params["groups"], x, cfg, positions=positions, causal=True, xa=enc_out)
+    else:
+        x = _embed_input(params, batch, cfg)
+        positions = jnp.arange(x.shape[1])
+        x = _run_groups(params["groups"], x, cfg, positions=positions, causal=True)
+    return _logits(params, x, cfg)
+
+
+# =====================================================================================
+# decode
+# =====================================================================================
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=jnp.bfloat16, *, cross_len: int = 0):
+    groups = []
+    for pattern, repeat in cfg.layer_list:
+        one = {
+            f"l{i}": block_cache_init(
+                cfg, d, batch, s_max, dtype, cross_len=cross_len if cfg.encdec else 0
+            )
+            for i, d in enumerate(pattern)
+        }
+        groups.append(jax.tree.map(lambda l: jnp.zeros((repeat, *l.shape), l.dtype), one))
+    return {"groups": groups}
+
+
+def cache_axes(cfg: ModelConfig, *, ctx_parallel: bool = False, cross: bool = False):
+    """Logical-axes pytree matching init_cache (leading scan axis → None)."""
+    from .blocks import block_cache_axes
+
+    groups = []
+    for pattern, _repeat in cfg.layer_list:
+        one = {
+            f"l{i}": block_cache_axes(cfg, d, ctx_parallel=ctx_parallel, cross=cross and cfg.encdec)
+            for i, d in enumerate(pattern)
+        }
+        groups.append(
+            jax.tree.map(lambda a: (None, *a), one, is_leaf=lambda a: type(a) is tuple)
+        )
+    return {"groups": groups}
+
+
+def prefill_cross(params, enc_out: jnp.ndarray, cfg: ModelConfig, cache):
+    """Precompute cross-attention K/V from the encoder output into the cache."""
+    from .layers import dense_apply
+
+    new_groups = []
+    for (pattern, repeat), p_g, c_g in zip(cfg.layer_list, params["groups"], cache["groups"]):
+        def fill(p_slice, c_slice):
+            out = dict(c_slice)
+            for i in range(len(pattern)):
+                pc = p_slice[f"l{i}"]["cross"]
+                k = dense_apply(pc["wk"], enc_out, cfg, contract="bsd,dhe->bshe")
+                v = dense_apply(pc["wv"], enc_out, cfg, contract="bsd,dhe->bshe")
+                cc = c_slice[f"l{i}"]["cross"]
+                out[f"l{i}"] = dict(c_slice[f"l{i}"])
+                out[f"l{i}"]["cross"] = cc._replace(k=k.astype(cc.k.dtype), v=v.astype(cc.v.dtype))
+            return out
+
+        new_groups.append(jax.vmap(fill, in_axes=(0, 0))(p_g, c_g))
+    return {"groups": new_groups}
+
+
+def apply_decode(params, tokens: jnp.ndarray, cache, cache_len, cfg: ModelConfig, *, ctx_parallel=False):
+    """One decode step. tokens (B, 1) → (logits (B, 1, V), new_cache)."""
+    table = params["embed"]["table"].astype(cdtype(cfg))
+    x = shard(table[tokens], ("batch", None, "embed"))
+    positions = cache_len[None] if jnp.ndim(cache_len) == 0 else cache_len[:1]
+
+    new_groups = []
+    for (pattern, repeat), p_g, c_g in zip(cfg.layer_list, params["groups"], cache["groups"]):
+        def body(h, xs, _pattern=pattern):
+            p_slice, c_slice = xs
+            new_c = {}
+            for i, desc in enumerate(_pattern):
+                h, nc = block_apply(
+                    p_slice[f"l{i}"], h, cfg, desc,
+                    positions=positions, cache=c_slice[f"l{i}"], cache_len=cache_len,
+                    ctx_parallel=ctx_parallel,
+                )
+                # keep untouched cache entries (e.g. cross K/V) as-is
+                merged = dict(c_slice[f"l{i}"])
+                merged.update(nc or {})
+                new_c[f"l{i}"] = merged
+            return h, new_c
+
+        x, c_new = jax.lax.scan(body, x, (p_g, c_g))
+        new_groups.append(c_new)
+
+    logits = _logits(params, x, cfg)
+    return logits, {"groups": new_groups}

@@ -1,0 +1,323 @@
+"""State-space / RNN mixers: Mamba-1 (Jamba) and RWKV-6 (Finch).
+
+Both are implemented in *chunked parallel* form so training/prefill is
+matmul-parallel (TPU-friendly) while decode is O(1)-state recurrent:
+
+* Mamba-1: selective scan ``h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t`` run as
+  an outer ``lax.scan`` over chunks with an inner ``associative_scan``
+  (first-order recurrence combine) inside each chunk.
+* RWKV-6: per-head state ``S_t = diag(w_t) S_{t-1} + k_t v_tᵀ`` with
+  data-dependent decay ``w_t``. Within a chunk the pairwise decay ratios
+  ``exp(L_{i-1}-L_j)`` (always ≤ 1 → no overflow, no clamping) form the
+  intra-chunk attention; the chunk boundary carries the dense state. This
+  is the GLA/Finch chunked formulation with the numerically-safe
+  difference-of-logs tensor.
+
+Decode caches: Mamba (conv ring, h); RWKV (token-shift x, S).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding.rules import shard
+from .layers import cdtype, dense_apply, dense_axes, dense_init, pdtype
+
+__all__ = [
+    "mamba_init", "mamba_axes", "mamba_apply", "MambaCache",
+    "rwkv_init", "rwkv_axes", "rwkv_apply", "RwkvCache",
+]
+
+MAMBA_CHUNK = 64
+RWKV_CHUNK = 32
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray  # (B, d_conv-1, di) recent pre-conv inputs
+    h: jnp.ndarray  # (B, di, N) SSM state
+
+
+class RwkvCache(NamedTuple):
+    x_tm: jnp.ndarray  # (B, 1, d) last input seen by time-mix
+    x_cm: jnp.ndarray  # (B, 1, d) last input seen by channel-mix
+    s: jnp.ndarray  # (B, H, dk, dv) wkv state
+
+
+# =====================================================================================
+# Mamba-1
+# =====================================================================================
+def mamba_init(key, cfg: ModelConfig):
+    d, di, N, dr, dc = (
+        cfg.d_model,
+        cfg.mamba_d_inner,
+        cfg.mamba_d_state,
+        cfg.dt_rank,
+        cfg.mamba_d_conv,
+    )
+    ks = jax.random.split(key, 6)
+    dt = jnp.exp(
+        jax.random.uniform(ks[4], (di,)) * (np.log(0.1) - np.log(0.001)) + np.log(0.001)
+    )
+    return {
+        "in_proj": dense_init(ks[0], d, (2 * di,), cfg),
+        "conv_w": jax.random.normal(ks[1], (dc, di), dtype=pdtype(cfg)) / np.sqrt(dc),
+        "conv_b": jnp.zeros((di,), dtype=pdtype(cfg)),
+        "x_proj": dense_init(ks[2], di, (dr + 2 * N,), cfg),
+        "dt_proj": dense_init(ks[3], dr, (di,), cfg, bias=False),
+        "dt_bias": jnp.log(jnp.expm1(dt)).astype(pdtype(cfg)),  # softplus⁻¹(dt)
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+        ).astype(pdtype(cfg)),
+        "D": jnp.ones((di,), dtype=pdtype(cfg)),
+        "out_proj": dense_init(ks[5], di, (d,), cfg),
+    }
+
+
+def mamba_axes(cfg: ModelConfig):
+    return {
+        "in_proj": dense_axes("fsdp", ("mlp",)),
+        "conv_w": ("conv", "mlp"),
+        "conv_b": ("mlp",),
+        "x_proj": dense_axes("mlp", (None,)),
+        "dt_proj": dense_axes(None, ("mlp",)),
+        "dt_bias": ("mlp",),
+        "A_log": ("mlp", "state"),
+        "D": ("mlp",),
+        "out_proj": dense_axes("mlp", ("fsdp",)),
+    }
+
+
+def _mamba_scan_chunked(dt, A, Bc, Cc, xm, h0, chunk: int):
+    """Fused selective scan: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,
+    y_t = h_t · C_t — the (B, S, di, N) state sequence is never materialized
+    beyond one chunk (decay/increment are formed inside the chunk body).
+
+    dt/xm: (B,S,di); Bc/Cc: (B,S,N); A: (di,N); h0: (B,di,N) f32.
+    Returns (y (B,S,di) f32, h_last).
+    """
+    B, S, di = dt.shape
+    N = A.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        z3 = ((0, 0), (0, pad), (0, 0))
+        dt, xm, Bc, Cc = (jnp.pad(a, z3) for a in (dt, xm, Bc, Cc))
+    nc = dt.shape[1] // chunk
+
+    def resh(a):
+        return a.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+
+    xs = (resh(dt), resh(xm), resh(Bc), resh(Cc))
+
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a2 * a1, a2 * b1 + b2
+
+    def chunk_body(h, x):
+        dt_i, xm_i, B_i, C_i = x  # (B, chunk, ·)
+        decay = jnp.exp(dt_i[..., None] * A[None, None])  # (B,chunk,di,N)
+        inc = (dt_i * xm_i)[..., None] * B_i[:, :, None, :]
+        Acum, Bcum = jax.lax.associative_scan(combine, (decay, inc), axis=1)
+        h_seq = Acum * h[:, None] + Bcum
+        y = jnp.einsum("bcdn,bcn->bcd", h_seq, C_i)
+        return h_seq[:, -1], y
+
+    h_last, y_chunks = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    y = y_chunks.transpose(1, 0, 2, 3).reshape(B, nc * chunk, di)
+    return y[:, :S], h_last
+
+
+def mamba_apply(p, x: jnp.ndarray, cfg: ModelConfig, *, cache: MambaCache | None = None):
+    """x (B, S, d) → (B, S, d). With ``cache`` (decode) S must be 1."""
+    B, S, d = x.shape
+    di, N, dr, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.dt_rank, cfg.mamba_d_conv
+    dtype = cdtype(cfg)
+
+    xz = dense_apply(p["in_proj"], x, cfg)  # (B,S,2di)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    xm = shard(xm, ("batch", "seq", "mlp"))
+
+    # causal depthwise conv (tap loop — dc is 4)
+    conv_w = p["conv_w"].astype(dtype)
+    if cache is None:
+        acc = jnp.zeros_like(xm)
+        for t in range(dc):
+            shiftamt = dc - 1 - t
+            xs = jnp.pad(xm, ((0, 0), (shiftamt, 0), (0, 0)))[:, :S]
+            acc = acc + xs * conv_w[t]
+        new_conv = None
+    else:
+        hist = jnp.concatenate([cache.conv.astype(dtype), xm], axis=1)  # (B, dc, di)
+        acc = jnp.einsum("btd,td->bd", hist, conv_w)[:, None, :]
+        new_conv = hist[:, 1:].astype(cache.conv.dtype)
+    xm = jax.nn.silu(acc + p["conv_b"].astype(dtype))
+
+    proj = dense_apply(p["x_proj"], xm, cfg)  # (B,S,dr+2N)
+    dt_low, Bc, Cc = jnp.split(proj, [dr, dr + N], axis=-1)
+    dt = jax.nn.softplus(
+        dense_apply(p["dt_proj"], dt_low, cfg) + p["dt_bias"].astype(dtype)
+    ).astype(jnp.float32)  # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di,N)
+
+    if cache is None:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+        y, _ = _mamba_scan_chunked(
+            dt, A, Bc.astype(jnp.float32), Cc.astype(jnp.float32),
+            xm.astype(jnp.float32), h0, MAMBA_CHUNK,
+        )
+        new_h = None
+    else:
+        decay = jnp.exp(dt[:, 0, :, None] * A[None])  # (B,di,N)
+        inc = (dt[:, 0] * xm[:, 0].astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[
+            :, 0, None, :
+        ]
+        h = cache.h.astype(jnp.float32) * decay + inc
+        new_h = h.astype(cache.h.dtype)
+        y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32)[:, 0])[:, None]
+
+    y = y.astype(dtype) + p["D"].astype(dtype) * xm
+    y = y * jax.nn.silu(z)
+    y = shard(y, ("batch", "seq", "mlp"))
+    out = dense_apply(p["out_proj"], y, cfg)
+    new_cache = MambaCache(new_conv, new_h) if cache is not None else None
+    return out, new_cache
+
+
+# =====================================================================================
+# RWKV-6
+# =====================================================================================
+def rwkv_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    ks = jax.random.split(key, 10)
+    p = {
+        "mu": 0.5 * jnp.ones((5, d), dtype=pdtype(cfg)),  # token-shift mixes r,k,v,w,g
+        "wr": dense_init(ks[0], d, (H, dh), cfg),
+        "wk": dense_init(ks[1], d, (H, dh), cfg),
+        "wv": dense_init(ks[2], d, (H, dh), cfg),
+        "wg": dense_init(ks[3], d, (d,), cfg),
+        "w0": jnp.full((d,), -6.0, dtype=pdtype(cfg)),  # base log-log decay
+        "w_lora_a": dense_init(ks[4], d, (cfg.rwkv_decay_lora,), cfg),
+        "w_lora_b": dense_init(ks[5], cfg.rwkv_decay_lora, (d,), cfg, scale=0.01),
+        "u": jnp.zeros((H, dh), dtype=pdtype(cfg)),  # bonus
+        "ln_scale": jnp.ones((H, dh), dtype=pdtype(cfg)),  # per-head groupnorm
+        "ln_bias": jnp.zeros((H, dh), dtype=pdtype(cfg)),
+        "wo": dense_init(ks[6], d, (d,), cfg),
+    }
+    return p
+
+
+def rwkv_axes(cfg: ModelConfig):
+    return {
+        "mu": (None, "embed"),
+        "wr": dense_axes("fsdp", ("heads", "head_dim")),
+        "wk": dense_axes("fsdp", ("heads", "head_dim")),
+        "wv": dense_axes("fsdp", ("heads", "head_dim")),
+        "wg": dense_axes("fsdp", ("mlp",)),
+        "w0": ("embed",),
+        "w_lora_a": dense_axes("fsdp", (None,)),
+        "w_lora_b": dense_axes(None, ("embed",)),
+        "u": ("heads", "head_dim"),
+        "ln_scale": ("heads", "head_dim"),
+        "ln_bias": ("heads", "head_dim"),
+        "wo": dense_axes("mlp", ("fsdp",)),
+    }
+
+
+def _rwkv_chunked(r, k, v, logw, u, s0, chunk: int):
+    """Chunked WKV. r/k/v/logw: (B, H, S, dh); u: (H, dh); s0: (B,H,dh,dh).
+
+    Returns (out (B,H,S,dh), s_last). All math f32.
+    """
+    B, H, S, dh = r.shape
+    pad = (-S) % chunk
+    if pad:
+        z = ((0, 0), (0, 0), (0, pad), (0, 0))
+        r, k, v = jnp.pad(r, z), jnp.pad(k, z), jnp.pad(v, z)
+        logw = jnp.pad(logw, z)  # logw=0 → w=1 (harmless: k=0 contributes nothing)
+    nc = r.shape[2] // chunk
+
+    def resh(a):  # (B,H,nc,C,dh) → scan over nc
+        return a.reshape(B, H, nc, chunk, dh).transpose(2, 0, 1, 3, 4)
+
+    rc, kc, vc, lwc = resh(r), resh(k), resh(v), resh(logw)
+
+    causal = np.tril(np.ones((chunk, chunk), np.float32), -1)  # strictly lower
+
+    def body(s, xs):
+        ri, ki, vi, lwi = xs  # (B,H,C,dh)
+        L = jnp.cumsum(lwi, axis=2)  # inclusive log-decay products
+        Lm1 = L - lwi  # L_{i-1}
+        # intra-chunk: ratio_{ijd} = exp(L_{i-1,d} − L_{j,d}) (≤1 for j<i)
+        ratio = jnp.exp(Lm1[:, :, :, None, :] - L[:, :, None, :, :])  # (B,H,C,C,dh)
+        A = jnp.einsum("bhid,bhijd,bhjd->bhij", ri, ratio, ki)
+        A = A * causal[None, None]
+        diag = (ri * ki * u[None, :, None, :]).sum(-1)  # (B,H,C) bonus term
+        out = jnp.einsum("bhij,bhjd->bhid", A, vi) + diag[..., None] * vi
+        # inter-chunk: contribution of carried state
+        out = out + jnp.einsum("bhid,bhde->bhie", ri * jnp.exp(Lm1), s)
+        # state update
+        kd = ki * jnp.exp(L[:, :, -1:, :] - L)  # decay from j to chunk end
+        s_new = s * jnp.exp(L[:, :, -1])[..., None] + jnp.einsum("bhjd,bhje->bhde", kd, vi)
+        return s_new, out
+
+    s_last, outs = jax.lax.scan(jax.checkpoint(body), s0, (rc, kc, vc, lwc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, nc * chunk, dh)
+    return out[:, :, :S], s_last
+
+
+def rwkv_apply(p, x: jnp.ndarray, cfg: ModelConfig, *, cache: RwkvCache | None = None):
+    """RWKV-6 time mixing. x (B,S,d) → (B,S,d)."""
+    B, S, d = x.shape
+    dh = cfg.rwkv_head_dim
+    H = d // dh
+    dtype = cdtype(cfg)
+
+    if cache is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :S]
+    else:
+        x_prev = cache.x_tm.astype(x.dtype)
+    mu = p["mu"].astype(dtype)
+    xr, xk, xv, xw, xg = (x * mu[i] + x_prev * (1 - mu[i]) for i in range(5))
+
+    r = dense_apply(p["wr"], xr, cfg, contract="bsd,dhe->bshe").transpose(0, 2, 1, 3)
+    k = dense_apply(p["wk"], xk, cfg, contract="bsd,dhe->bshe").transpose(0, 2, 1, 3)
+    v = dense_apply(p["wv"], xv, cfg, contract="bsd,dhe->bshe").transpose(0, 2, 1, 3)
+    g = jax.nn.silu(dense_apply(p["wg"], xg, cfg))
+
+    # data-dependent decay (the Finch feature): w = exp(-exp(w0 + lora(xw)))
+    lora = dense_apply(p["w_lora_b"], jnp.tanh(dense_apply(p["w_lora_a"], xw, cfg)), cfg)
+    loglog_w = p["w0"].astype(jnp.float32) + lora.astype(jnp.float32)  # (B,S,d)
+    logw = -jnp.exp(loglog_w)  # log w ≤ 0
+    logw = logw.reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    u = p["u"].astype(jnp.float32)
+
+    if cache is None:
+        s0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        out, _ = _rwkv_chunked(rf, kf, vf, logw, u, s0, RWKV_CHUNK)
+        new_cache = None
+    else:
+        s = cache.s.astype(jnp.float32)
+        ri, ki, vi = rf[:, :, 0], kf[:, :, 0], vf[:, :, 0]  # (B,H,dh)
+        kv = jnp.einsum("bhd,bhe->bhde", ki, vi)
+        out = jnp.einsum("bhd,bhde->bhe", ri, s + u[None, :, :, None] * kv)
+        s_new = s * jnp.exp(logw[:, :, 0])[..., None] + kv
+        out = out[:, :, None]  # (B,H,1,dh)
+        new_cache = RwkvCache(x.astype(cache.x_tm.dtype), cache.x_cm, s_new.astype(cache.s.dtype))
+
+    # per-head groupnorm, gate, output proj
+    o = out.transpose(0, 2, 1, 3)  # (B,S,H,dh)
+    mean = o.mean(-1, keepdims=True)
+    var = ((o - mean) ** 2).mean(-1, keepdims=True)
+    o = (o - mean) * jax.lax.rsqrt(var + 64e-5)
+    o = o * p["ln_scale"].astype(jnp.float32) + p["ln_bias"].astype(jnp.float32)
+    o = o.reshape(B, S, d).astype(dtype) * g
+    o = shard(o, ("batch", "seq", "mlp"))
+    return dense_apply(p["wo"], o, cfg), new_cache

@@ -1,0 +1,72 @@
+"""Serving: batched single-token decode steps and the prefill that feeds them.
+
+``decode_*`` shapes lower exactly this step: one new token against a KV/state
+cache of ``seq_len`` (ring-buffered to the window for SWA models; latent for
+MLA; O(1) state for Mamba/RWKV). ``long_500k`` additionally turns on context
+parallelism: the cache's sequence axis is sharded over the `model` mesh axis
+and the flash-decode combine runs as three small collectives (see
+models/attention.py::_attend_decode).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+__all__ = ["make_decode_step", "make_prefill_step", "greedy_generate"]
+
+CTX_PARALLEL_THRESHOLD = 1 << 15  # 32768: shard the cache's seq axis over
+# the `model` mesh axis from this length up (context-parallel decode). This
+# is what keeps 32k-cache × large-batch decode inside HBM when kv_heads <
+# model-axis extent (GQA kv=8 cannot TP-shard 16 ways; the seq axis always
+# can), and it turns the flash-decode combine into 3 small collectives.
+
+
+def make_decode_step(cfg: ModelConfig, s_max: int):
+    ctx_parallel = s_max >= CTX_PARALLEL_THRESHOLD
+
+    def step(params, tokens: jnp.ndarray, cache, cache_len: jnp.ndarray):
+        # serving weights live in bf16 AT REST (see launch/specs.py) — no
+        # per-step cast: converts would add their own HBM copies.
+        logits, new_cache = lm.apply_decode(
+            params, tokens, cache, cache_len, cfg, ctx_parallel=ctx_parallel
+        )
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Full-sequence forward producing last-position logits (prefill shapes)."""
+
+    def step(params, batch: dict):
+        logits = lm.apply_train(params, batch, cfg)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    return step
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: jnp.ndarray, n_new: int, s_max: int = 0):
+    """Simple greedy loop (examples / tests). prompt: (B, S0) int32."""
+    B, S0 = prompt.shape
+    s_max = s_max or (S0 + n_new)
+    cache = lm.init_cache(cfg, B, s_max)
+    step = make_decode_step(cfg, s_max)
+    tok = prompt[:, :1]
+    out = []
+    # feed the prompt token-by-token (simple; prefill path covers the fast case)
+    for t in range(S0):
+        nxt, cache = step(params, prompt[:, t : t + 1], cache, jnp.int32(t))
+    tok = nxt[:, None]
+    for t in range(n_new):
+        out.append(tok)
+        nxt, cache = step(params, tok, cache, jnp.int32(S0 + t))
+        tok = nxt[:, None]
+    return jnp.concatenate(out, axis=1)

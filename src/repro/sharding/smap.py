@@ -1,0 +1,17 @@
+"""shard_map compatibility shim (API moved between JAX versions)."""
+
+from __future__ import annotations
+
+__all__ = ["shard_map"]
+
+try:  # jax >= 0.6: top-level, check_vma kwarg
+    from jax import shard_map as _sm  # type: ignore[attr-defined]
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check)
+
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _sm_old
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+        return _sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check)

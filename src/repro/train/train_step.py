@@ -1,0 +1,77 @@
+"""Training step: causal-LM loss, grads, AdamW update — pjit-ready.
+
+The step is a single jittable function over (params, opt_state, batch); all
+distribution comes from the logical-axis shardings of its inputs/outputs
+(FSDP over `data`, TP over `model`, DP over `pod`) plus the activation
+constraints inside the model. Optional int8 gradient compression with error
+feedback is applied on the cross-pod axis (see train/compression.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.sharding.rules import shard
+from .optimizer import AdamWConfig, OptState, adamw_update
+
+__all__ = ["loss_fn", "make_train_step", "TrainState"]
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig):
+    """Next-token cross-entropy over the (padded) vocab, mean over tokens."""
+    logits = lm.apply_train(params, batch, cfg)  # (B,S,Vp) f32, sharded on vocab
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+    else:
+        denom = float(nll.size)
+    return nll.sum() / denom
+
+
+def cast_params_for_compute(params, cfg: ModelConfig):
+    """Mixed precision: cast f32 master weights to the compute dtype at the
+    top of the step, so every FSDP all-gather moves bf16 (2×) instead of f32.
+    The cast is differentiable — grads flow back to the f32 masters."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cd == jnp.float32:
+        return params
+    return jax.tree.map(
+        lambda p: p.astype(cd) if (p.dtype == jnp.float32 and p.ndim >= 2) else p, params
+    )
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    compress_grads: bool = False,
+    bf16_gather: bool = True,
+):
+    """Builds the jittable train step (params, opt_state, batch) → (..., metrics)."""
+
+    def step(params, opt_state: OptState, batch: dict):
+        def cast_loss(p):
+            pc = cast_params_for_compute(p, cfg) if bf16_gather else p
+            return loss_fn(pc, batch, cfg)
+
+        loss, grads = jax.value_and_grad(cast_loss)(params)
+        if compress_grads:
+            from .compression import compress_decompress_tree
+
+            grads = compress_decompress_tree(grads)
+        new_params, new_opt, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    return step

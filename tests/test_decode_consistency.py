@@ -1,0 +1,114 @@
+"""Decode-vs-train consistency: incremental cached decode must reproduce the
+full-sequence forward pass.
+
+Exact (to f32 roundoff) for attention/RWKV paths; Mamba matches to ~1e-5
+(scan reassociation); MoE matches when the capacity factor admits no drops
+(train-time token dropping is an inherent property of capacity-bounded MoE —
+documented in models/moe.py).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import lm
+
+
+def _roundtrip(cfg, S=16, seed=1):
+    params = lm.init_params(jax.random.PRNGKey(seed), cfg)
+    B = 2
+    toks = jnp.asarray(np.random.default_rng(seed).integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full = np.asarray(lm.apply_train(params, {"tokens": toks}, cfg))
+    cache = lm.init_cache(cfg, B, S, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        lg, cache = lm.apply_decode(params, toks[:, t : t + 1], cache, jnp.int32(t), cfg)
+        outs.append(np.asarray(lg[:, 0]))
+    return full, np.stack(outs, 1)
+
+
+def _f32(cfg, **kw):
+    return dataclasses.replace(cfg, compute_dtype="float32", **kw)
+
+
+@pytest.mark.parametrize(
+    "arch,tol",
+    [
+        ("qwen2.5-32b", 1e-5),
+        ("starcoder2-3b", 1e-5),  # sliding-window path
+        ("command-r-35b", 1e-5),  # parallel block
+        ("rwkv6-3b", 1e-4),
+        ("minitron-8b", 1e-5),
+    ],
+)
+def test_decode_matches_train_exactish(arch, tol):
+    cfg = _f32(get_config(arch).reduced())
+    full, dec = _roundtrip(cfg)
+    np.testing.assert_allclose(dec, full, atol=tol)
+
+
+@pytest.mark.parametrize(
+    "arch,tol",
+    [
+        ("deepseek-v2-236b", 1e-4),  # MLA + MoE
+        ("mixtral-8x22b", 1e-4),  # SWA + MoE
+        ("jamba-v0.1-52b", 1e-4),  # Mamba + MoE
+    ],
+)
+def test_decode_matches_train_no_drop_moe(arch, tol):
+    cfg = _f32(get_config(arch).reduced(), capacity_factor=8.0)
+    full, dec = _roundtrip(cfg)
+    np.testing.assert_allclose(dec, full, atol=tol)
+
+
+def test_sliding_window_ring_buffer():
+    """Decode past the window: ring-buffer cache must equal a fresh full
+    forward (the window hides everything older)."""
+    cfg = _f32(get_config("starcoder2-3b").reduced(), sliding_window=8)
+    params = lm.init_params(jax.random.PRNGKey(7), cfg)
+    B, S = 1, 24  # 3× window
+    toks = jnp.asarray(np.random.default_rng(7).integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full = np.asarray(lm.apply_train(params, {"tokens": toks}, cfg))
+    cache = lm.init_cache(cfg, B, S, dtype=jnp.float32)  # ring: capped at window
+    assert cache["groups"][0]["l0"]["mixer"].k.shape[2] == cfg.sliding_window
+    outs = []
+    for t in range(S):
+        lg, cache = lm.apply_decode(params, toks[:, t : t + 1], cache, jnp.int32(t), cfg)
+        outs.append(np.asarray(lg[:, 0]))
+    dec = np.stack(outs, 1)
+    np.testing.assert_allclose(dec, full, atol=1e-4)
+
+
+def test_moe_capacity_drop_semantics():
+    """With tight capacity the train path drops tokens (documented); the
+    sort-based dispatch must still be finite and bounded."""
+    cfg = dataclasses.replace(get_config("mixtral-8x22b").reduced(), capacity_factor=0.5)
+    params = lm.init_params(jax.random.PRNGKey(9), cfg)
+    toks = jnp.asarray(np.random.default_rng(9).integers(0, cfg.vocab, (2, 32)), jnp.int32)
+    logits = lm.apply_train(params, {"tokens": toks}, cfg)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_encdec_decode_with_cross_cache():
+    """seamless: decode with precomputed cross K/V matches teacher forcing."""
+    cfg = _f32(get_config("seamless-m4t-medium").reduced())
+    params = lm.init_params(jax.random.PRNGKey(11), cfg)
+    B, S, Sx = 1, 10, 12
+    rng = np.random.default_rng(11)
+    frames = jnp.asarray(rng.normal(size=(B, Sx, cfg.d_model)), jnp.float32)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full = np.asarray(lm.apply_train(params, {"tokens": toks, "frames": frames}, cfg))
+
+    enc = lm.encode(params, frames, cfg)
+    cache = lm.init_cache(cfg, B, S, dtype=jnp.float32, cross_len=Sx)
+    cache = lm.prefill_cross(params, enc, cfg, cache)
+    outs = []
+    for t in range(S):
+        lg, cache = lm.apply_decode(params, toks[:, t : t + 1], cache, jnp.int32(t), cfg)
+        outs.append(np.asarray(lg[:, 0]))
+    dec = np.stack(outs, 1)
+    np.testing.assert_allclose(dec, full, atol=1e-4)

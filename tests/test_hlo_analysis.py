@@ -1,0 +1,80 @@
+"""HLO analyzer regression tests (trip counts, flops, slice accounting)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _hlo(f, *sds):
+    return jax.jit(f).lower(*sds).compile().as_text()
+
+
+def test_scan_trip_count_multiplies_flops():
+    """XLA cost_analysis counts a while body once; the analyzer must apply
+    the trip count (the motivating bug — see launch/hlo_analysis.py)."""
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    sds = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    st = analyze_hlo(_hlo(f, sds, sds))
+    expected = 2 * 128**3 * 10
+    assert abs(st.flops - expected) / expected < 0.05
+    assert st.n_while == 1
+    assert list(st.trip_counts.values()) == [10]
+
+
+def test_unrolled_matmul_flops():
+    def f(a, b):
+        return a @ b
+
+    sds = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    sds2 = jax.ShapeDtypeStruct((256, 32), jnp.float32)
+    st = analyze_hlo(_hlo(f, sds, sds2))
+    assert st.flops == 2 * 64 * 256 * 32
+
+
+def test_dus_in_scan_not_overcounted():
+    """Scan-carried buffer updates (DUS) must count the update region, not
+    the whole aliased buffer per iteration."""
+    N = 1024
+
+    def f(buf, xs):
+        def body(b, i):
+            return jax.lax.dynamic_update_slice(b, xs[i][None], (i, 0)), None
+
+        out, _ = jax.lax.scan(body, buf, jnp.arange(64))
+        return out
+
+    buf = jax.ShapeDtypeStruct((64, N), jnp.float32)
+    xs = jax.ShapeDtypeStruct((64, N), jnp.float32)
+    st = analyze_hlo(_hlo(f, buf, xs))
+    whole_buffer_per_iter = 64 * (64 * N * 4)  # the over-count we guard against
+    assert st.bytes_accessed < whole_buffer_per_iter / 2, st.bytes_accessed
+
+
+def test_collective_detection():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("model",))
+
+    def f(a, b):
+        y = a @ b
+        return jax.lax.with_sharding_constraint(y, NamedSharding(mesh, P(None, None)))
+
+    # single-device mesh → no collectives, but the pipeline must not crash
+    sds = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    compiled = (
+        jax.jit(f, in_shardings=(NamedSharding(mesh, P(None, "model")),) * 2)
+        .lower(sds, sds)
+        .compile()
+    )
+    st = analyze_hlo(compiled.as_text())
+    assert st.flops > 0

@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests (assignment requirement f).
+
+Each assigned architecture instantiates its REDUCED config and runs one
+forward (and one train-style grad) step on CPU, asserting output shapes and
+finiteness. The FULL configs are exercised via eval_shape param-count checks
+(no allocation) and the dry-run.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.models import lm
+
+ARCHS = list_archs()
+
+
+def _batch_for(cfg, B, S, rng):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.frontend == "vision_patches":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.d_model)), jnp.float32
+        )
+    if cfg.frontend == "audio_frames" and cfg.encdec:
+        batch["frames"] = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+    return batch
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    assert set(ARCHS) == {
+        "seamless-m4t-medium", "qwen2.5-32b", "minitron-8b", "command-r-35b",
+        "starcoder2-3b", "pixtral-12b", "mixtral-8x22b", "deepseek-v2-236b",
+        "jamba-v0.1-52b", "rwkv6-3b",
+    }
+
+
+def test_shapes_assigned():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524_288
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    B, S = 2, 32
+    logits = lm.apply_train(params, _batch_for(cfg, B, S, rng), cfg)
+    from repro.models.layers import round_vocab
+
+    assert logits.shape == (B, S, round_vocab(cfg.vocab))
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    """One loss+grad step on the reduced config: finite loss, finite grads."""
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(1)
+    B, S = 2, 16
+    batch = _batch_for(cfg, B, S, rng)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+
+    def loss_fn(p):
+        logits = lm.apply_train(p, batch, cfg)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return (lse - ll).mean()
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    finite = jax.tree.reduce(
+        lambda a, l: a and bool(jnp.isfinite(l).all()), grads, True
+    )
+    assert finite
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(2), cfg)
+    B = 2
+    cross = 8 if cfg.encdec else 0
+    cache = lm.init_cache(cfg, B, 32, cross_len=cross)
+    if cfg.encdec:
+        enc = lm.encode(
+            params, jnp.asarray(np.random.default_rng(2).normal(size=(B, 8, cfg.d_model)), jnp.float32), cfg
+        )
+        cache = lm.prefill_cross(params, enc, cfg, cache)
+    logits, cache2 = lm.apply_decode(
+        params, jnp.ones((B, 1), jnp.int32), cache, jnp.int32(0), cfg
+    )
+    assert logits.shape[0] == B and logits.shape[1] == 1
+    assert bool(jnp.isfinite(logits).all())
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_axes_structure_matches(arch):
+    """The logical-axes pytree mirrors the params pytree leaf-for-leaf, and
+    every axes tuple has the same rank as its (stacked) parameter."""
+    cfg = get_config(arch).reduced()
+    shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg), jax.random.PRNGKey(0))
+    axes = lm.param_axes(cfg)
+    js, ja = jax.tree.structure(shapes), jax.tree.structure(
+        axes, is_leaf=lambda a: isinstance(a, tuple)
+    )
+    assert js == ja
+    for s, a in zip(jax.tree.leaves(shapes), jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))):
+        assert len(a) == s.ndim, f"{arch}: axes {a} vs shape {s.shape}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_param_count(arch):
+    """eval_shape (no allocation) param count of the FULL config matches the
+    analytic estimate within 5% — catches config transcription errors."""
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda k: lm.init_params(k, cfg), jax.random.PRNGKey(0))
+    actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    est = cfg.n_params_estimate
+    assert abs(actual - est) / est < 0.05, f"{arch}: actual {actual/1e9:.2f}B vs est {est/1e9:.2f}B"
+
+
+def test_causality_property():
+    """Changing token t must not affect logits before t (dense + ssm + moe)."""
+    rng = np.random.default_rng(3)
+    for arch in ["qwen2.5-32b", "rwkv6-3b", "mixtral-8x22b", "jamba-v0.1-52b"]:
+        cfg = get_config(arch).reduced()
+        params = lm.init_params(jax.random.PRNGKey(3), cfg)
+        B, S, t = 1, 12, 7
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        toks2 = toks.at[0, t].set((toks[0, t] + 1) % cfg.vocab)
+        l1 = lm.apply_train(params, {"tokens": toks}, cfg)
+        l2 = lm.apply_train(params, {"tokens": toks2}, cfg)
+        np.testing.assert_allclose(
+            np.asarray(l1[:, :t]), np.asarray(l2[:, :t]), atol=1e-5,
+            err_msg=f"causality violated in {arch}",
+        )
+        assert np.abs(np.asarray(l1[:, t:]) - np.asarray(l2[:, t:])).max() > 1e-4

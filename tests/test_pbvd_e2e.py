@@ -1,0 +1,109 @@
+"""End-to-end PBVD stream-decoding tests (paper §III-A / Fig. 4 behaviour)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ber import simulate_ber, uncoded_ber
+from repro.core.channel import transmit
+from repro.core.encoder import encode_jax, terminate
+from repro.core.pbvd import PBVDConfig, decode_stream, frame_stream, throughput_model
+from repro.core.trellis import CCSDS_27
+
+
+def _noisy_stream(n, ebn0_db, seed=0):
+    code = CCSDS_27
+    rng = np.random.default_rng(seed)
+    bits = terminate(rng.integers(0, 2, n), code)
+    coded = encode_jax(jnp.asarray(bits), code)
+    y = transmit(jax.random.PRNGKey(seed), coded, ebn0_db, code.rate)
+    return bits[:n], y
+
+
+def test_frame_stream_layout():
+    D, L, n_blocks = 8, 2, 3
+    n_sym = 20
+    y = jnp.arange(n_sym * 2, dtype=jnp.float32).reshape(n_sym, 2)
+    blocks = frame_stream(y, D, L, n_blocks)
+    assert blocks.shape == (D + 2 * L, 2, n_blocks)
+    # block 0 head is the zero pad (stages -L..-1)
+    assert np.all(np.asarray(blocks[:L, :, 0]) == 0)
+    # block 0 decode region starts at the stream head
+    np.testing.assert_array_equal(np.asarray(blocks[L, :, 0]), np.asarray(y[0]))
+    # block 1 starts L stages before stage D
+    np.testing.assert_array_equal(np.asarray(blocks[0, :, 1]), np.asarray(y[D - L]))
+    # tail beyond the stream is zero-padded
+    assert np.all(np.asarray(blocks[-1, :, 2]) == 0)
+
+
+@pytest.mark.parametrize("q", [None, 8], ids=["f32", "int8"])
+def test_stream_roundtrip_noiseless(q):
+    bits, _ = _noisy_stream(2000, 100.0, seed=4)  # effectively noiseless
+    code = CCSDS_27
+    coded = encode_jax(jnp.asarray(terminate(bits, code)), code)
+    y = 1.0 - 2.0 * coded.astype(jnp.float32)
+    dec = np.asarray(decode_stream(y, 2000, PBVDConfig(q=q, backend="ref")))
+    assert np.array_equal(dec, bits)
+
+
+def test_stream_decode_4db_error_free():
+    """At 4 dB a 64-state rate-1/2 code decodes a few kbit error-free whp."""
+    bits, y = _noisy_stream(8192, 4.0, seed=5)
+    dec = np.asarray(decode_stream(y, 8192, PBVDConfig(q=8, backend="ref")))
+    assert np.array_equal(dec, bits)
+
+
+def test_quantized_matches_float_at_moderate_snr():
+    """8-bit quantization is transparent at practical SNR (paper §IV-C)."""
+    bits, y = _noisy_stream(4096, 3.5, seed=6)
+    d_f = np.asarray(decode_stream(y, 4096, PBVDConfig(q=None, backend="ref")))
+    d_q = np.asarray(decode_stream(y, 4096, PBVDConfig(q=8, backend="ref")))
+    # identical or nearly so
+    assert np.mean(d_f != d_q) < 1e-3
+
+
+def test_traceback_depth_improves_ber():
+    """Fig. 4: larger L → better BER at fixed Eb/N0 (L=42 ≈ theory)."""
+    key = jax.random.PRNGKey(8)
+    cfg14 = PBVDConfig(D=512, L=14, q=None, backend="ref")
+    cfg42 = PBVDConfig(D=512, L=42, q=None, backend="ref")
+    ber14 = simulate_ber(key, 3.0, cfg14, n_bits=1 << 14)
+    ber42 = simulate_ber(key, 3.0, cfg42, n_bits=1 << 14)
+    assert ber42 <= ber14
+    # and far below uncoded
+    assert ber42 < uncoded_ber(3.0) / 5
+
+
+def test_argmin_start_policy():
+    bits, y = _noisy_stream(2048, 3.0, seed=9)
+    d_zero = np.asarray(decode_stream(y, 2048, PBVDConfig(q=None, backend="ref")))
+    d_arg = np.asarray(
+        decode_stream(y, 2048, PBVDConfig(q=None, backend="ref", start_policy="argmin"))
+    )
+    # both policies decode with low error; L-stage merge makes them near-equal
+    assert np.mean(d_zero != bits) < 0.01
+    assert np.mean(d_arg != bits) < 0.01
+
+
+def test_throughput_model_reproduces_table3():
+    """Eq. (7) with the paper's measured S_k reproduces Table III's T/P(3S)
+    within 5% (GTX580/PCIe-2 and GTX980/PCIe-3 peak rows)."""
+    tp580 = throughput_model(
+        D=512, L=42, R=2, q=8, packed_out=True, s_kernel_mbps=641.8,
+        n_streams=3, bandwidth_gbps=8.0,
+    )
+    assert abs(tp580 - 598.3) / 598.3 < 0.05
+    tp980 = throughput_model(
+        D=512, L=42, R=2, q=8, packed_out=True, s_kernel_mbps=2122.7,
+        n_streams=3, bandwidth_gbps=12.0,
+    )
+    assert abs(tp980 - 1802.5) / 1802.5 < 0.05
+
+
+def test_throughput_model_packing_gain():
+    """Packed I/O strictly increases modeled throughput (paper's U₁/U₂ point)."""
+    kw = dict(D=512, L=42, R=2, s_kernel_mbps=2000.0, n_streams=3, bandwidth_gbps=8.0)
+    unpacked = throughput_model(q=None, packed_out=False, **kw)
+    packed = throughput_model(q=8, packed_out=True, **kw)
+    assert packed > 1.5 * unpacked

@@ -1,0 +1,68 @@
+"""Quantization / packing tests (paper §IV-C storage schemes)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import (
+    dequantize_soft,
+    pack_bits,
+    pack_words,
+    quantize_soft,
+    u1_bytes,
+    u2_bytes,
+    unpack_bits,
+    unpack_words,
+)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 16]))
+@settings(max_examples=25, deadline=None)
+def test_word_pack_roundtrip(seed, q):
+    rng = np.random.default_rng(seed)
+    per = 32 // q
+    n = per * rng.integers(1, 16)
+    qmax = (1 << (q - 1)) - 1
+    vals = rng.integers(-qmax - 1, qmax + 1, n).astype(np.int32)
+    w = pack_words(jnp.asarray(vals), q)
+    back = np.asarray(unpack_words(w, q))
+    assert np.array_equal(back, vals)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_bit_pack_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    n = 8 * rng.integers(1, 64)
+    bits = rng.integers(0, 2, n).astype(np.int32)
+    packed = pack_bits(jnp.asarray(bits))
+    assert packed.dtype == jnp.uint8 and packed.shape == (n // 8,)
+    back = np.asarray(unpack_bits(packed, n))
+    assert np.array_equal(back, bits)
+
+
+def test_quantize_dequantize_error_bound():
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.normal(size=1024).astype(np.float32))
+    z = quantize_soft(y, 8)
+    yd = dequantize_soft(z, 8)
+    # quantization step = 4/127; clipped tail beyond ±4σ is negligible
+    inside = np.abs(np.asarray(y)) < 4.0
+    err = np.abs(np.asarray(yd) - np.asarray(y))[inside]
+    assert err.max() <= (4.0 / 127) / 2 + 1e-6
+
+
+def test_paper_u1_u2_values():
+    """§IV-C: U₁ drops 4R → 4R/⌊32/q⌋; U₂ drops 4 → 1/8."""
+    assert u1_bytes(2, None) == 8.0  # f32, R=2
+    assert u1_bytes(2, 8) == 2.0  # 8-bit packed, 4 per word
+    assert u1_bytes(2, 4) == 1.0
+    assert u2_bytes(False) == 4.0
+    assert u2_bytes(True) == 0.125
+
+
+def test_quantize_saturates():
+    y = jnp.asarray([1e9, -1e9], dtype=jnp.float32)
+    z = np.asarray(quantize_soft(y, 8))
+    assert z[0] == 127 and z[1] == -128

@@ -1,0 +1,85 @@
+"""Sharding-rule unit/property tests: divisibility fallback, axis priority."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import DEFAULT_RULES, LogicalRules, SINGLE_POD_RULES
+
+
+class FakeMesh:
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_basic_mapping():
+    r = LogicalRules(MESH, DEFAULT_RULES)
+    assert r.spec(("batch", None)) == P(("pod", "data"), None)
+    assert r.spec(("fsdp", "mlp")) == P("data", "model")
+
+
+def test_divisibility_fallback_drops_axis():
+    r = LogicalRules(MESH, DEFAULT_RULES)
+    # kv_heads = 8 cannot shard over the 16-way model axis → replicated
+    assert r.spec(("fsdp", "kv_heads", None), shape=(4096, 8, 128)) == P("data", None, None)
+    # 40 heads likewise
+    assert r.spec(("fsdp", "heads", None), shape=(5120, 40, 128)) == P("data", None, None)
+    # 48 heads divide 16 → sharded
+    assert r.spec(("fsdp", "heads", None), shape=(6144, 48, 128)) == P("data", "model", None)
+
+
+def test_multi_axis_partial_keep():
+    r = LogicalRules(MESH, DEFAULT_RULES)
+    # batch 16 can't take pod×data (32) but can take pod (2)
+    assert r.spec(("batch", None), shape=(16, 128)) == P(("pod", "data"), None) or True
+    spec = r.spec(("batch", None), shape=(16, 128))
+    # greedy prefix: pod(2) divides 16, pod×data(32) doesn't → ("pod",)
+    assert spec == P("pod", None)
+    # batch=1 → fully replicated
+    assert r.spec(("batch", None), shape=(1, 128)) == P(None, None)
+
+
+def test_ep_priority_auto_fallback():
+    """experts listed before expert_mlp: EP when divisible, TP otherwise."""
+    r = LogicalRules(MESH, DEFAULT_RULES)
+    # deepseek: 160 experts % 16 == 0 → EP, hidden replicated
+    assert r.spec(("experts", "fsdp", "expert_mlp"), shape=(160, 5120, 1536)) == P(
+        "model", "data", None
+    )
+    # mixtral: 8 experts → fallback to hidden-TP
+    assert r.spec(("experts", "fsdp", "expert_mlp"), shape=(8, 6144, 16384)) == P(
+        None, "data", "model"
+    )
+
+
+def test_missing_axes_dropped():
+    mesh1 = FakeMesh({"data": 4, "model": 2})
+    r = LogicalRules(mesh1, DEFAULT_RULES)  # 'pod' missing from mesh
+    assert r.spec(("batch", None)) == P(None, None)  # batch maps (pod,data) → dropped
+    r2 = LogicalRules(mesh1, SINGLE_POD_RULES)
+    assert r2.spec(("batch", None)) == P("data", None)
+
+
+@given(
+    st.integers(1, 8).map(lambda x: 2**x),
+    st.sampled_from(["heads", "kv_heads", "mlp", "vocab"]),
+)
+@settings(max_examples=40, deadline=None)
+def test_property_spec_always_divides(dim, axis):
+    """Any spec produced with shape info tiles the dimension exactly."""
+    r = LogicalRules(MESH, DEFAULT_RULES)
+    spec = r.spec((axis,), shape=(dim,))
+    part = spec[0]
+    if part is None:
+        return
+    axes = (part,) if isinstance(part, str) else part
+    prod = 1
+    for a in axes:
+        prod *= MESH.shape[a]
+    assert dim % prod == 0

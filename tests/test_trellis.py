@@ -1,0 +1,107 @@
+"""Trellis / group-classification tests, including the paper's Table II."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.trellis import CCSDS_27, ConvCode, parity
+
+
+# Table II of the paper, verbatim: (α, β, γ, θ, states) per group.
+TABLE_II = [
+    (0b00, 0b11, 0b11, 0b00, [0, 1, 4, 5, 24, 25, 28, 29, 42, 43, 46, 47, 50, 51, 54, 55]),
+    (0b01, 0b10, 0b10, 0b01, [2, 3, 6, 7, 26, 27, 30, 31, 40, 41, 44, 45, 48, 49, 52, 53]),
+    (0b11, 0b00, 0b00, 0b11, [8, 9, 12, 13, 16, 17, 20, 21, 34, 35, 38, 39, 58, 59, 62, 63]),
+    (0b10, 0b01, 0b01, 0b10, [10, 11, 14, 15, 18, 19, 22, 23, 32, 33, 36, 37, 56, 57, 60, 61]),
+]
+
+
+def test_table2_exact():
+    """The group classification reproduces the paper's Table II exactly."""
+    groups = {g["alpha"]: g for g in CCSDS_27.groups}
+    assert len(groups) == 4 == CCSDS_27.n_groups
+    for alpha, beta, gamma, theta, states in TABLE_II:
+        g = groups[alpha]
+        assert g["beta"] == beta
+        assert g["gamma"] == gamma
+        assert g["theta"] == theta
+        assert g["states"] == sorted(states)
+
+
+def test_ccsds_shape_params():
+    c = CCSDS_27
+    assert (c.R, c.K, c.v, c.n_states, c.n_butterflies) == (2, 7, 6, 64, 32)
+    assert c.rate == 0.5
+
+
+def test_butterfly_codeword_relations():
+    """Eqs. (4)-(6): β = α⊕g_{K-1}, γ = α⊕g_0, θ = α⊕g_{K-1}⊕g_0."""
+    c = CCSDS_27
+    cw = c.butterfly_codewords
+    assert np.array_equal(cw[:, 1], cw[:, 0] ^ c.x_mask)  # β
+    assert np.array_equal(cw[:, 2], cw[:, 0] ^ c.l_mask)  # γ
+    assert np.array_equal(cw[:, 3], cw[:, 0] ^ c.x_mask ^ c.l_mask)  # θ
+
+
+def test_codewords_match_direct_encoding():
+    """α/β/γ/θ equal direct eq.(2) evaluation on the butterfly sources."""
+    c = CCSDS_27
+    j = np.arange(c.n_butterflies)
+    assert np.array_equal(c.butterfly_codewords[:, 0], c.output_int(2 * j, 0))
+    assert np.array_equal(c.butterfly_codewords[:, 1], c.output_int(2 * j, 1))
+    assert np.array_equal(c.butterfly_codewords[:, 2], c.output_int(2 * j + 1, 0))
+    assert np.array_equal(c.butterfly_codewords[:, 3], c.output_int(2 * j + 1, 1))
+
+
+@st.composite
+def random_code(draw):
+    R = draw(st.integers(2, 3))
+    K = draw(st.integers(3, 8))
+    polys = []
+    for _ in range(R):
+        # ensure a non-degenerate poly (input tap or memory tap set)
+        bits = draw(st.lists(st.integers(0, 1), min_size=K, max_size=K))
+        if sum(bits) == 0:
+            bits[0] = 1
+        polys.append(tuple(bits))
+    return ConvCode(polys=tuple(polys))
+
+
+@given(random_code())
+@settings(max_examples=50, deadline=None)
+def test_group_count_bound(code):
+    """§III-B: butterflies classify into at most 2^R groups."""
+    assert code.n_groups <= 1 << code.R
+    # every butterfly's 4 codewords are fully determined by α and the masks
+    cw = code.butterfly_codewords
+    assert np.array_equal(cw[:, 1], cw[:, 0] ^ code.x_mask)
+    assert np.array_equal(cw[:, 2], cw[:, 0] ^ code.l_mask)
+
+
+@given(random_code(), st.integers(0, 1))
+@settings(max_examples=30, deadline=None)
+def test_output_bits_parity_identity(code, x):
+    """output_bits equals the per-tap XOR of eq. (2) for every state."""
+    for d in range(code.n_states):
+        expect = []
+        for r in range(code.R):
+            g = code.polys[r]  # [g_{K-1}, ..., g_0]
+            acc = x * g[0]
+            for i in range(1, code.K):  # g[i] multiplies D_{K-1-i}
+                acc ^= ((d >> (code.K - 1 - i)) & 1) * g[i]
+            expect.append(acc)
+        got = code.output_bits(d, x).tolist()
+        assert got == expect
+
+
+def test_parity_vectorized():
+    xs = np.arange(1024)
+    expect = np.array([bin(x).count("1") & 1 for x in xs])
+    assert np.array_equal(parity(xs), expect)
+
+
+def test_bm_reduction_claim():
+    """Paper claim: total BM computation per stage is 2^{R+2} < 2^K values
+    for the common codes (R=2, K=5/7/9; R=3, K=7/9)."""
+    for R, K in [(2, 5), (2, 7), (2, 9), (3, 7), (3, 9)]:
+        assert 1 << (R + 2) < 1 << K

@@ -1,0 +1,50 @@
+"""Patches EXPERIMENTS.md with the generated roofline table and perf tables."""
+
+import io
+import re
+import subprocess
+import sys
+from contextlib import redirect_stdout
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+
+def main():
+    from repro.launch import perf_report
+    from repro.launch.roofline import load_all, to_markdown
+
+    exp = (ROOT / "EXPERIMENTS.md").read_text()
+
+    table = to_markdown(load_all(ROOT / "reports" / "dryrun"))
+    exp = exp.replace("<!-- ROOFLINE_TABLE -->", table)
+
+    # capture perf_report sections
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        perf_report.main()
+    sections = buf.getvalue()
+    parts = re.split(r"^### ", sections, flags=re.M)
+    cells = {}
+    for part in parts:
+        if part.startswith("Cell 1"):
+            cells["PERF_CELL1"] = "### " + part.strip()
+        elif part.startswith("Cell 2"):
+            cells["PERF_CELL2"] = "### " + part.strip()
+        elif part.startswith("Cell 3"):
+            cells["PERF_CELL3"] = "### " + part.strip()
+        elif part.startswith("Extra"):
+            cells["PERF_CELL2"] = cells.get("PERF_CELL2", "") + "\n\n### " + part.strip()
+
+    for marker, content in cells.items():
+        # strip the duplicate header line (the narrative already has one)
+        body = "\n".join(content.splitlines()[1:]).strip()
+        exp = exp.replace(f"<!-- {marker} -->", body)
+
+    (ROOT / "EXPERIMENTS.md").write_text(exp)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()
