@@ -1,0 +1,92 @@
+"""Punctured multi-rate sweep: BER and throughput across the rate family.
+
+For each rate of the CCSDS mother code (1/2, 2/3, 3/4, 5/6) the same engine
+decodes the same payload — puncturing is a CodeSpec table entry, not a new
+pipeline — and we report:
+
+  * BER at a few Eb/N0 points (higher rate → less redundancy → worse BER),
+  * decode throughput in payload Mbps (higher rate → fewer received symbols
+    per payload bit → cheaper H2D, same trellis work per stage).
+
+    PYTHONPATH=src python benchmarks/punctured_sweep.py [--bits 65536]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ber import simulate_ber
+from repro.core.channel import transmit
+from repro.core.codespec import get_code_spec
+from repro.core.encoder import encode_jax, terminate
+from repro.core.engine import DecoderEngine
+from repro.core.pbvd import PBVDConfig
+
+RATES = ["ccsds", "ccsds-2/3", "ccsds-3/4", "ccsds-5/6"]
+
+
+def run(n_bits: int = 1 << 16, ebn0_points=(3.0, 4.0, 5.0), backend="ref") -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    payload = rng.integers(0, 2, n_bits)
+    for name in RATES:
+        spec = get_code_spec(name)
+        cfg = PBVDConfig(spec=spec, D=512, L=42, q=8, backend=backend)
+        engine = DecoderEngine(cfg)
+
+        # --- throughput on a fixed payload at 4 dB --------------------------------
+        coded = encode_jax(jnp.asarray(terminate(payload, spec.code)), spec.code)
+        tx = spec.puncture_stream(coded) if spec.is_punctured else coded
+        y = transmit(jax.random.PRNGKey(1), tx, 4.0, spec.rate)
+        f = jax.jit(lambda yy: engine.decode(yy, n_bits))
+        jax.block_until_ready(f(y))
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            out = f(y)
+            jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / reps
+        ber4 = float(np.mean(np.asarray(out) != payload))
+
+        # --- BER sweep -------------------------------------------------------------
+        bers = {}
+        key = jax.random.PRNGKey(2)
+        for ebn0 in ebn0_points:
+            key, k = jax.random.split(key)
+            bers[ebn0] = simulate_ber(k, ebn0, cfg, n_bits=min(n_bits, 1 << 15))
+
+        rows.append(
+            dict(
+                spec=name,
+                rate=round(spec.rate, 4),
+                n_symbols=int(tx.shape[0] if spec.is_punctured else tx.shape[0] * spec.code.R),
+                mbps=round(n_bits / dt / 1e6, 2),
+                ber_at_4db=ber4,
+                **{f"ber_{e}db": v for e, v in bers.items()},
+            )
+        )
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bits", type=int, default=1 << 16)
+    # programmatic callers (benchmarks/run.py) get the defaults, not sys.argv
+    args = ap.parse_args(argv if argv is not None else [])
+    rows = run(args.bits)
+    for r in rows:
+        extra = ",".join(f"{k}={v}" for k, v in r.items() if k != "spec")
+        print(f"punctured_{r['spec'].replace('/', '_')},{extra}")
+    print("\nhigher rate → more payload Mbps through the same kernels, at a BER cost "
+          "— the multi-rate family is one engine + four table entries.")
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

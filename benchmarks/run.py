@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV lines per the repo convention.
   kernel_scaling    — paper Table III S_k column (K1/K2 split vs N_t)
   fig4_ber          — paper Fig. 4 (BER vs Eb/N0 for L ∈ {14,28,42})
   table4_comparison — paper Table IV (cross-work TNDC normalization)
+  punctured_sweep   — beyond-paper: BER/throughput across punctured rates
 
 Roofline tables (assignment §Roofline) are produced by
 ``python -m repro.launch.roofline`` from the dry-run reports.
@@ -18,9 +19,15 @@ import time
 
 
 def main() -> None:
-    from . import fig4_ber, kernel_scaling, table3_throughput, table4_comparison
+    from . import (
+        fig4_ber,
+        kernel_scaling,
+        punctured_sweep,
+        table3_throughput,
+        table4_comparison,
+    )
 
-    for mod in (table3_throughput, kernel_scaling, fig4_ber, table4_comparison):
+    for mod in (table3_throughput, kernel_scaling, fig4_ber, table4_comparison, punctured_sweep):
         t0 = time.perf_counter()
         mod.main()
         print(

@@ -4,10 +4,11 @@ The paper's "original" decoder = one monolithic kernel, float32 I/O,
 unpacked outputs. The "optimized" decoder = two-phase kernels (K1/K2),
 8-bit packed inputs, bit-packed outputs.
 
-On this CPU container we measure the jnp (XLA-CPU) execution of both
-pipelines (wall time → Mbps) and additionally report the MODELED TPU-v5e
-throughput from the paper's eq. (7) with the kernel rate replaced by the
-dry-run roofline bound (see EXPERIMENTS.md §Perf for the derivation).
+Both pipelines run through the unified :class:`~repro.core.engine.DecoderEngine`
+(ref backend — the XLA-CPU fast path on this container). We measure wall time
+→ Mbps and additionally report the MODELED TPU-v5e throughput from the
+paper's eq. (7) with the kernel rate replaced by the dry-run roofline bound
+(see EXPERIMENTS.md §Perf for the derivation).
 """
 
 from __future__ import annotations
@@ -20,7 +21,8 @@ import numpy as np
 
 from repro.core.channel import transmit
 from repro.core.encoder import encode_jax, terminate
-from repro.core.pbvd import PBVDConfig, decode_stream, throughput_model
+from repro.core.engine import DecoderEngine
+from repro.core.pbvd import PBVDConfig, throughput_model
 from repro.core.quantize import pack_bits, quantize_soft
 from repro.core.trellis import CCSDS_27
 
@@ -34,7 +36,7 @@ def _stream(n_bits: int, seed=0):
 
 
 def _time(fn, *args, reps=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
@@ -48,15 +50,15 @@ def run(n_bits: int = 1 << 18) -> list[dict]:
     rows = []
 
     # original: f32 soft symbols, unpacked int32 outputs, single fused pipeline
-    cfg_orig = PBVDConfig(D=D, L=L, q=None, backend="ref")
-    f_orig = jax.jit(lambda yy: decode_stream(yy, n_bits, cfg_orig))
+    eng_orig = DecoderEngine(PBVDConfig(D=D, L=L, q=None, backend="ref"))
+    f_orig = jax.jit(lambda yy: eng_orig.decode(yy, n_bits))
     t_orig = _time(f_orig, y)
 
     # optimized: int8 quantized inputs, bit-packed outputs (paper §IV-C)
-    cfg_opt = PBVDConfig(D=D, L=L, q=8, backend="ref")
+    eng_opt = DecoderEngine(PBVDConfig(D=D, L=L, q=8, backend="ref"))
 
     def opt_pipeline(yq):
-        out = decode_stream(yq.astype(jnp.int8), n_bits, cfg_opt)
+        out = eng_opt.decode(yq.astype(jnp.int8), n_bits)
         pad = (-out.shape[0]) % 8
         return pack_bits(jnp.pad(out, (0, pad)))
 

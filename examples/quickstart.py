@@ -1,9 +1,11 @@
-"""Quickstart: decode a noisy CCSDS (2,1,7) stream with the PBVD decoder.
+"""Quickstart: decode a noisy CCSDS (2,1,7) stream with the DecoderEngine.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Walks the full paper pipeline: encode → BPSK+AWGN → 8-bit quantize (packed
-H2D format) → parallel-block framing → two-phase decode → BER check.
+H2D format) → parallel-block framing → backend-dispatched decode → BER check,
+then re-decodes the same stream chunk-by-chunk through a streaming session
+and at a punctured rate — both one-liners on the same engine API.
 """
 
 import time
@@ -13,14 +15,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.channel import transmit
+from repro.core.codespec import get_code_spec
 from repro.core.encoder import encode_jax, terminate
-from repro.core.pbvd import PBVDConfig, decode_stream
+from repro.core.engine import DecoderEngine
+from repro.core.pbvd import PBVDConfig
 from repro.core.quantize import pack_words, quantize_soft, u1_bytes
-from repro.core.trellis import CCSDS_27
 
 
 def main():
-    code = CCSDS_27
+    spec = get_code_spec("ccsds")
+    code = spec.code
     n_bits = 100_000
     ebn0_db = 4.0
     print(f"CCSDS (2,1,7): K={code.K}, R=1/{code.R}, {code.n_states} states, "
@@ -31,7 +35,7 @@ def main():
     payload = rng.integers(0, 2, n_bits)
     bits = terminate(payload, code)
     coded = encode_jax(jnp.asarray(bits), code)
-    y = transmit(jax.random.PRNGKey(1), coded, ebn0_db, code.rate)
+    y = transmit(jax.random.PRNGKey(1), coded, ebn0_db, spec.rate)
     print(f"transmitted {n_bits} bits at Eb/N0 = {ebn0_db} dB")
 
     # --- the paper's packed H2D format ------------------------------------------------
@@ -40,18 +44,39 @@ def main():
     print(f"8-bit packed input: {packed.size * 4} bytes "
           f"(U1 = {u1_bytes(code.R, 8)} B/symbol vs {u1_bytes(code.R, None)} float32)")
 
-    # --- decode -------------------------------------------------------------------------
-    cfg = PBVDConfig(D=512, L=42, q=8, backend="ref")
+    # --- one-shot decode through the engine -----------------------------------------
+    engine = DecoderEngine(PBVDConfig(spec=spec, D=512, L=42, q=8, backend="ref"))
     t0 = time.perf_counter()
-    decoded = decode_stream(y, n_bits, cfg)
+    decoded = engine.decode(y, n_bits)
     decoded.block_until_ready()
     dt = time.perf_counter() - t0
-    n_blocks = -(-n_bits // cfg.D)
+    n_blocks = -(-n_bits // engine.cfg.D)
     ber = float(jnp.mean(decoded != jnp.asarray(payload)))
-    print(f"decoded {n_blocks} parallel blocks (D={cfg.D}, L={cfg.L}) "
+    print(f"decoded {n_blocks} parallel blocks (D={engine.cfg.D}, L={engine.cfg.L}) "
           f"in {dt*1e3:.1f} ms → {n_bits/dt/1e6:.2f} Mbps (CPU)")
     print(f"BER = {ber:.2e}  ({int(ber*n_bits)} errors)")
     assert ber < 1e-3
+
+    # --- the same stream, chunk-by-chunk through a streaming session -----------------
+    sess = engine.session()
+    ya = np.asarray(y)
+    chunks = np.array_split(ya, 20)
+    outs = [sess.decode(c) for c in chunks]
+    outs.append(sess.finish(n_bits))
+    streamed = np.concatenate(outs)
+    print(f"streaming session: {len(chunks)} chunks → "
+          f"bit-exact to one-shot: {np.array_equal(streamed, np.asarray(decoded))}")
+
+    # --- punctured rate 3/4 from the same mother code --------------------------------
+    spec34 = get_code_spec("ccsds-3/4")
+    tx = spec34.puncture_stream(coded)
+    y34 = transmit(jax.random.PRNGKey(2), tx, ebn0_db + 1.5, spec34.rate)
+    eng34 = DecoderEngine(PBVDConfig(spec=spec34, D=512, L=42, q=8, backend="ref"))
+    dec34 = eng34.decode(y34, n_bits)
+    ber34 = float(jnp.mean(dec34 != jnp.asarray(payload)))
+    print(f"punctured rate {spec34.rate:.2f}: {tx.shape[0]} symbols "
+          f"(vs {coded.shape[0]*code.R} unpunctured), BER = {ber34:.2e} at "
+          f"Eb/N0 = {ebn0_db + 1.5} dB")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,8 @@ import numpy as np
 
 from .channel import transmit
 from .encoder import encode_jax
-from .pbvd import PBVDConfig, decode_stream
+from .engine import DecoderEngine
+from .pbvd import PBVDConfig
 
 __all__ = ["simulate_ber", "uncoded_ber"]
 
@@ -33,7 +34,14 @@ def simulate_ber(
     n_bits: int = 1 << 15,
     n_trials: int = 1,
 ) -> float:
-    """Monte-Carlo BER of the PBVD decoder at the given Eb/N0."""
+    """Monte-Carlo BER of the PBVD decoder at the given Eb/N0.
+
+    Punctured specs are exercised end-to-end: the coded stream is punctured
+    before the channel (so Eb/N0 uses the effective rate) and the engine
+    depunctures with BM-neutral zeros on receive.
+    """
+    engine = DecoderEngine(cfg)
+    spec = engine.spec
     errors = 0
     total = 0
     for trial in range(n_trials):
@@ -42,8 +50,12 @@ def simulate_ber(
         # flush the encoder so the stream is self-contained
         bits_t = jnp.concatenate([bits, jnp.zeros(cfg.code.v, jnp.int32)])
         coded = encode_jax(bits_t, cfg.code)  # (T, R)
-        y = transmit(kn, coded, ebn0_db, cfg.code.rate)
-        dec = decode_stream(y, n_bits + cfg.code.v, cfg)[:n_bits]
+        if spec.is_punctured:
+            tx = spec.puncture_stream(coded)  # (n_kept,)
+        else:
+            tx = coded
+        y = transmit(kn, tx, ebn0_db, spec.rate)
+        dec = engine.decode(y, n_bits + cfg.code.v)[:n_bits]
         errors += int(jnp.sum(dec != bits))
         total += n_bits
     return errors / total

@@ -1,0 +1,279 @@
+"""The unified decode path: ``DecoderEngine`` + stateful streaming sessions.
+
+One engine method covers what used to be three copy-pasted pipelines
+(``decode_stream``, ``decode_stream_sharded`` and the per-backend branches in
+``kernels/ops.py``):
+
+* **codes** come from a :class:`~repro.core.codespec.CodeSpec` (mother code +
+  optional puncturing) — punctured streams are depunctured with BM-neutral
+  zeros and flow through the unchanged framing/kernels;
+* **backends** are looked up in the kernel registry
+  (:mod:`repro.kernels.registry`) — ``ref``/``pallas``/``fused`` all receive
+  the same ``FramedBlocks`` contract;
+* **sharding** is a constructor argument (``mesh`` + ``block_axes``), not a
+  separate function: the parallel-block axis is sharded across the mesh with
+  zero cross-device communication (the PBVD property that makes the decoder
+  scale linearly in chips);
+* **streaming** is :meth:`DecoderEngine.session`: a session carries the
+  inter-block overlap tail (up to ``D + L`` received stages, ``2L`` of which
+  overlap the neighbouring blocks) across successive ``decode()`` calls so an
+  unbounded stream decodes chunk-by-chunk, bit-exact to the one-shot decode.
+
+See DESIGN.md §1/§3 for the architecture and the streaming invariants.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import pbvd_decode_blocks
+from .codespec import CodeSpec
+from .quantize import quantize_soft
+
+__all__ = ["DecoderEngine", "DecoderSession"]
+
+
+class DecoderEngine:
+    """Single entry point for PBVD decoding.
+
+    Parameters
+    ----------
+    cfg: PBVDConfig — decode geometry (D, L), quantization, backend, code/spec.
+    mesh: optional ``jax.sharding.Mesh``; when given, the parallel-block axis
+        of every decode is sharded over ``block_axes`` (e.g. ``("pod","data")``
+        on the production mesh).
+    """
+
+    def __init__(self, cfg=None, *, mesh=None, block_axes: tuple[str, ...] = ("data",)):
+        from .pbvd import PBVDConfig  # local import: pbvd re-exports the engine
+
+        self.cfg = cfg if cfg is not None else PBVDConfig()
+        self.spec: CodeSpec = self.cfg.codespec
+        self.mesh = mesh
+        self.block_axes = tuple(block_axes)
+
+    # ------------------------------------------------------------------ one-shot
+    def decode(self, y, n_bits: int | None = None, *, interpret: bool | None = None):
+        """Decode a soft-symbol stream → (n_bits,) int32 bits.
+
+        ``y`` is either a (n_stages, R) full-rate stream or, for a punctured
+        spec, a 1-D stream of received (punctured) symbols, which is
+        depunctured with BM-neutral zeros first. ``n_bits`` defaults to the
+        number of full-rate stages in the stream.
+        """
+        from .pbvd import frame_stream
+
+        y = self._to_full_rate(y)
+        if n_bits is None:
+            n_bits = int(y.shape[0])
+        cfg = self.cfg
+        n_blocks = -(-n_bits // cfg.D)
+        if cfg.q is not None and not jnp.issubdtype(y.dtype, jnp.integer):
+            y = quantize_soft(y, cfg.q)  # already-integer inputs are pre-quantized
+        blocks = frame_stream(y, cfg.D, cfg.L, n_blocks)
+        bits = self._decode_blocks(blocks, n_blocks, interpret)  # (D, n_blocks)
+        return jnp.transpose(bits).reshape(-1)[:n_bits]
+
+    # ------------------------------------------------------------------ streaming
+    def session(self, *, interpret: bool | None = None) -> "DecoderSession":
+        """Open a stateful streaming session (see :class:`DecoderSession`)."""
+        return DecoderSession(self, interpret=interpret)
+
+    # ------------------------------------------------------------------ internals
+    def _to_full_rate(self, y):
+        if y.ndim == 1:
+            if not self.spec.is_punctured:
+                raise ValueError(
+                    "1-D symbol stream given but the code spec is unpunctured; "
+                    "pass (n_stages, R) soft symbols"
+                )
+            return self.spec.depuncture_stream(jnp.asarray(y))
+        if y.shape[-1] != self.spec.code.R:
+            raise ValueError(f"stream rank {y.shape[-1]} != code R {self.spec.code.R}")
+        return y
+
+    def _decode_blocks(self, blocks, n_real: int, interpret: bool | None):
+        """(T, R, n_blocks) framed symbols → (D, n_real) bits, optionally sharded."""
+        cfg = self.cfg
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            n_shards = int(np.prod([self.mesh.shape[a] for a in self.block_axes]))
+            pad = (-blocks.shape[2]) % n_shards
+            if pad:
+                blocks = jnp.pad(blocks, ((0, 0), (0, 0), (0, pad)))
+            sharding = NamedSharding(self.mesh, P(None, None, self.block_axes))
+            blocks = jax.lax.with_sharding_constraint(blocks, sharding)
+        bits = pbvd_decode_blocks(
+            blocks,
+            self.spec.code,
+            decode_start=cfg.L,
+            n_decode=cfg.D,
+            start_policy=cfg.start_policy,
+            backend=cfg.backend,
+            interpret=interpret,
+        )
+        return bits[:, :n_real]
+
+
+class DecoderSession:
+    """Chunk-by-chunk decoding of an unbounded stream.
+
+    The session buffers received symbols (depuncturing incrementally for
+    punctured specs) and decodes a parallel block as soon as its full window
+    ``[bD - L, bD + D + L)`` is available — exactly the window the one-shot
+    framing would build, so the concatenation of all ``decode()`` outputs plus
+    ``finish()`` is bit-identical to ``engine.decode`` on the whole stream.
+
+    The carried state between calls is the overlap tail (at most ``D + L``
+    stages of soft symbols), the puncture phase, and the block counter.
+    """
+
+    def __init__(self, engine: DecoderEngine, *, interpret: bool | None = None):
+        self.engine = engine
+        self.cfg = engine.cfg
+        self.spec = engine.spec
+        self._interpret = interpret
+        self._buf = np.zeros((0, self.spec.code.R), np.float32)
+        self._base = 0  # global stage index of _buf[0]
+        self._blocks_done = 0
+        self._kept_seen = 0  # punctured symbols consumed (puncture phase)
+        self._int_dtype = None  # set when chunks arrive pre-quantized (integer)
+        self._started = False
+        self.bits_emitted = 0
+
+    # ---- public API ----------------------------------------------------------------
+    def decode(self, chunk) -> np.ndarray:
+        """Feed a chunk of received symbols; return newly decodable bits.
+
+        ``chunk`` is (n, R) full-rate soft symbols for unpunctured specs, or
+        a 1-D punctured symbol stream for punctured specs (the wire format —
+        full-rate chunks would desynchronize the carried puncture phase).
+        Integer chunks are treated as pre-quantized (like ``engine.decode``)
+        and must not be mixed with float chunks. Returns an int32 array
+        (possibly empty): ``D`` bits per parallel block whose window is now
+        complete.
+        """
+        self._ingest(np.asarray(chunk))
+        D, L = self.cfg.D, self.cfg.L
+        n_ready = max(0, (self._stages_complete() - L) // D)
+        out = self._decode_upto(n_ready)
+        self.bits_emitted += len(out)
+        return out
+
+    def finish(self, n_bits: int | None = None) -> np.ndarray:
+        """Flush the stream: decode the remaining blocks (zero-padded tail).
+
+        ``n_bits`` is the total payload length of the stream (defaults to the
+        number of full-rate stages received); the returned tail makes the
+        session's concatenated output equal ``engine.decode(y, n_bits)``.
+        """
+        D = self.cfg.D
+        if n_bits is None:
+            n_bits = self._base + len(self._buf)
+        n_blocks = -(-n_bits // D)
+        prior = self._blocks_done * D
+        out = self._decode_upto(n_blocks)
+        out = out[: max(0, n_bits - prior)]
+        self.bits_emitted += len(out)
+        return out
+
+    # ---- internals -----------------------------------------------------------------
+    def _stages_complete(self) -> int:
+        """Stages for which every (unpunctured) symbol has been received."""
+        if not self.spec.is_punctured:
+            return self._base + len(self._buf)
+        next_slot = int(self.spec.kept_slot_indices(self._kept_seen, 1)[0])
+        return next_slot // self.spec.code.R
+
+    def _ingest(self, chunk: np.ndarray) -> None:
+        R = self.spec.code.R
+        if chunk.size:
+            # pre-quantized (integer) streams skip the session's quantization,
+            # mirroring engine.decode; mixing dtypes would corrupt the buffer
+            is_int = np.issubdtype(chunk.dtype, np.integer)
+            if not self._started:
+                self._int_dtype = chunk.dtype if is_int else None
+                self._started = True
+            elif is_int != (self._int_dtype is not None):
+                raise ValueError(
+                    "cannot mix integer (pre-quantized) and float chunks "
+                    "within one session"
+                )
+        if self.spec.is_punctured:
+            if chunk.ndim != 1:
+                # a punctured wire format is the 1-D kept-symbol stream; a
+                # full-rate chunk would desynchronize the puncture phase
+                raise ValueError(
+                    f"punctured sessions take 1-D punctured symbol chunks, "
+                    f"got shape {chunk.shape}"
+                )
+            n = len(chunk)
+            if n == 0:
+                return
+            slots = self.spec.kept_slot_indices(self._kept_seen, n)
+            need_stages = int(slots[-1]) // R + 1
+            grow = need_stages - (self._base + len(self._buf))
+            if grow > 0:
+                self._buf = np.concatenate(
+                    [self._buf, np.zeros((grow, R), np.float32)]
+                )
+            local = slots - self._base * R
+            self._buf[local // R, local % R] = chunk
+            self._kept_seen += n
+        elif chunk.ndim == 2 and chunk.shape[1] == R:
+            self._buf = np.concatenate([self._buf, chunk.astype(np.float32)])
+        else:
+            raise ValueError(
+                f"chunk shape {chunk.shape} invalid for code R={R} "
+                f"(punctured={self.spec.is_punctured})"
+            )
+
+    def _decode_upto(self, b1: int) -> np.ndarray:
+        """Decode blocks [blocks_done, b1); advance and trim the buffer."""
+        b0 = self._blocks_done
+        k = b1 - b0
+        if k <= 0:
+            return np.zeros((0,), np.int32)
+        cfg = self.cfg
+        D, L, R = cfg.D, cfg.L, self.spec.code.R
+        T = D + 2 * L
+        # pad the block count to a power of two so chunked streams hit a
+        # bounded set of jit shapes; pad-block bits are discarded below
+        k_pad = 1 << (k - 1).bit_length()
+        lo = b0 * D - L  # global first stage of the combined window
+        hi_pad = (b0 + k_pad) * D + L  # exclusive global end incl. padding
+        left_pad = max(0, -lo)  # only the very first block reaches stage -L
+        s0 = max(lo, 0) - self._base
+        need = hi_pad - max(lo, 0)
+        window = self._buf[s0 : s0 + need]
+        parts = []
+        if left_pad:
+            parts.append(np.zeros((left_pad, R), np.float32))
+        parts.append(window)
+        right_pad = need - len(window)
+        if right_pad > 0:
+            parts.append(np.zeros((right_pad, R), np.float32))
+        w = np.concatenate(parts) if len(parts) > 1 else parts[0]
+
+        if self._int_dtype is not None:  # pre-quantized stream: exact passthrough
+            y = jnp.asarray(w.astype(self._int_dtype))
+        else:
+            y = jnp.asarray(w)
+            if cfg.q is not None:
+                y = quantize_soft(y, cfg.q)
+        idx = np.arange(T)[:, None] + np.arange(k_pad)[None, :] * D
+        blocks = jnp.transpose(y[idx], (0, 2, 1))  # (T, R, k_pad)
+        bits = self.engine._decode_blocks(blocks, k, self._interpret)  # (D, k)
+        out = np.asarray(jnp.transpose(bits), dtype=np.int32).reshape(-1)
+
+        self._blocks_done = b1
+        new_base = max(0, b1 * D - L)
+        drop = new_base - self._base
+        if drop > 0:
+            self._buf = self._buf[drop:]
+            self._base = new_base
+        return out

@@ -1,4 +1,5 @@
-"""Parallel Block-based Viterbi Decoder — stream orchestration (paper §III-A).
+"""Parallel Block-based Viterbi Decoder — configuration, framing and the
+paper's throughput model (§III-A / eq. 7).
 
 The stream of received soft symbols is framed into ``N_t`` parallel blocks of
 decode length ``D``, each extended by ``M = L`` truncation stages on the left
@@ -8,8 +9,10 @@ maps to TPU lanes (within a chip, via the Pallas kernels) × chips (via the
 ``(pod, data)`` mesh axes, `shard_map`/pjit — zero collectives, verified by
 the dry-run).
 
-Also implements the paper's throughput model (eq. 7) re-parameterized for a
-host↔HBM transfer budget, used by the benchmarks to model TPU deployment.
+The decode pipelines themselves live in :mod:`repro.core.engine` — a single
+:class:`~repro.core.engine.DecoderEngine` parameterized by code spec, kernel
+backend and sharding. ``decode_stream``/``decode_stream_sharded`` are kept as
+thin wrappers over the engine for the original call sites.
 """
 
 from __future__ import annotations
@@ -20,33 +23,55 @@ from typing import Literal
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.kernels.ops import pbvd_decode_blocks
-from .quantize import quantize_soft, u1_bytes, u2_bytes
+from .codespec import CodeSpec
+from .quantize import u1_bytes, u2_bytes
 from .trellis import CCSDS_27, ConvCode
 
-__all__ = ["PBVDConfig", "frame_stream", "decode_stream", "throughput_model"]
+__all__ = [
+    "PBVDConfig",
+    "frame_stream",
+    "decode_stream",
+    "decode_stream_sharded",
+    "throughput_model",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class PBVDConfig:
-    """Decoder configuration. Paper defaults: D=512, L=42 (≈6K), M=L."""
+    """Decoder configuration. Paper defaults: D=512, L=42 (≈6K), M=L.
+
+    ``spec`` selects a :class:`~repro.core.codespec.CodeSpec` (code +
+    puncturing); when given it overrides ``code`` (which is kept in sync so
+    ``cfg.code`` always names the mother code the kernels run).
+    """
 
     code: ConvCode = CCSDS_27
     D: int = 512  # decode block length
     L: int = 42  # traceback depth (= truncation length M)
     q: int | None = 8  # soft-symbol quantization bits; None → float32
     start_policy: Literal["zero", "argmin"] = "zero"
-    backend: Literal["pallas", "ref"] = "pallas"
+    backend: Literal["pallas", "ref", "fused"] = "pallas"
+    spec: CodeSpec | None = None
 
     @property
     def T(self) -> int:  # stages per parallel block
         return self.D + 2 * self.L
 
+    @property
+    def codespec(self) -> CodeSpec:
+        """The effective CodeSpec (wrapping ``code`` when none was given)."""
+        if self.spec is not None:
+            return self.spec
+        return CodeSpec(name=f"(2,1,{self.code.K})" if self.code.R == 2 else "custom",
+                        code=self.code)
+
     def __post_init__(self):
         if self.D <= 0 or self.L < 0:
             raise ValueError("D must be positive, L non-negative")
+        if self.spec is not None and self.spec.code is not self.code:
+            # keep cfg.code authoritative for kernel callers
+            object.__setattr__(self, "code", self.spec.code)
 
 
 @partial(jax.jit, static_argnames=("D", "L", "n_blocks"))
@@ -76,23 +101,11 @@ def decode_stream(
 ) -> jnp.ndarray:
     """Decode a soft-symbol stream. y: (n_sym, R) → (n_bits,) int32 bits.
 
-    Applies the configured quantization (the paper's 8-bit packed H2D path)
-    before the kernels; the kernels then run exact integer ACS.
+    Thin wrapper over :class:`~repro.core.engine.DecoderEngine`.
     """
-    n_blocks = -(-n_bits // cfg.D)
-    if cfg.q is not None:
-        y = quantize_soft(y, cfg.q)
-    blocks = frame_stream(y, cfg.D, cfg.L, n_blocks)
-    bits = pbvd_decode_blocks(
-        blocks,
-        cfg.code,
-        decode_start=cfg.L,
-        n_decode=cfg.D,
-        start_policy=cfg.start_policy,
-        backend=cfg.backend,
-        interpret=interpret,
-    )  # (D, N_t)
-    return jnp.transpose(bits).reshape(-1)[:n_bits]
+    from .engine import DecoderEngine
+
+    return DecoderEngine(cfg).decode(y, n_bits, interpret=interpret)
 
 
 def decode_stream_sharded(
@@ -104,36 +117,11 @@ def decode_stream_sharded(
     block_axes: tuple[str, ...] = ("data",),
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Distributed stream decode: parallel blocks sharded across mesh axes.
+    """Distributed stream decode: thin wrapper over a mesh-bound engine."""
+    from .engine import DecoderEngine
 
-    The block axis of the framed stream is sharded over ``block_axes`` (e.g.
-    ``("pod", "data")`` on the production mesh); every device decodes its
-    local blocks with zero cross-device communication — the PBVD property
-    that makes the decoder scale linearly in chips.
-    """
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
-    n_blocks = -(-n_bits // cfg.D)
-    if cfg.q is not None:
-        y = quantize_soft(y, cfg.q)
-    blocks = frame_stream(y, cfg.D, cfg.L, n_blocks)
-    # pad block axis to the shard count
-    n_shards = int(np.prod([mesh.shape[a] for a in block_axes]))
-    pad = (-n_blocks) % n_shards
-    if pad:
-        blocks = jnp.pad(blocks, ((0, 0), (0, 0), (0, pad)))
-    sharding = NamedSharding(mesh, P(None, None, block_axes))
-    blocks = jax.lax.with_sharding_constraint(blocks, sharding)
-    bits = pbvd_decode_blocks(
-        blocks,
-        cfg.code,
-        decode_start=cfg.L,
-        n_decode=cfg.D,
-        start_policy=cfg.start_policy,
-        backend=cfg.backend,
-        interpret=interpret,
-    )
-    return jnp.transpose(bits).reshape(-1)[:n_bits]
+    engine = DecoderEngine(cfg, mesh=mesh, block_axes=block_axes)
+    return engine.decode(y, n_bits, interpret=interpret)
 
 
 def throughput_model(

@@ -1,11 +1,17 @@
-"""jit'd public wrappers around the PBVD Pallas kernels.
+"""jit'd public wrappers around the PBVD kernels, backend-dispatched.
 
-Handles the shape plumbing the kernels require (lane padding to 128, stage
+The three decode backends (``ref`` pure-jnp oracle, ``pallas`` two-kernel
+K1/K2 path, ``fused`` single-kernel ACS+traceback) register themselves here
+via the :mod:`repro.kernels.registry` decorator, each receiving the common
+``FramedBlocks``/``ConvCode`` contract. ``pbvd_decode_blocks`` is the jit'd
+dispatcher the engine calls; it contains no per-backend branches.
+
+Each backend adapter owns its shape plumbing (lane padding to 128, stage
 padding to the stage-chunk — end-padding with zero symbols is BM-neutral and
 keeps the state-0 walk stable, see tests), the traceback start-state policy,
 and the paper's packed-I/O transforms.
 
-On CPU (this container) the kernels run in interpret mode; on TPU they
+On CPU (this container) the Pallas kernels run in interpret mode; on TPU they
 compile natively. ``backend="ref"`` selects the pure-jnp oracle (which is
 also the fast path on CPU and the one XLA fuses well — used by the
 benchmarks).
@@ -22,9 +28,17 @@ import jax.numpy as jnp
 from repro.core.trellis import ConvCode
 from . import ref as _ref
 from .acs import LANE_TILE, DEFAULT_STAGE_CHUNK, acs_forward_pallas
+from .registry import FramedBlocks, available_backends, get_backend, register_backend
 from .traceback import traceback_pallas
 
-__all__ = ["pbvd_decode_blocks", "default_interpret"]
+__all__ = [
+    "pbvd_decode_blocks",
+    "default_interpret",
+    "FramedBlocks",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+]
 
 
 def default_interpret() -> bool:
@@ -41,6 +55,97 @@ def _pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
     return jnp.pad(x, widths)
 
 
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+@register_backend("ref")
+def _decode_ref(
+    blocks: FramedBlocks,
+    code: ConvCode,
+    *,
+    start_policy: str = "zero",
+    stage_chunk: int = DEFAULT_STAGE_CHUNK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Pure-jnp oracle path (also the XLA-fused fast path on CPU)."""
+    B = blocks.y.shape[2]
+    sp, pm = _ref.acs_forward_ref(blocks.y, code)
+    if start_policy == "argmin":
+        start = jnp.argmin(pm, axis=0).astype(jnp.int32)
+    else:
+        start = jnp.zeros((B,), jnp.int32)
+    return _ref.traceback_ref(sp, code, blocks.decode_start, blocks.n_decode, start)
+
+
+@register_backend("pallas")
+def _decode_pallas(
+    blocks: FramedBlocks,
+    code: ConvCode,
+    *,
+    start_policy: str = "zero",
+    stage_chunk: int = DEFAULT_STAGE_CHUNK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Two-kernel path (paper K1 ACS + K2 traceback)."""
+    T, _, B = blocks.y.shape
+    y = _pad_axis(blocks.y, 2, LANE_TILE)  # lane padding
+    y = _pad_axis(y, 0, stage_chunk)  # stage padding (end; BM-neutral zeros)
+    Bp = y.shape[2]
+
+    sp, pm = acs_forward_pallas(y, code, stage_chunk=stage_chunk, interpret=interpret)
+    if start_policy == "argmin":
+        # argmin over the padded-final metrics: the zero-BM pad stages only
+        # min-merge paths, so the padded walk recovers a true argmin state at
+        # stage T and the full padded survivor history must be walked.
+        start = jnp.argmin(pm, axis=0).astype(jnp.int32)
+    else:
+        # state-0 start is defined at the true final stage T: walking the
+        # zero-symbol pad stages from state 0 would land on an arbitrary
+        # state at T, so drop the pad-stage survivors before the traceback.
+        sp = sp[:T]
+        start = jnp.zeros((Bp,), jnp.int32)
+    bits = traceback_pallas(
+        sp,
+        start,
+        code,
+        decode_start=blocks.decode_start,
+        n_decode=blocks.n_decode,
+        interpret=interpret,
+    )
+    return bits[:, :B]
+
+
+@register_backend("fused")
+def _decode_fused(
+    blocks: FramedBlocks,
+    code: ConvCode,
+    *,
+    start_policy: str = "zero",
+    stage_chunk: int = DEFAULT_STAGE_CHUNK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Single-kernel path (ACS + in-VMEM traceback, bit-packed output) —
+    see kernels/fused.py; unpacked here for API compatibility."""
+    from .fused import pbvd_fused_pallas
+
+    if start_policy != "zero":
+        raise NotImplementedError(
+            "fused backend tracebacks from state 0; use start_policy='zero'"
+        )
+    B = blocks.y.shape[2]
+    nd = -(-blocks.n_decode // 32) * 32  # kernel emits 32-bit words
+    y = _pad_axis(blocks.y, 2, LANE_TILE)
+    packed = pbvd_fused_pallas(
+        y, code, decode_start=blocks.decode_start, n_decode=nd, interpret=interpret
+    )
+    shifts = jnp.arange(32, dtype=jnp.int32)
+    bits = ((packed[:, None, :] >> shifts[None, :, None]) & 1).reshape(-1, y.shape[2])
+    return bits[: blocks.n_decode, :B].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -60,11 +165,11 @@ def pbvd_decode_blocks(
     decode_start: int,
     n_decode: int,
     start_policy: Literal["zero", "argmin"] = "zero",
-    backend: Literal["pallas", "ref", "fused"] = "pallas",
+    backend: str = "pallas",
     stage_chunk: int = DEFAULT_STAGE_CHUNK,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Decode framed parallel blocks.
+    """Decode framed parallel blocks via the named backend.
 
     y_blocks: (T, R, B) soft symbols (float32, or int8/int16 for the exact
         quantized path), framed [trunc M | decode D | traceback L].
@@ -72,47 +177,11 @@ def pbvd_decode_blocks(
     """
     if interpret is None:
         interpret = default_interpret()
-    T, R, B = y_blocks.shape
-
-    if backend == "fused":
-        # single-kernel path (ACS + in-VMEM traceback, bit-packed output) —
-        # see kernels/fused.py; unpacked here for API compatibility.
-        from repro.core.quantize import unpack_bits
-        from .fused import pbvd_fused_pallas
-
-        nd = -(-n_decode // 32) * 32  # kernel emits 32-bit words
-        y = _pad_axis(y_blocks, 2, LANE_TILE)
-        packed = pbvd_fused_pallas(
-            y, code, decode_start=decode_start, n_decode=nd, interpret=interpret
-        )
-        shifts = jnp.arange(32, dtype=jnp.int32)
-        bits = ((packed[:, None, :] >> shifts[None, :, None]) & 1).reshape(-1, y.shape[2])
-        return bits[:n_decode, :B].astype(jnp.int32)
-
-    if backend == "ref":
-        sp, pm = _ref.acs_forward_ref(y_blocks, code)
-        if start_policy == "argmin":
-            start = jnp.argmin(pm, axis=0).astype(jnp.int32)
-        else:
-            start = jnp.zeros((B,), jnp.int32)
-        return _ref.traceback_ref(sp, code, decode_start, n_decode, start)
-
-    # ---- pallas path: pad lanes and stages --------------------------------------
-    y = _pad_axis(y_blocks, 2, LANE_TILE)  # lane padding
-    y = _pad_axis(y, 0, stage_chunk)  # stage padding (end; BM-neutral zeros)
-    Bp = y.shape[2]
-
-    sp, pm = acs_forward_pallas(y, code, stage_chunk=stage_chunk, interpret=interpret)
-    if start_policy == "argmin":
-        start = jnp.argmin(pm, axis=0).astype(jnp.int32)
-    else:
-        start = jnp.zeros((Bp,), jnp.int32)
-    bits = traceback_pallas(
-        sp,
-        start,
+    fn = get_backend(backend)
+    return fn(
+        FramedBlocks(y_blocks, decode_start, n_decode),
         code,
-        decode_start=decode_start,
-        n_decode=n_decode,
+        start_policy=start_policy,
+        stage_chunk=stage_chunk,
         interpret=interpret,
     )
-    return bits[:, :B]

@@ -1,0 +1,84 @@
+"""Backend registry for the PBVD decode kernels.
+
+Every backend is a function with the common contract
+
+    backend(blocks: FramedBlocks, code: ConvCode, *,
+            start_policy, stage_chunk, interpret) -> (n_decode, B) int32 bits
+
+registered under a name via ``@register_backend("name")``. The engine (and
+the legacy ``pbvd_decode_blocks`` wrapper) dispatch through :func:`get_backend`
+— adding a backend is one decorated function, not another ``if`` branch in
+the decode path (DESIGN.md §1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Protocol
+
+__all__ = [
+    "FramedBlocks",
+    "DecodeBackend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FramedBlocks:
+    """The framed parallel-block batch every backend consumes.
+
+    ``y``: (T, R, B) soft symbols (float32, or int8/int16 for the exact
+    quantized path), framed [truncation M | decode D | traceback L].
+    ``decode_start``/``n_decode``: the decode region within the T stages.
+    """
+
+    y: Any  # jnp.ndarray (possibly a tracer)
+    decode_start: int
+    n_decode: int
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return tuple(self.y.shape)
+
+
+class DecodeBackend(Protocol):
+    def __call__(
+        self,
+        blocks: FramedBlocks,
+        code: Any,
+        *,
+        start_policy: str,
+        stage_chunk: int,
+        interpret: bool,
+    ) -> Any: ...
+
+
+_BACKENDS: dict[str, DecodeBackend] = {}
+
+
+def register_backend(name: str) -> Callable[[DecodeBackend], DecodeBackend]:
+    """Decorator: register a decode backend under ``name``."""
+
+    def deco(fn: DecodeBackend) -> DecodeBackend:
+        if name in _BACKENDS:
+            raise ValueError(f"backend {name!r} already registered")
+        _BACKENDS[name] = fn
+        fn.backend_name = name  # type: ignore[attr-defined]
+        return fn
+
+    return deco
+
+
+def get_backend(name: str) -> DecodeBackend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown decode backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_BACKENDS)

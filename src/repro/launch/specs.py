@@ -21,7 +21,7 @@ __all__ = ["Cell", "make_cell", "iter_cells", "SKIPS", "ENCODER_CTX", "input_spe
 
 ENCODER_CTX = 4096  # enc-dec: encoder context length for decode shapes
 
-# long_500k runs only for sub-quadratic-attention archs (DESIGN.md §4)
+# long_500k runs only for sub-quadratic-attention archs (DESIGN.md §7)
 LONG_OK = {"mixtral-8x22b", "jamba-v0.1-52b", "rwkv6-3b"}
 
 SKIPS: dict[tuple[str, str], str] = {}

@@ -1,0 +1,153 @@
+"""Test bootstrap: a lightweight ``hypothesis`` fallback.
+
+The property-based tests use a small slice of the hypothesis API
+(``given`` / ``settings`` / a handful of strategies). When the real package
+is installed (see requirements-dev.txt) it is used as-is; otherwise this shim
+provides deterministic pseudo-random sampling with the same decorator surface
+so the suite collects and runs without the dependency.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+try:  # pragma: no cover - prefer the real thing when available
+    import hypothesis  # noqa: F401
+except ImportError:
+    import numpy as _np
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+        def filter(self, pred, _tries=1000):
+            def draw(rng):
+                for _ in range(_tries):
+                    v = self._draw(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate too restrictive")
+
+            return _Strategy(draw)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    def _lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements._draw(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    def _tuples(*strats):
+        return _Strategy(lambda rng: tuple(s._draw(rng) for s in strats))
+
+    def _just(value):
+        return _Strategy(lambda rng: value)
+
+    def _composite(fn):
+        @functools.wraps(fn)
+        def builder(*args, **kwargs):
+            return _Strategy(
+                lambda rng: fn(lambda strat: strat._draw(rng), *args, **kwargs)
+            )
+
+        return builder
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    def _given(*strategies):
+        def deco(fn):
+            inner = fn
+            settings_kw = getattr(fn, "_hyp_settings", {})
+
+            @functools.wraps(inner)
+            def run(*args, **kwargs):
+                kw = dict(settings_kw)
+                kw.update(getattr(run, "_hyp_settings", {}))
+                n = kw.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.adler32(
+                    f"{inner.__module__}.{inner.__qualname__}".encode()
+                )
+                rng = _np.random.default_rng(seed)
+                for _ in range(n):
+                    vals = [s._draw(rng) for s in strategies]
+                    inner(*args, *vals, **kwargs)
+
+            # hide the strategy-filled params from pytest's fixture resolution
+            run.__dict__.pop("__wrapped__", None)
+            params = list(inspect.signature(inner).parameters.values())
+            kept = params[: len(params) - len(strategies)]
+            run.__signature__ = inspect.Signature(kept)
+            run.hypothesis = types.SimpleNamespace(inner_test=inner)
+            return run
+
+        return deco
+
+    class _settings:
+        """Decorator shim: @settings(max_examples=..., deadline=...)."""
+
+        HealthCheck = None
+
+        def __init__(self, **kwargs):
+            self.kwargs = kwargs
+
+        def __call__(self, fn):
+            # tolerate either decorator order around @given
+            existing = dict(getattr(fn, "_hyp_settings", {}))
+            existing.update(self.kwargs)
+            fn._hyp_settings = existing
+            return fn
+
+    def _assume(condition):
+        if not condition:
+            raise AssertionError("assumption failed (shim treats assume as assert)")
+
+    class _HealthCheck:
+        too_slow = "too_slow"
+        data_too_large = "data_too_large"
+        filter_too_much = "filter_too_much"
+
+        @classmethod
+        def all(cls):
+            return [cls.too_slow, cls.data_too_large, cls.filter_too_much]
+
+    _st_mod = types.ModuleType("hypothesis.strategies")
+    _st_mod.integers = _integers
+    _st_mod.booleans = _booleans
+    _st_mod.floats = _floats
+    _st_mod.sampled_from = _sampled_from
+    _st_mod.lists = _lists
+    _st_mod.tuples = _tuples
+    _st_mod.just = _just
+    _st_mod.composite = _composite
+
+    _hyp_mod = types.ModuleType("hypothesis")
+    _hyp_mod.given = _given
+    _hyp_mod.settings = _settings
+    _hyp_mod.assume = _assume
+    _hyp_mod.HealthCheck = _HealthCheck
+    _hyp_mod.strategies = _st_mod
+    _hyp_mod.__version__ = "0.0-shim"
+    _hyp_mod.__is_shim__ = True
+
+    sys.modules["hypothesis"] = _hyp_mod
+    sys.modules["hypothesis.strategies"] = _st_mod

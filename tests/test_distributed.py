@@ -13,6 +13,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess-per-test; excluded from tier-1 runs
+
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 

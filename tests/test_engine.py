@@ -1,0 +1,190 @@
+"""DecoderEngine: backend registry parity and the stateful streaming API.
+
+Acceptance tests for the unified decode path:
+  * ref == pallas == fused bit-exact through the engine, across ≥2 codes
+    and ≥2 punctured rates;
+  * a 100-chunk streaming session decodes bit-exact to the one-shot decode;
+  * the legacy wrappers (`decode_stream`) route through the engine unchanged.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.channel import transmit
+from repro.core.codespec import get_code_spec
+from repro.core.encoder import encode_jax, terminate
+from repro.core.engine import DecoderEngine
+from repro.core.pbvd import PBVDConfig, decode_stream
+from repro.kernels.ops import available_backends, get_backend, register_backend
+
+
+def _tx_stream(name, n, ebn0_db, seed):
+    spec = get_code_spec(name)
+    rng = np.random.default_rng(seed)
+    bits = terminate(rng.integers(0, 2, n), spec.code)
+    coded = encode_jax(jnp.asarray(bits), spec.code)
+    tx = spec.puncture_stream(coded) if spec.is_punctured else coded
+    y = transmit(jax.random.PRNGKey(seed), tx, ebn0_db, spec.rate)
+    return spec, bits[:n], y
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_lists_all_backends():
+    assert {"ref", "pallas", "fused"} <= set(available_backends())
+    with pytest.raises(KeyError):
+        get_backend("no-such-backend")
+
+
+def test_registry_rejects_duplicates():
+    with pytest.raises(ValueError):
+        register_backend("ref")(lambda *a, **k: None)
+
+
+def test_unknown_backend_through_config():
+    _, _, y = _tx_stream("ccsds", 64, 6.0, 0)
+    cfg = PBVDConfig(D=64, L=16, q=8, backend="nope")
+    with pytest.raises(KeyError):
+        DecoderEngine(cfg).decode(y, 64)
+
+
+# ---------------------------------------------------------------------------
+# backend parity: 2 codes × (unpunctured + 2 punctured rates) × 3 backends
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("q", [8, None], ids=["int8", "f32"])
+@pytest.mark.parametrize(
+    "name",
+    ["ccsds", "ccsds-2/3", "ccsds-5/6", "is95-k9", "is95-k9-2/3", "is95-k9-5/6"],
+)
+def test_backend_parity_through_engine(name, q):
+    if q is None and name not in ("ccsds", "is95-k9-5/6"):
+        pytest.skip("float path covered on a code+rate subsample")
+    spec, bits, y = _tx_stream(name, 256, 4.5, seed=2)
+    outs = {}
+    for backend in ("ref", "pallas", "fused"):
+        cfg = PBVDConfig(spec=spec, D=64, L=16, q=q, backend=backend)
+        outs[backend] = np.asarray(DecoderEngine(cfg).decode(y, 256))
+    np.testing.assert_array_equal(outs["ref"], outs["pallas"])
+    np.testing.assert_array_equal(outs["ref"], outs["fused"])
+
+
+def test_fused_rejects_argmin_start():
+    _, _, y = _tx_stream("ccsds", 64, 6.0, 0)
+    cfg = PBVDConfig(D=64, L=16, q=8, backend="fused", start_policy="argmin")
+    with pytest.raises(NotImplementedError):
+        DecoderEngine(cfg).decode(y, 64)
+
+
+def test_wrapper_matches_engine():
+    spec, bits, y = _tx_stream("ccsds", 512, 4.0, seed=3)
+    cfg = PBVDConfig(D=128, L=24, q=8, backend="ref")
+    a = np.asarray(decode_stream(y, 512, cfg))
+    b = np.asarray(DecoderEngine(cfg).decode(y, 512))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# streaming sessions
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["ccsds", "ccsds-3/4"])
+def test_streaming_100_chunks_matches_one_shot(name):
+    """A 100-chunk session (random chunk sizes) is bit-exact to one-shot."""
+    spec, bits, y = _tx_stream(name, 3200, 4.0, seed=4)
+    cfg = PBVDConfig(spec=spec, D=64, L=16, q=8, backend="ref")
+    engine = DecoderEngine(cfg)
+    ref = np.asarray(engine.decode(y, 3200))
+
+    rng = np.random.default_rng(0)
+    ya = np.asarray(y)
+    cuts = np.sort(rng.choice(np.arange(1, len(ya)), 99, replace=False))
+    parts = np.split(ya, cuts)
+    assert len(parts) == 100
+
+    sess = engine.session()
+    outs = [sess.decode(c) for c in parts]
+    outs.append(sess.finish(3200))
+    got = np.concatenate(outs)
+    assert got.shape == ref.shape
+    np.testing.assert_array_equal(got, ref)
+    assert sess.bits_emitted == 3200
+    # the session actually streamed: bits were emitted before the last chunk
+    assert sum(len(o) for o in outs[:-1]) > 0
+
+
+def test_streaming_tiny_chunks_and_empty_calls():
+    spec, bits, y = _tx_stream("ccsds", 300, 5.0, seed=6)
+    cfg = PBVDConfig(spec=spec, D=64, L=16, q=8, backend="ref")
+    engine = DecoderEngine(cfg)
+    ref = np.asarray(engine.decode(y, 300))
+    sess = engine.session()
+    ya = np.asarray(y)
+    outs = []
+    for i in range(len(ya)):  # one symbol-row at a time
+        outs.append(sess.decode(ya[i : i + 1]))
+    outs.append(sess.decode(ya[:0]))  # empty chunk is a no-op
+    outs.append(sess.finish(300))
+    np.testing.assert_array_equal(np.concatenate(outs), ref)
+
+
+def test_streaming_punctured_phase_carries_across_chunks():
+    """Odd chunk sizes slice puncture periods mid-stage; the carried phase
+    must still reassemble the exact depunctured stream."""
+    spec, bits, y = _tx_stream("ccsds-5/6", 1280, 5.0, seed=7)
+    cfg = PBVDConfig(spec=spec, D=64, L=16, q=8, backend="ref")
+    engine = DecoderEngine(cfg)
+    ref = np.asarray(engine.decode(y, 1280))
+    sess = engine.session()
+    ya = np.asarray(y)
+    outs, i = [], 0
+    sizes = [1, 2, 3, 5, 7, 11, 13]  # deliberately misaligned with the period
+    k = 0
+    while i < len(ya):
+        n = sizes[k % len(sizes)]
+        outs.append(sess.decode(ya[i : i + n]))
+        i += n
+        k += 1
+    outs.append(sess.finish(1280))
+    np.testing.assert_array_equal(np.concatenate(outs), ref)
+
+
+def test_streaming_prequantized_int_chunks_match_one_shot():
+    """Integer chunks are pre-quantized: the session must not re-quantize
+    them (bit-exact vs engine.decode on the same int8 stream)."""
+    from repro.core.quantize import quantize_soft
+
+    spec, bits, y = _tx_stream("ccsds", 1024, 4.0, seed=9)
+    cfg = PBVDConfig(spec=spec, D=64, L=16, q=8, backend="ref")
+    engine = DecoderEngine(cfg)
+    yq = np.asarray(quantize_soft(y, 8))  # int8
+    ref = np.asarray(engine.decode(jnp.asarray(yq), 1024))
+    sess = engine.session()
+    outs = [sess.decode(c) for c in np.array_split(yq, 7)]
+    outs.append(sess.finish(1024))
+    np.testing.assert_array_equal(np.concatenate(outs), ref)
+    # mixing float chunks into an integer session is rejected
+    with pytest.raises(ValueError):
+        sess.decode(np.zeros((4, 2), np.float32))
+
+
+def test_streaming_punctured_rejects_full_rate_chunks():
+    """Punctured sessions consume the 1-D wire format only; a full-rate
+    chunk would desynchronize the carried puncture phase."""
+    spec = get_code_spec("ccsds-3/4")
+    cfg = PBVDConfig(spec=spec, D=64, L=16, q=8, backend="ref")
+    sess = DecoderEngine(cfg).session()
+    with pytest.raises(ValueError):
+        sess.decode(np.zeros((8, 2), np.float32))
+
+
+def test_streaming_session_is_reusable_via_fresh_sessions():
+    spec, bits, y = _tx_stream("ccsds", 256, 5.0, seed=8)
+    cfg = PBVDConfig(spec=spec, D=64, L=16, q=8, backend="ref")
+    engine = DecoderEngine(cfg)
+    ref = np.asarray(engine.decode(y, 256))
+    for _ in range(2):  # sessions are independent; engine is stateless
+        sess = engine.session()
+        out = np.concatenate([sess.decode(np.asarray(y)), sess.finish(256)])
+        np.testing.assert_array_equal(out, ref)

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the fast, single-process test suite (see ROADMAP.md).
+# The `slow` marker excludes the multi-device subprocess tests
+# (tests/test_distributed.py); run plain `pytest` for the full gate.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q -m "not slow" "$@"
