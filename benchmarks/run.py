@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV lines per the repo convention.
   fig4_ber          — paper Fig. 4 (BER vs Eb/N0 for L ∈ {14,28,42})
   table4_comparison — paper Table IV (cross-work TNDC normalization)
   punctured_sweep   — beyond-paper: BER/throughput across punctured rates
+  batched_throughput — beyond-paper: multi-stream aggregate Mb/s
+                       (sequential vs decode_batch vs SessionPool)
 
 Roofline tables (assignment §Roofline) are produced by
 ``python -m repro.launch.roofline`` from the dry-run reports.
@@ -20,6 +22,7 @@ import time
 
 def main() -> None:
     from . import (
+        batched_throughput,
         fig4_ber,
         kernel_scaling,
         punctured_sweep,
@@ -27,7 +30,14 @@ def main() -> None:
         table4_comparison,
     )
 
-    for mod in (table3_throughput, kernel_scaling, fig4_ber, table4_comparison, punctured_sweep):
+    for mod in (
+        table3_throughput,
+        kernel_scaling,
+        fig4_ber,
+        table4_comparison,
+        punctured_sweep,
+        batched_throughput,
+    ):
         t0 = time.perf_counter()
         mod.main()
         print(

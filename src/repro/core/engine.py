@@ -17,7 +17,13 @@ One engine method covers what used to be three copy-pasted pipelines
 * **streaming** is :meth:`DecoderEngine.session`: a session carries the
   inter-block overlap tail (up to ``D + L`` received stages, ``2L`` of which
   overlap the neighbouring blocks) across successive ``decode()`` calls so an
-  unbounded stream decodes chunk-by-chunk, bit-exact to the one-shot decode.
+  unbounded stream decodes chunk-by-chunk, bit-exact to the one-shot decode;
+* **batching across streams** is :meth:`DecoderEngine.decode_batch`: the
+  framed blocks of many independent streams are concatenated along the lane
+  axis (a flattened frames × blocks packing, ``FramedBlocks.frame_counts``)
+  and decoded in ONE kernel launch — blocks are mutually independent, so the
+  per-frame bits are bit-identical to sequential ``decode()`` calls while
+  short frames stop wasting the 128-lane tile.
 
 See DESIGN.md §1/§3 for the architecture and the streaming invariants.
 """
@@ -34,6 +40,11 @@ from .codespec import CodeSpec
 from .quantize import quantize_soft
 
 __all__ = ["DecoderEngine", "DecoderSession"]
+
+
+def _pow2_at_least(n: int) -> int:
+    """Smallest power of two ≥ n (the shared jit shape budget)."""
+    return 1 << max(0, n - 1).bit_length()
 
 
 class DecoderEngine:
@@ -64,6 +75,73 @@ class DecoderEngine:
         depunctured with BM-neutral zeros first. ``n_bits`` defaults to the
         number of full-rate stages in the stream.
         """
+        blocks, n_blocks, n_bits = self._frame_one(y, n_bits)
+        bits = self._decode_blocks(blocks, (n_blocks,), interpret)  # (D, n_blocks)
+        return jnp.transpose(bits).reshape(-1)[:n_bits]
+
+    # ------------------------------------------------------------------ batched
+    def decode_batch(
+        self,
+        ys,
+        n_bits_list=None,
+        *,
+        interpret: bool | None = None,
+    ) -> list:
+        """Decode many independent streams in ONE kernel launch.
+
+        ``ys`` is a sequence of streams, each in any form :meth:`decode`
+        accepts; ``n_bits_list`` gives each stream's payload length (or
+        ``None`` entries / ``None`` for the stage-count default). Every
+        stream is framed exactly like :meth:`decode`, the per-frame block
+        axes are concatenated into one flattened frames × blocks lane axis
+        (padded to the shared power-of-two shape budget so recurring batch
+        geometries reuse jit shapes), and the single launch's output is
+        unpacked and trimmed per frame.
+
+        Returns a list of (n_bits_i,) int32 arrays, bit-identical per frame
+        to sequential ``decode()`` calls — parallel blocks never interact,
+        and pad lanes are zero-symbol blocks the backends trim.
+        """
+        ys = list(ys)
+        if not ys:
+            return []
+        if n_bits_list is None:
+            n_bits_list = [None] * len(ys)
+        if len(n_bits_list) != len(ys):
+            raise ValueError(
+                f"n_bits_list has {len(n_bits_list)} entries for {len(ys)} streams"
+            )
+        uniform = self._frame_uniform(ys, n_bits_list)
+        if uniform is not None:
+            packed, frame_counts, bit_counts = uniform
+        else:
+            framed = [self._frame_one(y, nb) for y, nb in zip(ys, n_bits_list)]
+            frame_counts = tuple(k for _, k, _ in framed)
+            bit_counts = tuple(nb for _, _, nb in framed)
+            packed = jnp.concatenate([b for b, _, _ in framed], axis=2)
+        total = packed.shape[2]
+        budget = _pow2_at_least(total)
+        if budget > total:
+            packed = jnp.pad(packed, ((0, 0), (0, 0), (0, budget - total)))
+        bits = self._decode_blocks(packed, frame_counts, interpret)  # (D, total)
+        if uniform is not None:  # equal frames: one reshape, not S slices
+            S, k, n_bits = len(ys), frame_counts[0], bit_counts[0]
+            rows = jnp.transpose(bits.reshape(-1, S, k), (1, 2, 0))
+            return list(rows.reshape(S, -1)[:, :n_bits])
+        out, lo = [], 0
+        for k, n_bits in zip(frame_counts, bit_counts):
+            out.append(jnp.transpose(bits[:, lo : lo + k]).reshape(-1)[:n_bits])
+            lo += k
+        return out
+
+    # ------------------------------------------------------------------ streaming
+    def session(self, *, interpret: bool | None = None) -> "DecoderSession":
+        """Open a stateful streaming session (see :class:`DecoderSession`)."""
+        return DecoderSession(self, interpret=interpret)
+
+    # ------------------------------------------------------------------ internals
+    def _frame_one(self, y, n_bits: int | None):
+        """Depuncture, quantize and frame one stream → (blocks, n_blocks, n_bits)."""
         from .pbvd import frame_stream
 
         y = self._to_full_rate(y)
@@ -73,16 +151,39 @@ class DecoderEngine:
         n_blocks = -(-n_bits // cfg.D)
         if cfg.q is not None and not jnp.issubdtype(y.dtype, jnp.integer):
             y = quantize_soft(y, cfg.q)  # already-integer inputs are pre-quantized
-        blocks = frame_stream(y, cfg.D, cfg.L, n_blocks)
-        bits = self._decode_blocks(blocks, n_blocks, interpret)  # (D, n_blocks)
-        return jnp.transpose(bits).reshape(-1)[:n_bits]
+        return frame_stream(y, cfg.D, cfg.L, n_blocks), n_blocks, n_bits
 
-    # ------------------------------------------------------------------ streaming
-    def session(self, *, interpret: bool | None = None) -> "DecoderSession":
-        """Open a stateful streaming session (see :class:`DecoderSession`)."""
-        return DecoderSession(self, interpret=interpret)
+    def _frame_uniform(self, ys, n_bits_list):
+        """Fast path for same-shape stream fleets (the serving common case).
 
-    # ------------------------------------------------------------------ internals
+        Stacks the streams, quantizes once, and vmaps the one-stream
+        ``frame_stream`` over the fleet — the same framing code path as
+        ``decode()``, but O(1) kernel dispatches instead of O(n_streams).
+        Returns ``None`` when streams differ in shape/dtype/length (the
+        general path handles those).
+        """
+        from .pbvd import frame_stream
+
+        if len(ys) < 2:
+            return None
+        shapes = {tuple(np.shape(y)) for y in ys}
+        dtypes = {np.dtype(getattr(y, "dtype", np.float64)) for y in ys}
+        if len(shapes) != 1 or len(dtypes) != 1 or len(set(n_bits_list)) != 1:
+            return None
+        y0 = jnp.stack([self._to_full_rate(jnp.asarray(y)) for y in ys])  # (S, n, R)
+        S, n_sym, R = y0.shape
+        n_bits = n_bits_list[0] if n_bits_list[0] is not None else n_sym
+        cfg = self.cfg
+        k = -(-n_bits // cfg.D)
+        if cfg.q is not None and not jnp.issubdtype(y0.dtype, jnp.integer):
+            y0 = quantize_soft(y0, cfg.q)
+        blocks = jax.vmap(
+            lambda s: frame_stream(s, cfg.D, cfg.L, k)
+        )(y0)  # (S, T, R, k)
+        T = cfg.D + 2 * cfg.L
+        packed = jnp.transpose(blocks, (1, 2, 0, 3)).reshape(T, R, S * k)
+        return packed, (k,) * S, (n_bits,) * S
+
     def _to_full_rate(self, y):
         if y.ndim == 1:
             if not self.spec.is_punctured:
@@ -95,8 +196,15 @@ class DecoderEngine:
             raise ValueError(f"stream rank {y.shape[-1]} != code R {self.spec.code.R}")
         return y
 
-    def _decode_blocks(self, blocks, n_real: int, interpret: bool | None):
-        """(T, R, n_blocks) framed symbols → (D, n_real) bits, optionally sharded."""
+    def _decode_blocks(
+        self, blocks, frame_counts: tuple[int, ...], interpret: bool | None
+    ):
+        """(T, R, B) framed symbols → (D, sum(frame_counts)) bits.
+
+        ``frame_counts`` is the per-frame real-block layout along the lane
+        axis (one entry for plain decodes); lanes beyond the real blocks are
+        padding the backend trims. Optionally shards the lane axis.
+        """
         cfg = self.cfg
         if self.mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
@@ -107,7 +215,7 @@ class DecoderEngine:
                 blocks = jnp.pad(blocks, ((0, 0), (0, 0), (0, pad)))
             sharding = NamedSharding(self.mesh, P(None, None, self.block_axes))
             blocks = jax.lax.with_sharding_constraint(blocks, sharding)
-        bits = pbvd_decode_blocks(
+        return pbvd_decode_blocks(
             blocks,
             self.spec.code,
             decode_start=cfg.L,
@@ -115,8 +223,8 @@ class DecoderEngine:
             start_policy=cfg.start_policy,
             backend=cfg.backend,
             interpret=interpret,
+            frame_counts=frame_counts,
         )
-        return bits[:, :n_real]
 
 
 class DecoderSession:
@@ -130,6 +238,13 @@ class DecoderSession:
 
     The carried state between calls is the overlap tail (at most ``D + L``
     stages of soft symbols), the puncture phase, and the block counter.
+
+    Internally the launch is split into three phases so a
+    :class:`~repro.launch.serve_decoder.SessionPool` can pack the ready
+    blocks of many sessions into one launch: :meth:`ready_blocks` (how far
+    the stream can decode), :meth:`_frame_ready` (build the framed window,
+    no launch), and :meth:`_commit` (advance the block counter, trim the
+    buffer). ``decode()``/``finish()`` compose them with a solo launch.
     """
 
     def __init__(self, engine: DecoderEngine, *, interpret: bool | None = None):
@@ -157,10 +272,8 @@ class DecoderSession:
         (possibly empty): ``D`` bits per parallel block whose window is now
         complete.
         """
-        self._ingest(np.asarray(chunk))
-        D, L = self.cfg.D, self.cfg.L
-        n_ready = max(0, (self._stages_complete() - L) // D)
-        out = self._decode_upto(n_ready)
+        self.ingest(chunk)
+        out = self._decode_upto(self.ready_blocks())
         self.bits_emitted += len(out)
         return out
 
@@ -180,6 +293,15 @@ class DecoderSession:
         out = out[: max(0, n_bits - prior)]
         self.bits_emitted += len(out)
         return out
+
+    def ingest(self, chunk) -> None:
+        """Buffer a chunk without decoding (used by pooled sessions)."""
+        self._ingest(np.asarray(chunk))
+
+    def ready_blocks(self) -> int:
+        """Highest block index b1 such that blocks [0, b1) are decodable now."""
+        D, L = self.cfg.D, self.cfg.L
+        return max(self._blocks_done, (self._stages_complete() - L) // D)
 
     # ---- internals -----------------------------------------------------------------
     def _stages_complete(self) -> int:
@@ -232,20 +354,22 @@ class DecoderSession:
                 f"(punctured={self.spec.is_punctured})"
             )
 
-    def _decode_upto(self, b1: int) -> np.ndarray:
-        """Decode blocks [blocks_done, b1); advance and trim the buffer."""
+    def _frame_ready(self, b1: int, k_lanes: int | None = None) -> jnp.ndarray:
+        """Frame blocks [blocks_done, b1) → (T, R, k_lanes) quantized symbols.
+
+        Does NOT advance the session (see :meth:`_commit`). ``k_lanes`` pads
+        the lane axis (extra lanes are zero-symbol blocks); default is the
+        real count ``b1 - blocks_done``.
+        """
         b0 = self._blocks_done
         k = b1 - b0
-        if k <= 0:
-            return np.zeros((0,), np.int32)
+        if k_lanes is None:
+            k_lanes = k
         cfg = self.cfg
         D, L, R = cfg.D, cfg.L, self.spec.code.R
         T = D + 2 * L
-        # pad the block count to a power of two so chunked streams hit a
-        # bounded set of jit shapes; pad-block bits are discarded below
-        k_pad = 1 << (k - 1).bit_length()
         lo = b0 * D - L  # global first stage of the combined window
-        hi_pad = (b0 + k_pad) * D + L  # exclusive global end incl. padding
+        hi_pad = (b0 + k_lanes) * D + L  # exclusive global end incl. padding
         left_pad = max(0, -lo)  # only the very first block reaches stage -L
         s0 = max(lo, 0) - self._base
         need = hi_pad - max(lo, 0)
@@ -265,15 +389,29 @@ class DecoderSession:
             y = jnp.asarray(w)
             if cfg.q is not None:
                 y = quantize_soft(y, cfg.q)
-        idx = np.arange(T)[:, None] + np.arange(k_pad)[None, :] * D
-        blocks = jnp.transpose(y[idx], (0, 2, 1))  # (T, R, k_pad)
-        bits = self.engine._decode_blocks(blocks, k, self._interpret)  # (D, k)
-        out = np.asarray(jnp.transpose(bits), dtype=np.int32).reshape(-1)
+        idx = np.arange(T)[:, None] + np.arange(k_lanes)[None, :] * D
+        return jnp.transpose(y[idx], (0, 2, 1))  # (T, R, k_lanes)
 
+    def _commit(self, b1: int) -> None:
+        """Advance past blocks [blocks_done, b1); trim the consumed buffer."""
+        D, L = self.cfg.D, self.cfg.L
         self._blocks_done = b1
         new_base = max(0, b1 * D - L)
         drop = new_base - self._base
         if drop > 0:
             self._buf = self._buf[drop:]
             self._base = new_base
+
+    def _decode_upto(self, b1: int) -> np.ndarray:
+        """Decode blocks [blocks_done, b1) in one solo launch; advance."""
+        b0 = self._blocks_done
+        k = b1 - b0
+        if k <= 0:
+            return np.zeros((0,), np.int32)
+        # pad the block count to a power of two so chunked streams hit a
+        # bounded set of jit shapes; pad-lane bits are trimmed by the backend
+        blocks = self._frame_ready(b1, k_lanes=_pow2_at_least(k))
+        bits = self.engine._decode_blocks(blocks, (k,), self._interpret)  # (D, k)
+        out = np.asarray(jnp.transpose(bits), dtype=np.int32).reshape(-1)
+        self._commit(b1)
         return out

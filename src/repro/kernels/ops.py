@@ -3,13 +3,17 @@
 The three decode backends (``ref`` pure-jnp oracle, ``pallas`` two-kernel
 K1/K2 path, ``fused`` single-kernel ACS+traceback) register themselves here
 via the :mod:`repro.kernels.registry` decorator, each receiving the common
-``FramedBlocks``/``ConvCode`` contract. ``pbvd_decode_blocks`` is the jit'd
-dispatcher the engine calls; it contains no per-backend branches.
+``FramedBlocks``/``ConvCode`` contract. ``pbvd_decode_blocks`` is the
+dispatcher the engine calls; it validates the backend/start-policy pair
+eagerly (a ``ValueError`` before any tracing) and contains no per-backend
+branches.
 
 Each backend adapter owns its shape plumbing (lane padding to 128, stage
 padding to the stage-chunk — end-padding with zero symbols is BM-neutral and
 keeps the state-0 walk stable, see tests), the traceback start-state policy,
-and the paper's packed-I/O transforms.
+and the paper's packed-I/O transforms. The lane axis may be a flattened
+frames × blocks packing (``FramedBlocks.frame_counts``); backends return
+exactly ``blocks.n_real_blocks`` lanes, trimming any pad lanes themselves.
 
 On CPU (this container) the Pallas kernels run in interpret mode; on TPU they
 compile natively. ``backend="ref"`` selects the pure-jnp oracle (which is
@@ -28,7 +32,13 @@ import jax.numpy as jnp
 from repro.core.trellis import ConvCode
 from . import ref as _ref
 from .acs import LANE_TILE, DEFAULT_STAGE_CHUNK, acs_forward_pallas
-from .registry import FramedBlocks, available_backends, get_backend, register_backend
+from .registry import (
+    FramedBlocks,
+    available_backends,
+    backend_start_policies,
+    get_backend,
+    register_backend,
+)
 from .traceback import traceback_pallas
 
 __all__ = [
@@ -38,6 +48,7 @@ __all__ = [
     "register_backend",
     "get_backend",
     "available_backends",
+    "backend_start_policies",
 ]
 
 
@@ -74,7 +85,8 @@ def _decode_ref(
         start = jnp.argmin(pm, axis=0).astype(jnp.int32)
     else:
         start = jnp.zeros((B,), jnp.int32)
-    return _ref.traceback_ref(sp, code, blocks.decode_start, blocks.n_decode, start)
+    bits = _ref.traceback_ref(sp, code, blocks.decode_start, blocks.n_decode, start)
+    return bits[:, : blocks.n_real_blocks]
 
 
 @register_backend("pallas")
@@ -87,7 +99,7 @@ def _decode_pallas(
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Two-kernel path (paper K1 ACS + K2 traceback)."""
-    T, _, B = blocks.y.shape
+    T = blocks.y.shape[0]
     y = _pad_axis(blocks.y, 2, LANE_TILE)  # lane padding
     y = _pad_axis(y, 0, stage_chunk)  # stage padding (end; BM-neutral zeros)
     Bp = y.shape[2]
@@ -112,10 +124,10 @@ def _decode_pallas(
         n_decode=blocks.n_decode,
         interpret=interpret,
     )
-    return bits[:, :B]
+    return bits[:, : blocks.n_real_blocks]
 
 
-@register_backend("fused")
+@register_backend("fused", start_policies=("zero",))
 def _decode_fused(
     blocks: FramedBlocks,
     code: ConvCode,
@@ -129,10 +141,11 @@ def _decode_fused(
     from .fused import pbvd_fused_pallas
 
     if start_policy != "zero":
-        raise NotImplementedError(
-            "fused backend tracebacks from state 0; use start_policy='zero'"
+        # direct backend callers bypass the dispatcher's eager check; fail
+        # loudly rather than silently decoding from state 0
+        raise ValueError(
+            "fused backend tracebacks from state 0 (start_policies=('zero',))"
         )
-    B = blocks.y.shape[2]
     nd = -(-blocks.n_decode // 32) * 32  # kernel emits 32-bit words
     y = _pad_axis(blocks.y, 2, LANE_TILE)
     packed = pbvd_fused_pallas(
@@ -140,7 +153,7 @@ def _decode_fused(
     )
     shifts = jnp.arange(32, dtype=jnp.int32)
     bits = ((packed[:, None, :] >> shifts[None, :, None]) & 1).reshape(-1, y.shape[2])
-    return bits[: blocks.n_decode, :B].astype(jnp.int32)
+    return bits[: blocks.n_decode, : blocks.n_real_blocks].astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -156,8 +169,36 @@ def _decode_fused(
         "backend",
         "stage_chunk",
         "interpret",
+        "n_real",
     ),
 )
+def _decode_blocks_jit(
+    y_blocks: jnp.ndarray,
+    code: ConvCode,
+    *,
+    decode_start: int,
+    n_decode: int,
+    start_policy: str,
+    backend: str,
+    stage_chunk: int,
+    interpret: bool,
+    n_real: int | None,
+) -> jnp.ndarray:
+    fn = get_backend(backend)
+    return fn(
+        FramedBlocks(
+            y_blocks,
+            decode_start,
+            n_decode,
+            (n_real,) if n_real is not None else None,
+        ),
+        code,
+        start_policy=start_policy,
+        stage_chunk=stage_chunk,
+        interpret=interpret,
+    )
+
+
 def pbvd_decode_blocks(
     y_blocks: jnp.ndarray,
     code: ConvCode,
@@ -168,20 +209,43 @@ def pbvd_decode_blocks(
     backend: str = "pallas",
     stage_chunk: int = DEFAULT_STAGE_CHUNK,
     interpret: bool | None = None,
+    frame_counts: tuple[int, ...] | None = None,
 ) -> jnp.ndarray:
     """Decode framed parallel blocks via the named backend.
 
     y_blocks: (T, R, B) soft symbols (float32, or int8/int16 for the exact
-        quantized path), framed [trunc M | decode D | traceback L].
-    Returns (n_decode, B) int32 decoded bits.
+        quantized path), framed [trunc M | decode D | traceback L]. The lane
+        axis may pack several frames (``frame_counts``, see
+        :class:`FramedBlocks`); trailing lanes beyond the real blocks are
+        padding.
+    Returns (n_decode, n_real_blocks) int32 decoded bits.
+
+    Backend and start-policy are validated *before* jit: an unknown backend
+    raises ``KeyError``, an unsupported start policy raises ``ValueError``
+    eagerly (never a trace-time error from inside the kernel adapter).
+
+    Only the TOTAL real-lane count enters the jit cache key: lanes are
+    mutually independent and per-frame unpacking happens host-side, so the
+    per-frame split is collapsed to ``sum(frame_counts)`` at this boundary —
+    a pool whose sessions contribute varying block counts reuses one
+    compiled launch per padded shape instead of retracing per composition.
     """
     if interpret is None:
         interpret = default_interpret()
-    fn = get_backend(backend)
-    return fn(
-        FramedBlocks(y_blocks, decode_start, n_decode),
+    supported = backend_start_policies(backend)  # KeyError for unknown backend
+    if start_policy not in supported:
+        raise ValueError(
+            f"backend {backend!r} does not support start_policy={start_policy!r}; "
+            f"supported: {supported}"
+        )
+    return _decode_blocks_jit(
+        y_blocks,
         code,
+        decode_start=decode_start,
+        n_decode=n_decode,
         start_policy=start_policy,
+        backend=backend,
         stage_chunk=stage_chunk,
         interpret=interpret,
+        n_real=sum(frame_counts) if frame_counts is not None else None,
     )

@@ -3,12 +3,25 @@
 Every backend is a function with the common contract
 
     backend(blocks: FramedBlocks, code: ConvCode, *,
-            start_policy, stage_chunk, interpret) -> (n_decode, B) int32 bits
+            start_policy, stage_chunk, interpret) -> (n_decode, B_real) int32 bits
 
 registered under a name via ``@register_backend("name")``. The engine (and
 the legacy ``pbvd_decode_blocks`` wrapper) dispatch through :func:`get_backend`
 — adding a backend is one decorated function, not another ``if`` branch in
 the decode path (DESIGN.md §1).
+
+Contract details (DESIGN.md §3):
+
+* The lane axis of ``FramedBlocks.y`` may be a flattened **frames × blocks**
+  packing: the blocks of several independent streams ride one launch,
+  concatenated along the lane dimension, with ``frame_counts`` recording how
+  many real blocks each frame contributed. Every backend must return exactly
+  ``blocks.n_real_blocks`` lanes — trailing pad lanes (power-of-two shape
+  budget, lane-tile rounding, shard padding) are the backend's to trim.
+* Backends declare which traceback start policies they implement via
+  ``register_backend(name, start_policies=...)``; the dispatcher validates
+  the policy *before* entering jit so unsupported combinations fail with an
+  eager ``ValueError`` instead of a trace-time error.
 """
 
 from __future__ import annotations
@@ -22,6 +35,7 @@ __all__ = [
     "register_backend",
     "get_backend",
     "available_backends",
+    "backend_start_policies",
 ]
 
 
@@ -32,15 +46,53 @@ class FramedBlocks:
     ``y``: (T, R, B) soft symbols (float32, or int8/int16 for the exact
     quantized path), framed [truncation M | decode D | traceback L].
     ``decode_start``/``n_decode``: the decode region within the T stages.
+    ``frame_counts``: when the lane axis packs several frames (independent
+    streams), the number of real blocks each frame contributed, in lane
+    order; ``None`` means a single frame spanning every lane. Lanes beyond
+    ``sum(frame_counts)`` are padding and must be trimmed by the backend.
     """
 
     y: Any  # jnp.ndarray (possibly a tracer)
     decode_start: int
     n_decode: int
+    frame_counts: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        if self.frame_counts is not None:
+            if any(k <= 0 for k in self.frame_counts):
+                raise ValueError(
+                    f"frame_counts must be positive, got {self.frame_counts}"
+                )
+            if sum(self.frame_counts) > self.y.shape[2]:
+                raise ValueError(
+                    f"frame_counts {self.frame_counts} sum to "
+                    f"{sum(self.frame_counts)} > lane axis {self.y.shape[2]}"
+                )
 
     @property
     def shape(self) -> tuple[int, int, int]:
         return tuple(self.y.shape)
+
+    @property
+    def n_frames(self) -> int:
+        return 1 if self.frame_counts is None else len(self.frame_counts)
+
+    @property
+    def n_real_blocks(self) -> int:
+        """Real (non-pad) lanes; what every backend must return."""
+        if self.frame_counts is None:
+            return int(self.y.shape[2])
+        return sum(self.frame_counts)
+
+    def frame_slices(self) -> list[slice]:
+        """Lane-axis slice of each packed frame, in order."""
+        if self.frame_counts is None:
+            return [slice(0, int(self.y.shape[2]))]
+        out, lo = [], 0
+        for k in self.frame_counts:
+            out.append(slice(lo, lo + k))
+            lo += k
+        return out
 
 
 class DecodeBackend(Protocol):
@@ -58,14 +110,21 @@ class DecodeBackend(Protocol):
 _BACKENDS: dict[str, DecodeBackend] = {}
 
 
-def register_backend(name: str) -> Callable[[DecodeBackend], DecodeBackend]:
-    """Decorator: register a decode backend under ``name``."""
+def register_backend(
+    name: str, *, start_policies: tuple[str, ...] = ("zero", "argmin")
+) -> Callable[[DecodeBackend], DecodeBackend]:
+    """Decorator: register a decode backend under ``name``.
+
+    ``start_policies`` declares which traceback start policies the backend
+    implements; the dispatcher rejects others eagerly (pre-jit).
+    """
 
     def deco(fn: DecodeBackend) -> DecodeBackend:
         if name in _BACKENDS:
             raise ValueError(f"backend {name!r} already registered")
         _BACKENDS[name] = fn
         fn.backend_name = name  # type: ignore[attr-defined]
+        fn.start_policies = tuple(start_policies)  # type: ignore[attr-defined]
         return fn
 
     return deco
@@ -78,6 +137,11 @@ def get_backend(name: str) -> DecodeBackend:
         raise KeyError(
             f"unknown decode backend {name!r}; available: {available_backends()}"
         ) from None
+
+
+def backend_start_policies(name: str) -> tuple[str, ...]:
+    """Start policies the named backend supports."""
+    return getattr(get_backend(name), "start_policies", ("zero", "argmin"))
 
 
 def available_backends() -> list[str]:

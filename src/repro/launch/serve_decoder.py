@@ -1,19 +1,32 @@
-"""Serving driver: stateful streaming decode through the DecoderEngine.
+"""Serving driver: streaming decode through the DecoderEngine + SessionPool.
 
+    # one stream, one session (the PR-1 shape):
     PYTHONPATH=src python -m repro.launch.serve_decoder --code ccsds-3/4 \
         --chunk-bits 4096 --n-chunks 100 --ebn0 4.0 --backend ref
+
+    # many concurrent streams coalesced into batched launches:
+    PYTHONPATH=src python -m repro.launch.serve_decoder --streams 16 \
+        --chunk-bits 1024 --n-chunks 50 --backend ref
 
 Modeled on `repro.launch.serve`: a long-lived session object carries the
 decoder state (the inter-block overlap tail + puncture phase) across chunks,
 so an unbounded symbol stream decodes chunk-by-chunk — the serving shape of
-the paper's multi-stream pipelining (§IV-D). Reports per-chunk latency,
-aggregate throughput, and end-to-end BER against the transmitted payload.
+the paper's multi-stream pipelining (§IV-D).
+
+The :class:`SessionPool` is the multi-tenant layer on top: many concurrent
+:class:`~repro.core.engine.DecoderSession`s register with the pool, chunks
+are *fed* (buffered) per session, and :meth:`SessionPool.step` coalesces
+every session's ready blocks — grouped by launch compatibility — into ONE
+``pbvd_decode_blocks`` launch per group (DESIGN.md §3). Each session keeps
+its own overlap tail and puncture phase; only the kernel launch is shared,
+so per-session bits stay bit-exact to a solo session.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+from collections import defaultdict
 
 import jax
 import jax.numpy as jnp
@@ -22,52 +35,198 @@ import numpy as np
 from repro.core.channel import transmit
 from repro.core.codespec import available_code_specs, get_code_spec
 from repro.core.encoder import encode_jax, terminate
-from repro.core.engine import DecoderEngine
+from repro.core.engine import DecoderEngine, DecoderSession, _pow2_at_least
 from repro.core.pbvd import PBVDConfig
 from repro.kernels.ops import available_backends
 
+__all__ = ["SessionPool", "PooledSession", "main"]
 
-def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--code", default="ccsds", choices=available_code_specs())
-    ap.add_argument("--backend", default="ref", choices=available_backends())
-    ap.add_argument("--d", type=int, default=512, help="decode block length D")
-    ap.add_argument("--l", type=int, default=42, help="traceback depth L")
-    ap.add_argument("--q", type=int, default=8, help="quantization bits (0 = float32)")
-    ap.add_argument("--chunk-bits", type=int, default=4096, help="payload bits per chunk")
-    ap.add_argument("--n-chunks", type=int, default=100)
-    ap.add_argument("--ebn0", type=float, default=4.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
 
-    spec = get_code_spec(args.code)
-    cfg = PBVDConfig(
-        spec=spec,
-        D=args.d,
-        L=args.l,
-        q=args.q or None,
-        backend=args.backend,
-    )
-    engine = DecoderEngine(cfg)
-    n_bits = args.chunk_bits * args.n_chunks
+class PooledSession:
+    """One stream's handle inside a :class:`SessionPool`.
 
-    # ---- transmit the whole stream once (the "wire") ------------------------------
-    rng = np.random.default_rng(args.seed)
+    ``feed`` buffers a chunk (no launch); decoded bits arrive on the next
+    :meth:`SessionPool.step` and are drained with :meth:`take`. ``finish``
+    flushes the zero-padded tail exactly like ``DecoderSession.finish``.
+    """
+
+    def __init__(self, pool: "SessionPool", session: DecoderSession):
+        self._pool = pool
+        self._session = session
+        self._queue: list[np.ndarray] = []
+        self.bits_emitted = 0
+
+    def feed(self, chunk) -> None:
+        """Buffer a chunk of received symbols (same wire formats as
+        ``DecoderSession.decode``); decoding happens at ``pool.step()``."""
+        self._session.ingest(chunk)
+
+    def take(self) -> np.ndarray:
+        """Drain every decoded bit delivered by pool steps so far."""
+        if not self._queue:
+            return np.zeros((0,), np.int32)
+        out = np.concatenate(self._queue)
+        self._queue.clear()
+        return out
+
+    def finish(self, n_bits: int | None = None) -> np.ndarray:
+        """Flush the remaining blocks (zero-padded tail) and return the tail
+        bits, trimmed so take()+finish() totals ``n_bits``. Undelivered
+        step() output must be drained with :meth:`take` first."""
+        s = self._session
+        D = s.cfg.D
+        if n_bits is None:
+            n_bits = s._base + len(s._buf)
+        n_blocks = -(-n_bits // D)
+        prior = s._blocks_done * D
+        if n_blocks > s._blocks_done:
+            tail = self._pool._launch([(self, n_blocks)])[0]
+        else:
+            tail = np.zeros((0,), np.int32)
+        tail = tail[: max(0, n_bits - prior)]
+        self.bits_emitted += len(tail)
+        return tail
+
+    def _deliver(self, bits: np.ndarray) -> None:
+        self._queue.append(bits)
+        self.bits_emitted += len(bits)
+
+
+class SessionPool:
+    """Coalesce the ready blocks of many concurrent sessions into batched
+    kernel launches.
+
+    Sessions are grouped by *launch compatibility* — the key is
+    ``(mother code, D, L, backend, start_policy, window dtype, interpret,
+    mesh)``: everything that shapes or parameterizes the kernel launch.
+    Code specs that share a mother code but differ in puncturing land in the
+    same group (puncturing only affects ingest, never the launch), as do
+    sessions with different payload lengths or chunk cadences.
+
+    One :meth:`step` builds, per group, a single flattened frames × blocks
+    lane axis from each member's ready window (``FramedBlocks.frame_counts``
+    records the per-session block counts), pads the total to the shared
+    power-of-two shape budget, launches once, and scatters the per-frame
+    bits back to each session — which then advances its own overlap tail
+    exactly as a solo launch would have.
+    """
+
+    def __init__(self):
+        self._members: list[PooledSession] = []
+        self.launches = 0  # batched launches issued (for reporting/tests)
+
+    # ---- membership ----------------------------------------------------------------
+    def open(self, engine: DecoderEngine, *, interpret: bool | None = None) -> PooledSession:
+        """Open a pooled streaming session on ``engine``."""
+        ps = PooledSession(self, engine.session(interpret=interpret))
+        self._members.append(ps)
+        return ps
+
+    def close(self, ps: PooledSession) -> None:
+        """Remove a session from the pool (it keeps its buffered state)."""
+        self._members.remove(ps)
+
+    def __len__(self) -> int:
+        return len(self._members)
+
+    # ---- scheduling ----------------------------------------------------------------
+    def pending_blocks(self) -> int:
+        """Blocks decodable right now across every member."""
+        return sum(
+            ps._session.ready_blocks() - ps._session._blocks_done
+            for ps in self._members
+        )
+
+    def step(self) -> int:
+        """Decode every ready block in the pool; returns the block count.
+
+        Sessions with no complete window are skipped; compatible sessions
+        share one launch per group.
+        """
+        groups: dict[tuple, list[tuple[PooledSession, int]]] = defaultdict(list)
+        for ps in self._members:
+            s = ps._session
+            b1 = s.ready_blocks()
+            if b1 > s._blocks_done:
+                groups[self._group_key(s)].append((ps, b1))
+        total = 0
+        for entries in groups.values():
+            outs = self._launch(entries)
+            for (ps, _), bits in zip(entries, outs):
+                ps._deliver(bits)
+                total += len(bits) // ps._session.cfg.D
+        return total
+
+    # ---- internals -----------------------------------------------------------------
+    @staticmethod
+    def _group_key(s: DecoderSession) -> tuple:
+        cfg = s.cfg
+        if s._int_dtype is not None:
+            dt = np.dtype(s._int_dtype).str
+        elif cfg.q is not None:
+            dt = "int8" if cfg.q <= 8 else "int16"
+        else:
+            dt = "float32"
+        mesh = s.engine.mesh
+        return (
+            cfg.code,
+            cfg.D,
+            cfg.L,
+            cfg.backend,
+            cfg.start_policy,
+            dt,
+            s._interpret,
+            id(mesh) if mesh is not None else None,
+        )
+
+    def _launch(self, entries: list[tuple[PooledSession, int]]) -> list[np.ndarray]:
+        """One batched launch for ``entries`` = [(session, decode-up-to-b1)].
+
+        Returns each entry's decoded bits (whole blocks, forward order) and
+        commits each session's overlap tail past the decoded blocks.
+        """
+        frames, counts = [], []
+        for ps, b1 in entries:
+            s = ps._session
+            frames.append(s._frame_ready(b1))
+            counts.append(b1 - s._blocks_done)
+        packed = jnp.concatenate(frames, axis=2) if len(frames) > 1 else frames[0]
+        total = packed.shape[2]
+        budget = _pow2_at_least(total)
+        if budget > total:
+            packed = jnp.pad(packed, ((0, 0), (0, 0), (0, budget - total)))
+        lead = entries[0][0]._session
+        bits = lead.engine._decode_blocks(packed, tuple(counts), lead._interpret)
+        self.launches += 1
+        outs, lo = [], 0
+        for (ps, b1), k in zip(entries, counts):
+            sub = np.asarray(
+                jnp.transpose(bits[:, lo : lo + k]), dtype=np.int32
+            ).reshape(-1)
+            ps._session._commit(b1)
+            outs.append(sub)
+            lo += k
+        return outs
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+def _make_stream(spec, n_bits: int, ebn0: float, seed: int):
+    rng = np.random.default_rng(seed)
     payload = rng.integers(0, 2, n_bits)
     coded = encode_jax(jnp.asarray(terminate(payload, spec.code)), spec.code)
     tx = spec.puncture_stream(coded) if spec.is_punctured else coded
-    y = np.asarray(transmit(jax.random.PRNGKey(args.seed), tx, args.ebn0, spec.rate))
-    print(
-        f"[serve_decoder] {spec.name}: K={spec.code.K}, rate={spec.rate:.3f}, "
-        f"D={cfg.D}, L={cfg.L}, q={cfg.q}, backend={cfg.backend}; "
-        f"{n_bits} payload bits in {args.n_chunks} chunks at Eb/N0={args.ebn0} dB"
-    )
+    y = np.asarray(transmit(jax.random.PRNGKey(seed), tx, ebn0, spec.rate))
+    return payload, y
 
-    # ---- stream it through a session ---------------------------------------------
+
+def _serve_single(engine, spec, cfg, args) -> None:
+    n_bits = args.chunk_bits * args.n_chunks
+    payload, y = _make_stream(spec, n_bits, args.ebn0, args.seed)
     sess = engine.session()
     bounds = np.linspace(0, len(y), args.n_chunks + 1).astype(int)
-    decoded = []
-    lat_ms = []
+    decoded, lat_ms = [], []
     t0 = time.perf_counter()
     for lo, hi in zip(bounds[:-1], bounds[1:]):
         t1 = time.perf_counter()
@@ -85,6 +244,89 @@ def main() -> None:
         f"p99={np.percentile(lat, 99):.1f} ms"
     )
     print(f"[serve_decoder] BER = {ber:.2e} ({int(ber * n_bits)} errors)")
+
+
+def _serve_pooled(engine, spec, cfg, args) -> None:
+    n_bits = args.chunk_bits * args.n_chunks
+    streams = [
+        _make_stream(spec, n_bits, args.ebn0, args.seed + i)
+        for i in range(args.streams)
+    ]
+    pool = SessionPool()
+    handles = [pool.open(engine) for _ in streams]
+    bounds = np.linspace(0, len(streams[0][1]), args.n_chunks + 1).astype(int)
+    outs = [[] for _ in streams]
+    step_ms = []
+    t0 = time.perf_counter()
+    for lo, hi in zip(bounds[:-1], bounds[1:]):  # one ingest round, one step
+        for (_, y), h in zip(streams, handles):
+            h.feed(y[lo:hi])
+        t1 = time.perf_counter()
+        pool.step()
+        step_ms.append((time.perf_counter() - t1) * 1e3)
+        for i, h in enumerate(handles):
+            outs[i].append(h.take())
+    for i, h in enumerate(handles):
+        outs[i].append(h.finish(n_bits))
+    dt = time.perf_counter() - t0
+
+    total_bits = n_bits * args.streams
+    errors = sum(
+        int(np.sum(np.concatenate(o) != p)) for o, (p, _) in zip(outs, streams)
+    )
+    steps = np.array(step_ms)
+    print(
+        f"[serve_decoder] {args.streams} streams × {n_bits} bits in {dt*1e3:.0f} ms "
+        f"→ aggregate {total_bits/dt/1e6:.2f} Mbps; "
+        f"{pool.launches} batched launches "
+        f"({args.n_chunks * args.streams} chunks fed); "
+        f"step p50={np.percentile(steps, 50):.1f} ms "
+        f"p99={np.percentile(steps, 99):.1f} ms"
+    )
+    print(
+        f"[serve_decoder] BER = {errors/total_bits:.2e} ({errors} errors "
+        f"over {total_bits} bits)"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--code", default="ccsds", choices=available_code_specs())
+    ap.add_argument("--backend", default="ref", choices=available_backends())
+    ap.add_argument("--d", type=int, default=512, help="decode block length D")
+    ap.add_argument("--l", type=int, default=42, help="traceback depth L")
+    ap.add_argument("--q", type=int, default=8, help="quantization bits (0 = float32)")
+    ap.add_argument("--chunk-bits", type=int, default=4096, help="payload bits per chunk")
+    ap.add_argument("--n-chunks", type=int, default=100)
+    ap.add_argument(
+        "--streams",
+        type=int,
+        default=1,
+        help="concurrent streams; >1 coalesces sessions through a SessionPool",
+    )
+    ap.add_argument("--ebn0", type=float, default=4.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    spec = get_code_spec(args.code)
+    cfg = PBVDConfig(
+        spec=spec,
+        D=args.d,
+        L=args.l,
+        q=args.q or None,
+        backend=args.backend,
+    )
+    engine = DecoderEngine(cfg)
+    print(
+        f"[serve_decoder] {spec.name}: K={spec.code.K}, rate={spec.rate:.3f}, "
+        f"D={cfg.D}, L={cfg.L}, q={cfg.q}, backend={cfg.backend}; "
+        f"{args.streams} stream(s) × {args.chunk_bits * args.n_chunks} payload bits "
+        f"in {args.n_chunks} chunks at Eb/N0={args.ebn0} dB"
+    )
+    if args.streams > 1:
+        _serve_pooled(engine, spec, cfg, args)
+    else:
+        _serve_single(engine, spec, cfg, args)
 
 
 if __name__ == "__main__":

@@ -78,6 +78,10 @@ except ImportError:
         def deco(fn):
             inner = fn
             settings_kw = getattr(fn, "_hyp_settings", {})
+            # strategies fill the LAST parameters (hypothesis convention);
+            # bind them by name so pytest may pass fixtures/params as kwargs
+            all_params = list(inspect.signature(inner).parameters)
+            strat_names = all_params[len(all_params) - len(strategies):]
 
             @functools.wraps(inner)
             def run(*args, **kwargs):
@@ -89,8 +93,8 @@ except ImportError:
                 )
                 rng = _np.random.default_rng(seed)
                 for _ in range(n):
-                    vals = [s._draw(rng) for s in strategies]
-                    inner(*args, *vals, **kwargs)
+                    vals = {nm: s._draw(rng) for nm, s in zip(strat_names, strategies)}
+                    inner(*args, **vals, **kwargs)
 
             # hide the strategy-filled params from pytest's fixture resolution
             run.__dict__.pop("__wrapped__", None)

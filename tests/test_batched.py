@@ -1,0 +1,257 @@
+"""Batched multi-stream decoding: decode_batch, lane packing, SessionPool.
+
+Acceptance tests for the frames × blocks packing layer:
+  * ``decode_batch`` is bit-identical per frame to sequential ``decode()``
+    calls for every backend (uniform and mixed-length fleets, punctured and
+    pre-quantized streams);
+  * a 64-stream × 1024-bit batched ref decode issues exactly ONE
+    ``pbvd_decode_blocks`` launch (counting test);
+  * a SessionPool coalesces the ready blocks of many concurrent sessions —
+    grouped by launch compatibility — into single launches while every
+    session stays bit-exact to its solo one-shot decode.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core.engine as engine_mod
+from repro.core.channel import transmit
+from repro.core.codespec import get_code_spec
+from repro.core.encoder import encode_jax, terminate
+from repro.core.engine import DecoderEngine
+from repro.core.pbvd import PBVDConfig
+from repro.core.quantize import quantize_soft
+from repro.kernels.registry import FramedBlocks
+from repro.launch.serve_decoder import SessionPool
+
+
+def _tx_stream(name, n, ebn0_db, seed):
+    spec = get_code_spec(name)
+    rng = np.random.default_rng(seed)
+    bits = terminate(rng.integers(0, 2, n), spec.code)
+    coded = encode_jax(jnp.asarray(bits), spec.code)
+    tx = spec.puncture_stream(coded) if spec.is_punctured else coded
+    y = transmit(jax.random.PRNGKey(seed), tx, ebn0_db, spec.rate)
+    return spec, bits[:n], y
+
+
+# ---------------------------------------------------------------------------
+# FramedBlocks frame metadata
+# ---------------------------------------------------------------------------
+def test_framed_blocks_frame_metadata():
+    y = jnp.zeros((8, 2, 10))
+    fb = FramedBlocks(y, 2, 4, frame_counts=(3, 2, 4))
+    assert fb.n_frames == 3
+    assert fb.n_real_blocks == 9  # lane 9 is padding
+    assert fb.frame_slices() == [slice(0, 3), slice(3, 5), slice(5, 9)]
+    plain = FramedBlocks(y, 2, 4)
+    assert plain.n_frames == 1 and plain.n_real_blocks == 10
+    with pytest.raises(ValueError):
+        FramedBlocks(y, 2, 4, frame_counts=(8, 4))  # sum > lanes
+    with pytest.raises(ValueError):
+        FramedBlocks(y, 2, 4, frame_counts=(3, 0))  # empty frame
+
+
+# ---------------------------------------------------------------------------
+# decode_batch == sequential decode, per backend
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["ref", "pallas", "fused"])
+def test_decode_batch_matches_sequential_per_backend(backend):
+    spec, _, _ = _tx_stream("ccsds", 64, 5.0, 0)
+    cfg = PBVDConfig(spec=spec, D=64, L=16, q=8, backend=backend)
+    engine = DecoderEngine(cfg)
+    lengths = [96, 256, 96, 190]  # mixed → general path; repeated → same shapes
+    ys = [_tx_stream("ccsds", n, 4.5, 30 + i)[2] for i, n in enumerate(lengths)]
+    batch = engine.decode_batch(ys, lengths)
+    assert len(batch) == len(ys)
+    for y, n, b in zip(ys, lengths, batch):
+        np.testing.assert_array_equal(
+            np.asarray(b), np.asarray(engine.decode(y, n))
+        )
+
+
+@pytest.mark.parametrize("name", ["ccsds-3/4", "is95-k9-2/3"])
+def test_decode_batch_uniform_punctured(name):
+    """Equal-shape fleets take the stacked fast path; punctured wire
+    streams depuncture per frame exactly like decode()."""
+    spec, _, _ = _tx_stream(name, 128, 5.0, 0)
+    cfg = PBVDConfig(spec=spec, D=64, L=16, q=8, backend="ref")
+    engine = DecoderEngine(cfg)
+    ys = [_tx_stream(name, 128, 4.5, 60 + i)[2] for i in range(6)]
+    batch = engine.decode_batch(ys, [128] * 6)
+    for y, b in zip(ys, batch):
+        np.testing.assert_array_equal(
+            np.asarray(b), np.asarray(engine.decode(y, 128))
+        )
+
+
+def test_decode_batch_prequantized_int_streams():
+    spec, _, y = _tx_stream("ccsds", 256, 4.0, 1)
+    cfg = PBVDConfig(spec=spec, D=64, L=16, q=8, backend="ref")
+    engine = DecoderEngine(cfg)
+    ys = [np.asarray(quantize_soft(_tx_stream("ccsds", 256, 4.0, 70 + i)[2], 8))
+          for i in range(3)]
+    batch = engine.decode_batch(ys, [256] * 3)
+    for yq, b in zip(ys, batch):
+        np.testing.assert_array_equal(
+            np.asarray(b), np.asarray(engine.decode(jnp.asarray(yq), 256))
+        )
+
+
+def test_decode_batch_edge_cases():
+    spec, _, y = _tx_stream("ccsds", 64, 5.0, 0)
+    cfg = PBVDConfig(spec=spec, D=64, L=16, q=8, backend="ref")
+    engine = DecoderEngine(cfg)
+    assert engine.decode_batch([]) == []
+    # single-stream batch == decode
+    np.testing.assert_array_equal(
+        np.asarray(engine.decode_batch([y], [64])[0]),
+        np.asarray(engine.decode(y, 64)),
+    )
+    with pytest.raises(ValueError):
+        engine.decode_batch([y, y], [64])  # length mismatch
+
+
+# ---------------------------------------------------------------------------
+# the acceptance geometry: 64 streams × 1024 bits, ONE launch
+# ---------------------------------------------------------------------------
+def test_decode_batch_64x1024_single_launch(monkeypatch):
+    spec, _, _ = _tx_stream("ccsds", 64, 5.0, 0)
+    cfg = PBVDConfig(spec=spec, D=512, L=42, q=8, backend="ref")
+    engine = DecoderEngine(cfg)
+    ys = [_tx_stream("ccsds", 1024, 4.0, 100 + i)[2] for i in range(64)]
+
+    real = engine_mod.pbvd_decode_blocks
+    calls = []
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("frame_counts"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(engine_mod, "pbvd_decode_blocks", counting)
+    batch = engine.decode_batch(ys, [1024] * 64)
+    assert len(calls) == 1, f"expected one launch, saw {len(calls)}"
+    assert calls[0] == (2,) * 64  # 64 frames × 2 blocks of D=512
+    monkeypatch.setattr(engine_mod, "pbvd_decode_blocks", real)
+    for y, b in zip(ys, batch):
+        np.testing.assert_array_equal(
+            np.asarray(b), np.asarray(engine.decode(y, 1024))
+        )
+
+
+def test_frame_split_does_not_grow_jit_cache():
+    """Only the TOTAL lane count keys the launch cache: different per-frame
+    splits of the same padded shape must reuse one compiled entry (a pool
+    with varying chunk cadences would otherwise retrace every step)."""
+    from repro.kernels.ops import _decode_blocks_jit, pbvd_decode_blocks
+
+    code = get_code_spec("ccsds").code
+    y = jnp.zeros((56, 2, 4), jnp.int8)
+    kw = dict(decode_start=12, n_decode=32, backend="ref")
+    pbvd_decode_blocks(y, code, frame_counts=(4,), **kw)  # warm the entry
+    before = _decode_blocks_jit._cache_size()
+    for fc in [(1, 3), (2, 2), (3, 1), (1, 1, 2), (1, 1, 1, 1)]:
+        out = pbvd_decode_blocks(y, code, frame_counts=fc, **kw)
+        assert out.shape == (32, sum(fc))
+    assert _decode_blocks_jit._cache_size() == before
+
+
+# ---------------------------------------------------------------------------
+# SessionPool
+# ---------------------------------------------------------------------------
+def test_session_pool_mixed_specs_bit_exact():
+    """Concurrent sessions over mixed specs/rates, random chunk cadences:
+    every stream decodes bit-exact to its solo one-shot decode."""
+    names = ["ccsds", "ccsds-3/4", "ccsds-5/6", "is95-k9"]
+    engines, ys, refs = [], [], []
+    for i, name in enumerate(names):
+        spec, _, y = _tx_stream(name, 512, 4.5, 20 + i)
+        cfg = PBVDConfig(spec=spec, D=64, L=16, q=8, backend="ref")
+        eng = DecoderEngine(cfg)
+        engines.append(eng)
+        ys.append(np.asarray(y))
+        refs.append(np.asarray(eng.decode(y, 512)))
+
+    pool = SessionPool()
+    handles = [pool.open(e) for e in engines]
+    rng = np.random.default_rng(0)
+    pos = [0] * len(names)
+    outs = [[] for _ in names]
+    while any(p < len(y) for p, y in zip(pos, ys)):
+        for i, (y, h) in enumerate(zip(ys, handles)):
+            if pos[i] < len(y):
+                n = int(rng.integers(1, 180))
+                h.feed(y[pos[i] : pos[i] + n])
+                pos[i] += n
+        pool.step()
+        for i, h in enumerate(handles):
+            outs[i].append(h.take())
+    for i, h in enumerate(handles):
+        outs[i].append(h.finish(512))
+    for i, name in enumerate(names):
+        np.testing.assert_array_equal(np.concatenate(outs[i]), refs[i])
+        assert handles[i].bits_emitted == 512
+
+
+def test_session_pool_groups_compatible_sessions_into_one_launch():
+    """Sessions sharing (mother code, geometry, backend, dtype) share a
+    launch — including different punctured rates of one mother code."""
+    cfg_a = PBVDConfig(spec=get_code_spec("ccsds"), D=64, L=16, q=8, backend="ref")
+    cfg_b = PBVDConfig(spec=get_code_spec("ccsds-3/4"), D=64, L=16, q=8, backend="ref")
+    eng_a, eng_b = DecoderEngine(cfg_a), DecoderEngine(cfg_b)
+    _, _, ya = _tx_stream("ccsds", 256, 5.0, 1)
+    _, _, yb = _tx_stream("ccsds-3/4", 256, 5.0, 2)
+
+    pool = SessionPool()
+    ha1, ha2, hb = pool.open(eng_a), pool.open(eng_a), pool.open(eng_b)
+    ha1.feed(np.asarray(ya))
+    ha2.feed(np.asarray(ya))
+    hb.feed(np.asarray(yb))
+    assert pool.pending_blocks() > 0
+    n_blocks = pool.step()
+    assert pool.launches == 1  # all three coalesced (same mother code + geometry)
+    delivered = sum(len(h.take()) // 64 for h in (ha1, ha2, hb))
+    assert n_blocks == delivered > 0
+    # incompatible geometry → separate group
+    cfg_c = PBVDConfig(spec=get_code_spec("ccsds"), D=128, L=16, q=8, backend="ref")
+    hc = pool.open(DecoderEngine(cfg_c))
+    ha1.feed(np.asarray(ya))
+    hc.feed(np.asarray(ya))
+    pool.step()
+    assert pool.launches == 3  # one for the D=64 group, one for D=128
+
+
+def test_session_pool_int_and_float_sessions_do_not_mix():
+    cfg = PBVDConfig(spec=get_code_spec("ccsds"), D=64, L=16, q=8, backend="ref")
+    eng = DecoderEngine(cfg)
+    _, _, y = _tx_stream("ccsds", 256, 5.0, 3)
+    ya = np.asarray(y)
+    yq = np.asarray(quantize_soft(y, 8))
+    pool = SessionPool()
+    hf, hi = pool.open(eng), pool.open(eng)
+    hf.feed(ya)
+    hi.feed(yq)
+    pool.step()
+    assert pool.launches == 2  # float-fed and int-fed sessions split groups
+    ref = np.asarray(eng.decode(y, 256))
+    refq = np.asarray(eng.decode(jnp.asarray(yq), 256))
+    np.testing.assert_array_equal(
+        np.concatenate([hf.take(), hf.finish(256)]), ref
+    )
+    np.testing.assert_array_equal(
+        np.concatenate([hi.take(), hi.finish(256)]), refq
+    )
+
+
+def test_session_pool_close_and_empty_step():
+    cfg = PBVDConfig(spec=get_code_spec("ccsds"), D=64, L=16, q=8, backend="ref")
+    eng = DecoderEngine(cfg)
+    pool = SessionPool()
+    h = pool.open(eng)
+    assert len(pool) == 1
+    assert pool.step() == 0  # nothing buffered: no launches
+    assert pool.launches == 0
+    pool.close(h)
+    assert len(pool) == 0

@@ -1,0 +1,65 @@
+"""BER regression band: CCSDS ref decode at Eb/N0 = 4 dB.
+
+Guards against silent metric/tie-break regressions that no equivalence test
+can see (all backends would drift together). The seed's measured curve at
+4 dB, paper geometry (D=512, L=42, q=8):
+
+    soft-decision (8-bit)   ≈ 0          (0 errors / 32768 bits; true ~1e-5)
+    hard-decision (sign)    ≈ 3.5–4.3e-3
+    uncoded BPSK            = 1.25e-2
+
+A metric regression (wrong BM sign, broken tie-break, quantizer clipping)
+drags the soft curve toward the hard/uncoded levels — orders of magnitude
+above the band asserted here. The fixed PRNG keys keep the run
+deterministic, so the band is tight without flaking.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.ber import simulate_ber, uncoded_ber
+from repro.core.channel import transmit
+from repro.core.encoder import encode_jax
+from repro.core.engine import DecoderEngine
+from repro.core.pbvd import PBVDConfig
+
+GEOMETRY = dict(D=512, L=42, backend="ref")
+
+
+def _hard_decision_ber(seed: int, n_bits: int) -> float:
+    """Hard-decision (sign-only) Viterbi BER at 4 dB — the upper curve."""
+    cfg = PBVDConfig(q=None, **GEOMETRY)
+    engine = DecoderEngine(cfg)
+    key, kb, kn = jax.random.split(jax.random.PRNGKey(seed), 3)
+    bits = jax.random.bernoulli(kb, 0.5, (n_bits,)).astype(jnp.int32)
+    bits_t = jnp.concatenate([bits, jnp.zeros(cfg.code.v, jnp.int32)])
+    y = transmit(kn, encode_jax(bits_t, cfg.code), 4.0, 0.5)
+    dec = engine.decode(jnp.sign(y), n_bits + cfg.code.v)[:n_bits]
+    return float(jnp.mean(dec != bits))
+
+
+@pytest.mark.tier1
+def test_ber_4db_smoke():
+    """Tier-1 smoke: small sample, loose band (seed soft BER is 0 here)."""
+    n_bits = 1 << 13
+    soft = simulate_ber(jax.random.PRNGKey(0), 4.0, PBVDConfig(q=8, **GEOMETRY), n_bits=n_bits)
+    assert soft <= 1.3e-3, f"soft-decision BER regressed: {soft:.2e}"
+    hard = _hard_decision_ber(0, n_bits)
+    assert 2e-4 <= hard <= 1.2e-2, f"hard-decision BER out of band: {hard:.2e}"
+    assert soft < hard, "soft decoding must beat hard decoding at 4 dB"
+
+
+@pytest.mark.slow
+def test_ber_4db_full_band():
+    """Full regression band at the seed's sample size (32768 bits)."""
+    n_bits = 1 << 15
+    cfg = PBVDConfig(q=8, **GEOMETRY)
+    soft = simulate_ber(jax.random.PRNGKey(0), 4.0, cfg, n_bits=n_bits)
+    # the seed measures 0 errors; 10 errors (3e-4) is far outside noise for
+    # a correct decoder and far below any metric regression
+    assert soft <= 3e-4, f"soft-decision BER regressed: {soft:.2e}"
+    hard = _hard_decision_ber(0, n_bits)
+    assert 1e-3 <= hard <= 1e-2, f"hard-decision BER out of band: {hard:.2e}"
+    # the gap IS the curve shape: soft ≪ hard < uncoded
+    assert soft < hard < uncoded_ber(4.0)

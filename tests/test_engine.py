@@ -17,7 +17,12 @@ from repro.core.codespec import get_code_spec
 from repro.core.encoder import encode_jax, terminate
 from repro.core.engine import DecoderEngine
 from repro.core.pbvd import PBVDConfig, decode_stream
-from repro.kernels.ops import available_backends, get_backend, register_backend
+from repro.kernels.ops import (
+    available_backends,
+    backend_start_policies,
+    get_backend,
+    register_backend,
+)
 
 
 def _tx_stream(name, n, ebn0_db, seed):
@@ -37,6 +42,16 @@ def test_registry_lists_all_backends():
     assert {"ref", "pallas", "fused"} <= set(available_backends())
     with pytest.raises(KeyError):
         get_backend("no-such-backend")
+
+
+def test_registry_declares_start_policies():
+    """Backends advertise the traceback start policies they implement; the
+    dispatcher uses this to reject unsupported combos eagerly."""
+    assert set(backend_start_policies("ref")) == {"zero", "argmin"}
+    assert set(backend_start_policies("pallas")) == {"zero", "argmin"}
+    assert backend_start_policies("fused") == ("zero",)
+    with pytest.raises(KeyError):
+        backend_start_policies("no-such-backend")
 
 
 def test_registry_rejects_duplicates():
@@ -71,11 +86,24 @@ def test_backend_parity_through_engine(name, q):
     np.testing.assert_array_equal(outs["ref"], outs["fused"])
 
 
-def test_fused_rejects_argmin_start():
+def test_fused_rejects_argmin_start_eagerly():
+    """The unsupported policy fails with a clear ValueError BEFORE tracing
+    (never a NotImplementedError surfacing from inside jit)."""
     _, _, y = _tx_stream("ccsds", 64, 6.0, 0)
     cfg = PBVDConfig(D=64, L=16, q=8, backend="fused", start_policy="argmin")
-    with pytest.raises(NotImplementedError):
+    with pytest.raises(ValueError, match="start_policy"):
         DecoderEngine(cfg).decode(y, 64)
+    # direct backend callers (bypassing the dispatcher) also fail loudly
+    # rather than silently decoding from state 0
+    from repro.kernels.registry import FramedBlocks
+    from repro.core.trellis import CCSDS_27
+    import jax.numpy as jnp
+
+    blocks = FramedBlocks(jnp.zeros((96, 2, 4), jnp.int8), 16, 64)
+    with pytest.raises(ValueError):
+        get_backend("fused")(
+            blocks, CCSDS_27, start_policy="argmin", stage_chunk=64, interpret=True
+        )
 
 
 def test_wrapper_matches_engine():

@@ -1,0 +1,140 @@
+"""Property-based equivalence suite: backend parity + streaming invariance.
+
+Hypothesis-driven (the real package when installed, else the deterministic
+conftest shim) over random messages, noise realizations, geometries and
+chunkings:
+
+  * **backend-parity matrix**: for EVERY registered ``CodeSpec``, random
+    transmissions decode to identical bits through ``ref``/``pallas``/
+    ``fused`` × the start policies each backend supports (``argmin`` on the
+    backends that implement it; the ``fused`` backend's eager ``ValueError``
+    is asserted instead);
+  * **streaming fuzz**: any chunk partition of a stream — empty chunks,
+    1-symbol chunks, period-misaligned punctured chunks, float or
+    pre-quantized int — concatenates bit-exactly to the one-shot decode;
+  * **batched fuzz**: ``decode_batch`` over random mixed-length fleets is
+    bit-exact per frame to sequential decodes.
+
+``PROPERTY_MAX_EXAMPLES`` scales the example count (tools/run_property.sh
+raises it in CI; the in-suite default keeps tier-1 fast).
+"""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.channel import transmit
+from repro.core.codespec import available_code_specs, get_code_spec
+from repro.core.encoder import encode_jax, terminate
+from repro.core.engine import DecoderEngine
+from repro.core.pbvd import PBVDConfig
+from repro.core.quantize import quantize_soft
+from repro.kernels.ops import backend_start_policies
+
+MAX_EXAMPLES = int(os.environ.get("PROPERTY_MAX_EXAMPLES", "4"))
+BACKENDS = ("ref", "pallas", "fused")
+_COMMON = dict(max_examples=MAX_EXAMPLES, deadline=None)
+if not getattr(__import__("hypothesis"), "__is_shim__", False):
+    _COMMON["derandomize"] = True  # fixed-seed CI runs (real hypothesis only)
+
+
+def _tx(spec, n_bits, ebn0_db, seed):
+    rng = np.random.default_rng(seed)
+    bits = terminate(rng.integers(0, 2, n_bits), spec.code)
+    coded = encode_jax(jnp.asarray(bits), spec.code)
+    tx = spec.puncture_stream(coded) if spec.is_punctured else coded
+    return transmit(jax.random.PRNGKey(seed), tx, ebn0_db, spec.rate)
+
+
+# ---------------------------------------------------------------------------
+# backend-parity matrix over every registered CodeSpec
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", available_code_specs())
+@settings(**_COMMON)
+@given(
+    st.integers(24, 96),  # n_bits
+    st.integers(0, 2**16 - 1),  # seed
+    st.floats(3.0, 6.5),  # ebn0_db
+    st.sampled_from([8, None]),  # quantization
+    st.sampled_from(["zero", "argmin"]),  # start policy
+)
+def test_backend_parity_matrix(name, n_bits, seed, ebn0_db, q, policy):
+    spec = get_code_spec(name)
+    y = _tx(spec, n_bits, ebn0_db, seed)
+    outs = {}
+    for backend in BACKENDS:
+        cfg = PBVDConfig(
+            spec=spec, D=32, L=12, q=q, backend=backend, start_policy=policy
+        )
+        engine = DecoderEngine(cfg)
+        if policy not in backend_start_policies(backend):
+            with pytest.raises(ValueError):
+                engine.decode(y, n_bits)
+            continue
+        outs[backend] = np.asarray(engine.decode(y, n_bits))
+    assert len(outs) >= 2
+    for backend, bits in outs.items():
+        np.testing.assert_array_equal(
+            bits, outs["ref"], err_msg=f"{name}/{backend}/{policy} diverged"
+        )
+
+
+# ---------------------------------------------------------------------------
+# streaming fuzz: arbitrary chunk partitions == one-shot
+# ---------------------------------------------------------------------------
+@settings(**_COMMON)
+@given(
+    st.sampled_from(["ccsds", "ccsds-3/4", "ccsds-5/6", "is95-k9-2/3"]),
+    st.integers(0, 2**16 - 1),  # seed
+    st.booleans(),  # pre-quantized int session?
+)
+def test_streaming_random_partitions_match_one_shot(name, seed, prequantized):
+    spec = get_code_spec(name)
+    rng = np.random.default_rng(seed)
+    n_bits = int(rng.integers(150, 400))
+    cfg = PBVDConfig(spec=spec, D=32, L=12, q=8, backend="ref")
+    engine = DecoderEngine(cfg)
+    y = np.asarray(_tx(spec, n_bits, 4.0, seed))
+    if prequantized:
+        y = np.asarray(quantize_soft(jnp.asarray(y), 8))
+    ref = np.asarray(engine.decode(jnp.asarray(y), n_bits))
+
+    # random cut points; duplicates produce EMPTY chunks, and the forced
+    # leading cuts guarantee 1-symbol and period-misaligned chunks
+    n_cuts = int(rng.integers(3, 14))
+    cuts = np.sort(rng.integers(0, len(y) + 1, n_cuts))
+    cuts = np.unique(np.concatenate([[0, 1, min(3, len(y))], cuts]))
+    parts = np.split(y, cuts)  # np.split keeps empty leading/dup parts
+
+    sess = engine.session()
+    outs = [sess.decode(c) for c in parts]
+    outs.append(sess.finish(n_bits))
+    got = np.concatenate(outs)
+    np.testing.assert_array_equal(got, ref)
+    assert sess.bits_emitted == n_bits
+
+
+# ---------------------------------------------------------------------------
+# batched fuzz: decode_batch == sequential decode per frame
+# ---------------------------------------------------------------------------
+@settings(**_COMMON)
+@given(
+    st.sampled_from(["ccsds", "ccsds-5/6", "lte-1/3"]),
+    st.integers(0, 2**16 - 1),  # seed
+    st.lists(st.integers(20, 180), min_size=2, max_size=5),  # frame lengths
+)
+def test_decode_batch_random_fleets(name, seed, lengths):
+    spec = get_code_spec(name)
+    cfg = PBVDConfig(spec=spec, D=32, L=12, q=8, backend="ref")
+    engine = DecoderEngine(cfg)
+    ys = [_tx(spec, n, 4.5, seed + i) for i, n in enumerate(lengths)]
+    batch = engine.decode_batch(ys, lengths)
+    for y, n, b in zip(ys, lengths, batch):
+        np.testing.assert_array_equal(
+            np.asarray(b), np.asarray(engine.decode(y, n))
+        )

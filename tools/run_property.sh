@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Property-based verify: the hypothesis equivalence suite at CI depth.
+# Runs tests/test_property.py with a raised example count and (when the
+# real hypothesis package is installed) derandomized, fixed-seed draws —
+# the conftest shim is deterministic by construction. Override the count:
+#   PROPERTY_MAX_EXAMPLES=100 tools/run_property.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export PROPERTY_MAX_EXAMPLES="${PROPERTY_MAX_EXAMPLES:-25}"
+exec python -m pytest -q tests/test_property.py "$@"
