@@ -68,9 +68,10 @@ def run(
     reps: int = 3,
     ebn0: float = 4.0,
     with_pool: bool = True,
+    metric_mode: str = "f32",
 ) -> list[dict]:
     spec = get_code_spec(code)
-    cfg = PBVDConfig(spec=spec, backend=backend, **TABLE3)
+    cfg = PBVDConfig(spec=spec, backend=backend, metric_mode=metric_mode, **TABLE3)
     engine = DecoderEngine(cfg)
     rows = []
     for fb in frame_bits:
@@ -91,6 +92,7 @@ def run(
 
             row = dict(
                 backend=backend,
+                metric_mode=metric_mode,
                 n_streams=ns,
                 frame_bits=fb,
                 seq_mbps=round(total / dt_seq / 1e6, 2),
@@ -123,12 +125,17 @@ def main(argv=None):
     ap.add_argument("--frame-bits", type=int, nargs="+", default=[256, 1024, 4096])
     ap.add_argument("--backend", default="ref")
     ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument(
+        "--metric-mode", default="f32", choices=["f32", "i16", "i8"],
+        help="path-metric pipeline for every launch in the sweep",
+    )
     args = ap.parse_args(argv if argv is not None else [])
     rows = run(
         tuple(args.streams),
         tuple(args.frame_bits),
         backend=args.backend,
         reps=args.reps,
+        metric_mode=args.metric_mode,
     )
     for r in rows:
         extra = ",".join(f"{k}={v}" for k, v in r.items())

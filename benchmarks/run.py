@@ -9,6 +9,13 @@ Prints ``name,us_per_call,derived`` CSV lines per the repo convention.
   punctured_sweep   — beyond-paper: BER/throughput across punctured rates
   batched_throughput — beyond-paper: multi-stream aggregate Mb/s
                        (sequential vs decode_batch vs SessionPool)
+  metric_sweep      — beyond-paper: folded-vs-full BM + f32/i16/i8
+                       metric-mode decoded-bits/s (writes BENCH_*.json)
+
+``--metric-mode`` runs ONLY the metric sweep (the folded/quantized
+hot-path numbers), e.g. the CI benchmark-smoke job runs
+
+    python benchmarks/run.py --metric-mode --out BENCH_pr.json --smoke
 
 Roofline tables (assignment §Roofline) are produced by
 ``python -m repro.launch.roofline`` from the dry-run reports.
@@ -16,27 +23,30 @@ Roofline tables (assignment §Roofline) are produced by
 
 from __future__ import annotations
 
+import argparse
+import importlib
 import sys
 import time
+from pathlib import Path
 
 
-def main() -> None:
-    from . import (
-        batched_throughput,
-        fig4_ber,
-        kernel_scaling,
-        punctured_sweep,
-        table3_throughput,
-        table4_comparison,
-    )
+def _sibling(name: str):
+    """Import a sibling benchmark module whether run as a script or -m."""
+    if __package__:
+        return importlib.import_module(f".{name}", __package__)
+    sys.path.insert(0, str(Path(__file__).resolve().parent))
+    return importlib.import_module(name)
 
+
+def _run_all() -> None:
     for mod in (
-        table3_throughput,
-        kernel_scaling,
-        fig4_ber,
-        table4_comparison,
-        punctured_sweep,
-        batched_throughput,
+        _sibling("table3_throughput"),
+        _sibling("kernel_scaling"),
+        _sibling("fig4_ber"),
+        _sibling("table4_comparison"),
+        _sibling("punctured_sweep"),
+        _sibling("batched_throughput"),
+        _sibling("metric_sweep"),
     ):
         t0 = time.perf_counter()
         mod.main()
@@ -44,6 +54,37 @@ def main() -> None:
             f"# {mod.__name__.split('.')[-1]} finished in {time.perf_counter()-t0:.1f}s",
             file=sys.stderr,
         )
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--metric-mode",
+        action="store_true",
+        help="run only the metric-pipeline sweep (folded BM + f32/i16/i8)",
+    )
+    ap.add_argument("--out", default=None, help="write BENCH_*.json (metric sweep)")
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny geometry for CI: fewer blocks/reps, same code paths",
+    )
+    args = ap.parse_args(argv)
+
+    if (args.out or args.smoke) and not args.metric_mode:
+        ap.error("--out/--smoke only apply to the metric sweep; add --metric-mode")
+    if args.metric_mode:
+        metric_sweep = _sibling("metric_sweep")
+
+        n_blocks = (8,) if args.smoke else (64, 512)
+        rows = metric_sweep.run(n_blocks, reps=1 if args.smoke else 3)
+        for r in rows:
+            print("metric_sweep," + ",".join(f"{k}={v}" for k, v in r.items()))
+        if args.out:
+            metric_sweep.write_bench_json(rows, args.out)
+            print(f"# wrote {args.out}", file=sys.stderr)
+        return
+    _run_all()
 
 
 if __name__ == "__main__":

@@ -37,7 +37,6 @@ import jax.numpy as jnp
 
 from repro.kernels.ops import pbvd_decode_blocks
 from .codespec import CodeSpec
-from .quantize import quantize_soft
 
 __all__ = ["DecoderEngine", "DecoderSession"]
 
@@ -149,8 +148,8 @@ class DecoderEngine:
             n_bits = int(y.shape[0])
         cfg = self.cfg
         n_blocks = -(-n_bits // cfg.D)
-        if cfg.q is not None and not jnp.issubdtype(y.dtype, jnp.integer):
-            y = quantize_soft(y, cfg.q)  # already-integer inputs are pre-quantized
+        if cfg.effective_q is not None and not jnp.issubdtype(y.dtype, jnp.integer):
+            y = cfg.quantize(y)  # already-integer inputs are pre-quantized
         return frame_stream(y, cfg.D, cfg.L, n_blocks), n_blocks, n_bits
 
     def _frame_uniform(self, ys, n_bits_list):
@@ -175,8 +174,8 @@ class DecoderEngine:
         n_bits = n_bits_list[0] if n_bits_list[0] is not None else n_sym
         cfg = self.cfg
         k = -(-n_bits // cfg.D)
-        if cfg.q is not None and not jnp.issubdtype(y0.dtype, jnp.integer):
-            y0 = quantize_soft(y0, cfg.q)
+        if cfg.effective_q is not None and not jnp.issubdtype(y0.dtype, jnp.integer):
+            y0 = cfg.quantize(y0)
         blocks = jax.vmap(
             lambda s: frame_stream(s, cfg.D, cfg.L, k)
         )(y0)  # (S, T, R, k)
@@ -224,6 +223,7 @@ class DecoderEngine:
             backend=cfg.backend,
             interpret=interpret,
             frame_counts=frame_counts,
+            metric_mode=cfg.metric_mode,
         )
 
 
@@ -387,8 +387,8 @@ class DecoderSession:
             y = jnp.asarray(w.astype(self._int_dtype))
         else:
             y = jnp.asarray(w)
-            if cfg.q is not None:
-                y = quantize_soft(y, cfg.q)
+            if cfg.effective_q is not None:
+                y = cfg.quantize(y)
         idx = np.arange(T)[:, None] + np.arange(k_lanes)[None, :] * D
         return jnp.transpose(y[idx], (0, 2, 1))  # (T, R, k_lanes)
 

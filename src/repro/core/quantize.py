@@ -23,6 +23,11 @@ __all__ = [
     "unpack_bits",
     "u1_bytes",
     "u2_bytes",
+    "pm_spread_bound",
+    "max_symbol_bits",
+    "metric_dtype_max",
+    "metric_mode_qmax",
+    "norm_interval",
 ]
 
 
@@ -31,13 +36,17 @@ def quantize_soft(y: jnp.ndarray, q: int = 8, scale: float | None = None) -> jnp
 
     ``scale`` defaults to mapping |y| = 4σ-ish dynamic range; for unit-energy
     BPSK ±1 with noise, scale = (2^(q-1)-1) / 4.0 keeps clipping negligible.
+
+    Clipping is SYMMETRIC at ±(2^(q-1)-1): the folded branch-metric path
+    negates quantized symbols in-register, and the two's-complement minimum
+    (-2^(q-1)) has no negation in q bits — admitting it would silently wrap.
     """
     if q < 2 or q > 16:
         raise ValueError("q must be in [2, 16]")
     qmax = (1 << (q - 1)) - 1
     if scale is None:
         scale = qmax / 4.0
-    z = jnp.clip(jnp.round(y * scale), -qmax - 1, qmax)
+    z = jnp.clip(jnp.round(y * scale), -qmax, qmax)
     dtype = jnp.int8 if q <= 8 else jnp.int16
     return z.astype(dtype)
 
@@ -52,12 +61,15 @@ def dequantize_soft(z: jnp.ndarray, q: int = 8, scale: float | None = None) -> j
 def pack_words(z: jnp.ndarray, q: int = 8) -> jnp.ndarray:
     """Pack q-bit values along the last axis into int32 words (⌊32/q⌋ per word).
 
-    Input last-dim length must be a multiple of ⌊32/q⌋.
+    A last-dim length that is not a multiple of ⌊32/q⌋ is zero-padded into the
+    final word; ``unpack_words(..., per_axis_len=n)`` trims the pad again.
     """
     per = 32 // q
     *lead, n = z.shape
     if n % per:
-        raise ValueError(f"last dim {n} not a multiple of {per}")
+        widths = [(0, 0)] * (z.ndim - 1) + [(0, (-n) % per)]
+        z = jnp.pad(z, widths)
+        n = z.shape[-1]
     zi = z.astype(jnp.int32) & ((1 << q) - 1)
     zi = zi.reshape(*lead, n // per, per)
     shifts = jnp.arange(per, dtype=jnp.int32) * q
@@ -110,3 +122,86 @@ def u1_bytes(R: int, q: int | None) -> float:
 def u2_bytes(packed: bool) -> float:
     """Bytes per decoded bit (paper's U₂)."""
     return 1.0 / 8.0 if packed else 4.0
+
+
+# ---------------------------------------------------------------------------
+# Saturation budget for the narrow (int16/int8) path-metric pipeline
+# ---------------------------------------------------------------------------
+def pm_spread_bound(code, qmax: int, interval: int = 1) -> int:
+    """Worst-case transient path-metric magnitude under min-subtract
+    normalization applied every ``interval`` stages.
+
+    With symbols bounded by ``|y| ≤ qmax`` the branch-metric range is
+    ``2·R·qmax``. Any state's survivor path can be rerouted through the
+    argmin state of ``v = K-1`` stages earlier (the trellis is fully
+    connected in ``v`` steps), so the spread obeys the classical merge bound
+    ``spread ≤ v · 2·R·qmax`` at ALL times; between normalizations the
+    per-lane minimum can additionally drift by at most ``R·qmax`` per stage
+    in either direction, for up to ``interval`` stages:
+
+        max |PM| ≤ (2·v + interval) · R · qmax
+
+    A metric dtype whose max dominates this bound can NEVER saturate,
+    regardless of stream length — the contract the i16/i8 metric modes
+    declare in :mod:`repro.kernels.registry` and that
+    ``tests/test_kernels.py`` drives 10k adversarial stages against.
+    """
+    return (2 * code.v + interval) * code.R * qmax
+
+
+def max_symbol_bits(code, pm_dtype_max: int, q_cap: int = 8) -> int:
+    """Largest quantizer width q whose worst case fits the metric dtype.
+
+    Returns the largest ``q ≤ q_cap`` with
+    ``pm_spread_bound(code, 2^(q-1)-1) ≤ pm_dtype_max`` (at least 2 — a
+    code so large that even 2-bit symbols overflow the dtype is rejected).
+    The symbol width is chosen at the tightest cadence (``interval=1``);
+    :func:`norm_interval` then spends the REMAINING headroom on amortizing
+    the normalization.
+    """
+    for q in range(q_cap, 1, -1):
+        if pm_spread_bound(code, (1 << (q - 1)) - 1) <= pm_dtype_max:
+            return q
+    raise ValueError(
+        f"no quantizer width ≥ 2 bits fits pm dtype max {pm_dtype_max} "
+        f"for K={code.K}, R={code.R}"
+    )
+
+
+def metric_dtype_max(metric_mode: str) -> int:
+    """Path-metric dtype max of a NARROW metric mode (single source of truth)."""
+    try:
+        return {"i16": 32767, "i8": 127}[metric_mode]
+    except KeyError:
+        raise ValueError(
+            f"metric_mode {metric_mode!r} has no narrow metric dtype "
+            f"(expected 'i16' or 'i8')"
+        ) from None
+
+
+def metric_mode_qmax(code, metric_mode: str) -> int:
+    """The symbol bound a narrow metric mode ASSUMES of its integer inputs.
+
+    Pre-quantized callers must respect it (the engine's quantizer does);
+    the kernels derive their static normalization cadence from it — symbols
+    beyond the bound are saturated on kernel ingestion.
+    """
+    return (1 << (max_symbol_bits(code, metric_dtype_max(metric_mode)) - 1)) - 1
+
+
+def norm_interval(code, metric_mode: str) -> int:
+    """Static min-subtract cadence (stages) of a narrow metric mode.
+
+    Per-stage normalization costs a sublane reduction every stage; the
+    saturation budget usually has slack beyond ``interval=1``, so the
+    normalization runs every k-th stage with the largest k that keeps
+    ``pm_spread_bound(code, qmax, k) ≤ dtype_max`` — identical decisions
+    (min-subtract is a uniform per-lane shift), identical saturation
+    guarantee, fraction of the cost. Every backend derives the SAME k from
+    the code + mode, so path metrics stay bit-comparable across backends.
+    """
+    if metric_mode == "f32":
+        return 0  # no normalization
+    dtype_max = metric_dtype_max(metric_mode)
+    qmax = metric_mode_qmax(code, metric_mode)
+    return max(1, dtype_max // (code.R * qmax) - 2 * code.v)

@@ -218,6 +218,62 @@ class ConvCode:
             rows.append([2.0 * b - 1.0 for b in bits])
         return np.array(rows, dtype=np.float32)
 
+    # ---- symmetry-folded branch metrics (antipodal label structure) ----------------
+    # The correlation metric is antipodal in the label: complementing every
+    # output bit flips every sign row entry, so BM(~c) = -BM(c). The 2^R
+    # labels therefore pair into 2^(R-1) ± pairs and only 2^(R-1) distinct
+    # branch metrics exist per stage — half the paper's 2^R group metrics.
+    # The canonical representative of a pair is the label whose MSB (stream
+    # c^{(1)}) is 0, i.e. c < 2^(R-1); the other member is its complement.
+    @property
+    def n_folded(self) -> int:
+        """Distinct folded branch metrics per stage: 2^(R-1)."""
+        return 1 << (self.R - 1)
+
+    @cached_property
+    def fold_index(self) -> np.ndarray:
+        """(2^R,) int32: folded-table row of each label (its ± representative)."""
+        c = np.arange(1 << self.R)
+        mask = (1 << self.R) - 1
+        return np.where(c < self.n_folded, c, c ^ mask).astype(np.int32)
+
+    @cached_property
+    def fold_sign(self) -> np.ndarray:
+        """(2^R,) int32 ±1: BM(c) = fold_sign[c] · BM_folded[fold_index[c]]."""
+        c = np.arange(1 << self.R)
+        return np.where(c < self.n_folded, 1, -1).astype(np.int32)
+
+    @cached_property
+    def folded_codeword_signs(self) -> np.ndarray:
+        """(2^(R-1), R) float32 sign rows of the fold representatives.
+
+        ``BM_folded = folded_codeword_signs @ y`` is the folded table;
+        expansion to the full 2^R table is ``fold_sign · BM_folded[fold_index]``
+        (exact in both IEEE float — negation and round-to-nearest are
+        sign-symmetric — and integer arithmetic).
+        """
+        return self.codeword_signs[: self.n_folded]
+
+    @cached_property
+    def folded_acs_tables(self) -> dict:
+        """Static per-butterfly folded lookups for the ACS kernels.
+
+        For each of the four butterfly codeword rows (α top/even, γ top/odd,
+        β bottom/even, θ bottom/odd — the order the kernels consume):
+          ``fold_cw_*``:  (n_butterflies,) int32 folded-table row indices
+          ``fold_sgn_*``: (n_butterflies,) int32 ±1 signs
+        so each per-butterfly metric row is a sign-flip of one of the
+        2^(R-1) folded entries — the signs are static and applied in-register.
+        """
+        cw = self.butterfly_codewords  # (nb, 4) as [α, β, γ, θ]
+        order = dict(te=0, to=2, be=1, bo=3)  # kernel row order α, γ, β, θ
+        out = {}
+        for key, col in order.items():
+            labels = cw[:, col]
+            out["fold_cw_" + key] = self.fold_index[labels].astype(np.int32)
+            out["fold_sgn_" + key] = self.fold_sign[labels].astype(np.int32)
+        return out
+
 
 # The paper's reference code: CCSDS (2,1,7), g1 = 1111001, g2 = 1011011.
 CCSDS_27 = ConvCode(polys=((1, 1, 1, 1, 0, 0, 1), (1, 0, 1, 1, 0, 1, 1)))

@@ -9,10 +9,13 @@ TPU mapping (see DESIGN.md §2):
   VMEM scratch across stage-chunks (grid iterates stage-chunks innermost) and
   is re-zeroed at chunk 0 — this is the TPU analogue of the GPU kernel
   keeping PM in shared memory for the whole block.
-* the paper's group-based BM reduction: only ``2^R`` branch metrics are
-  computed per stage (R multiply-adds each); they are expanded to the four
-  per-butterfly metric rows (α/β/γ/θ) with **static one-hot combinations**
-  — no gathers, no warp shuffles.
+* **symmetry-folded branch metrics**: the correlation metric is antipodal in
+  the label (BM(~c) = -BM(c)), so only ``2^(R-1)`` folded metrics exist per
+  stage — half the paper's ``2^R`` group metrics. The folded rows are built
+  with static add/sub chains (the ±1 signs are trace-time constants — zero
+  multiplies), and the four per-butterfly metric rows (α/γ/β/θ) are expanded
+  with **static sign selects**: each butterfly's row is ``±`` one of the
+  folded entries, negated in-register. No gathers, no warp shuffles.
 * the butterfly read ``PM[2j], PM[2j+1]`` is a free sublane reshape
   ``(N, T) → (N/2, 2, T)``; the write-back is a concat of the top/bottom
   halves. No shared-memory banking concerns exist on TPU.
@@ -21,9 +24,18 @@ TPU mapping (see DESIGN.md §2):
   ``SP[T][words][blocks]`` layout with fully coalesced (lane-contiguous)
   stores — and 32× less HBM traffic than byte-per-state.
 
-The same kernel body runs the float32 path and the exact int32 path (for
-q-bit quantized symbols): integer PM accumulation never overflows within a
-block (headroom 2^31 / (R·2^q) stages).
+The same kernel body runs the float32 path and the exact integer path.
+``metric_mode`` selects the path-metric pipeline semantics (see
+``repro.kernels.registry.METRIC_MODES``): ``"f32"`` accumulates unbounded
+(int32 for integer symbols), ``"i16"``/``"i8"`` add the amortized
+min-subtract normalization (every ``norm_interval(code, mode)`` stages,
+counted in GLOBAL stage indices so stage-chunking cannot move the
+normalization points) whose saturation budget bounds every metric within
+int16/int8 range. The TPU VPU computes on 32-bit lanes either way, so
+the kernel keeps int32 registers — the narrow dtypes are a *storage/traffic*
+contract (symbols arrive int8 over HBM; the pure-XLA ``ref`` backend stores
+PM natively narrow) and the normalized values here are bit-identical to the
+narrow-dtype arithmetic because they never leave the narrow range.
 """
 
 from __future__ import annotations
@@ -32,11 +44,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.quantize import metric_mode_qmax, norm_interval
 from repro.core.trellis import ConvCode
+from .ref import _acc_dtype_for
 
 __all__ = ["acs_forward_pallas", "LANE_TILE", "DEFAULT_STAGE_CHUNK"]
 
@@ -44,9 +57,53 @@ LANE_TILE = 128
 DEFAULT_STAGE_CHUNK = 64
 
 
+def folded_bm_rows(y_s, code: ConvCode, acc_dtype):
+    """(R, TILE) stage symbols → 2·2^(R-1) rows [+folded, -folded], (1, TILE) each.
+
+    Static add/sub chains over the fold representatives' ±1 signs (trace-time
+    constants — no multiplies, no table input); the negated set is the
+    in-register sign application the expansion selects from.
+    """
+    fsv = code.folded_codeword_signs  # (2^(R-1), R) static ±1
+    pos, neg = [], []
+    for k in range(code.n_folded):
+        acc = None
+        for r in range(code.R):
+            term = y_s[r] if fsv[k, r] > 0 else -y_s[r]
+            acc = term if acc is None else acc + term
+        row = acc.astype(acc_dtype)[None, :]
+        pos.append(row)
+        neg.append(-row)
+    return pos, neg
+
+
+def butterfly_bm_row(pos, neg, code: ConvCode, key: str, tile: int, acc_dtype):
+    """Expand the folded rows to a (n_butterflies, TILE) per-butterfly row.
+
+    ``key`` ∈ {te, to, be, bo} names the α/γ/β/θ codeword column. Each
+    butterfly's metric is ± one folded entry; the (index, sign) tables are
+    static, so the expansion is a static run-length concat of broadcast
+    ±folded rows (no captured constants, no gathers) — cheaper than the
+    4·nb·R multiply-adds of the unfolded form and exactly equal to it.
+    """
+    tabs = code.folded_acs_tables
+    idx = tabs["fold_cw_" + key]  # (nb,) static
+    sgn = tabs["fold_sgn_" + key]  # (nb,) static ±1
+    runs: list[tuple[tuple[int, int], int]] = []
+    for i, s in zip(idx.tolist(), sgn.tolist()):
+        if runs and runs[-1][0] == (i, s):
+            runs[-1] = (runs[-1][0], runs[-1][1] + 1)
+        else:
+            runs.append(((i, s), 1))
+    parts = [
+        jnp.broadcast_to(pos[k] if s > 0 else neg[k], (cnt, tile))
+        for (k, s), cnt in runs
+    ]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
 def _acs_kernel(
     y_ref,  # (SC, R, TILE) soft symbols for this stage chunk
-    signs_ref,  # (4, nb, R) per-butterfly codeword signs [α, γ, β, θ] rows
     sp_ref,  # (SC, W, TILE) int32 out: packed survivor words
     pm_out_ref,  # (N, TILE) out: final path metrics (last chunk's write wins)
     pm_ref,  # scratch (N, TILE) acc_dtype: path metrics, persists across chunks
@@ -54,28 +111,29 @@ def _acs_kernel(
     code: ConvCode,
     stage_chunk: int,
     acc_dtype,
+    norm_every: int,
 ):
     nb = code.n_butterflies
     tile = pm_ref.shape[-1]
+    # global stage base of this chunk — hoisted out of the stage loop
+    # (program_id is only available at kernel top level)
+    chunk_base = pl.program_id(1) * stage_chunk
 
     @pl.when(pl.program_id(1) == 0)
     def _init():
         pm_ref[...] = jnp.zeros_like(pm_ref)
 
     def stage_body(s, pm):
-        # ---- group-reduced branch metrics -------------------------------------
-        # The 2^R-entry BM table composed with the static α/β/γ/θ lookup is a
-        # rank-R linear map; we apply it directly as R multiply-adds per row:
-        #   bm_row[j] = Σ_r signs[row, j, r] * y[r]
+        # ---- symmetry-folded branch metrics -----------------------------------
+        # 2^(R-1) folded rows once per stage (static add/sub chains), then the
+        # four α/γ/β/θ rows by in-register sign selects.
         y_s = y_ref[pl.ds(s, 1)][0]  # (R, TILE)
         y_s = y_s.astype(acc_dtype)
-        bm_rows = []
-        for row in range(4):  # α (top/even), γ (top/odd), β (bot/even), θ (bot/odd)
-            acc = jnp.zeros((nb, tile), dtype=acc_dtype)
-            for r in range(code.R):
-                acc = acc + signs_ref[row, :, r][:, None] * y_s[r][None, :]
-            bm_rows.append(acc)
-        bm_te, bm_to, bm_be, bm_bo = bm_rows
+        pos, neg = folded_bm_rows(y_s, code, acc_dtype)
+        bm_te = butterfly_bm_row(pos, neg, code, "te", tile, acc_dtype)
+        bm_to = butterfly_bm_row(pos, neg, code, "to", tile, acc_dtype)
+        bm_be = butterfly_bm_row(pos, neg, code, "be", tile, acc_dtype)
+        bm_bo = butterfly_bm_row(pos, neg, code, "bo", tile, acc_dtype)
 
         # ---- butterfly ACS: reshape replaces the GPU shared-memory shuffle ---
         pairs = pm.reshape(nb, 2, tile)
@@ -92,6 +150,15 @@ def _acs_kernel(
         pm_bot = jnp.minimum(m_be, m_bo)
 
         new_pm = jnp.concatenate([pm_top, pm_bot], axis=0)  # (N, TILE)
+        if norm_every:  # amortized min-subtract (i16/i8 saturation contract);
+            # cadence counts GLOBAL stages so chunking can't change the points
+            t = chunk_base + s
+            new_pm = jax.lax.cond(
+                t % norm_every == norm_every - 1,
+                lambda p: p - jnp.min(p, axis=0, keepdims=True),
+                lambda p: p,
+                new_pm,
+            )
 
         # ---- bit-pack survivor decisions to int32 words ----------------------
         dec = jnp.concatenate([dec_top, dec_bot], axis=0)  # (N, TILE)
@@ -113,7 +180,7 @@ def _acs_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("code", "stage_chunk", "interpret")
+    jax.jit, static_argnames=("code", "stage_chunk", "interpret", "metric_mode")
 )
 def acs_forward_pallas(
     y: jnp.ndarray,
@@ -121,12 +188,16 @@ def acs_forward_pallas(
     *,
     stage_chunk: int = DEFAULT_STAGE_CHUNK,
     interpret: bool = False,
+    metric_mode: str = "f32",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Forward ACS over parallel blocks. y: (T, R, B) → (sp (T, W, B), pm (N, B)).
 
     T must be a multiple of ``stage_chunk`` and B a multiple of 128 (the ops
     wrapper pads). Float32 and integer (int8/int16/int32) inputs supported;
-    integer inputs run the exact int32-PM path.
+    integer inputs run the exact integer path. ``metric_mode`` "i16"/"i8"
+    adds the per-stage min-subtract normalization (int32 VPU registers; the
+    values stay bit-identical to narrow-dtype arithmetic by the saturation
+    budget — see ``repro.kernels.registry.METRIC_MODES``).
     """
     T, R, B = y.shape
     if R != code.R:
@@ -135,30 +206,34 @@ def acs_forward_pallas(
         raise ValueError(f"T={T} not a multiple of stage_chunk={stage_chunk}")
     if B % LANE_TILE:
         raise ValueError(f"B={B} not a multiple of {LANE_TILE}")
-    integer = jnp.issubdtype(y.dtype, jnp.integer)
-    acc_dtype = jnp.int32 if integer else jnp.float32
+    # semantic dtype check (raises for float symbols with i16/i8); registers
+    # stay 32-bit wide on the VPU
+    semantic = _acc_dtype_for(y.dtype, metric_mode)
+    acc_dtype = jnp.float32 if semantic == jnp.float32 else jnp.int32
+    norm_every = norm_interval(code, metric_mode)
     y = y.astype(acc_dtype)
+    if norm_every:
+        # saturate out-of-budget pre-quantized symbols (see acs_forward_ref)
+        qm = metric_mode_qmax(code, metric_mode)
+        y = jnp.clip(y, -qm, qm)
 
     N = code.n_states
     W = (N + 31) // 32
     n_bt = B // LANE_TILE
     n_sc = T // stage_chunk
-    nb = code.n_butterflies
-
-    # per-butterfly codeword sign tables, rows [α, γ, β, θ] (see kernel body)
-    cw = code.butterfly_codewords  # (nb, 4) as [α, β, γ, θ]
-    signs_np = code.codeword_signs[cw[:, [0, 2, 1, 3]]]  # (nb, 4, R) → reorder
-    signs_arr = jnp.asarray(np.transpose(signs_np, (1, 0, 2)), dtype=acc_dtype)
 
     kernel = functools.partial(
-        _acs_kernel, code=code, stage_chunk=stage_chunk, acc_dtype=acc_dtype
+        _acs_kernel,
+        code=code,
+        stage_chunk=stage_chunk,
+        acc_dtype=acc_dtype,
+        norm_every=norm_every,
     )
     sp, pm = pl.pallas_call(
         kernel,
         grid=(n_bt, n_sc),
         in_specs=[
             pl.BlockSpec((stage_chunk, R, LANE_TILE), lambda bt, sc: (sc, 0, bt)),
-            pl.BlockSpec((4, nb, R), lambda bt, sc: (0, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((stage_chunk, W, LANE_TILE), lambda bt, sc: (sc, 0, bt)),
@@ -172,5 +247,5 @@ def acs_forward_pallas(
         ],
         scratch_shapes=[pltpu.VMEM((N, LANE_TILE), acc_dtype)],
         interpret=interpret,
-    )(y, signs_arr)
+    )(y)
     return sp, pm

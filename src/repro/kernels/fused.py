@@ -24,19 +24,19 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.trellis import ConvCode
-from .acs import LANE_TILE
+from .acs import LANE_TILE, butterfly_bm_row, folded_bm_rows
+from repro.core.quantize import metric_mode_qmax, norm_interval
+from .ref import _acc_dtype_for
 
 __all__ = ["pbvd_fused_pallas"]
 
 
 def _fused_kernel(
     y_ref,  # (T, R, TILE) symbols
-    signs_ref,  # (4, nb, R) codeword signs [α, γ, β, θ]
     start_ref,  # (1, TILE) int32 traceback start state
     bits_ref,  # (n_words, TILE) int32 out: bit-packed decoded bits
     sp_ref,  # VMEM scratch (T, W, TILE) int32 survivor words
@@ -47,8 +47,8 @@ def _fused_kernel(
     decode_start: int,
     n_decode: int,
     acc_dtype,
+    norm_every: int,
 ):
-    nb = code.n_butterflies
     tile = pm_ref.shape[-1]
     v = code.v
     half = code.n_states // 2
@@ -59,15 +59,14 @@ def _fused_kernel(
     # ---- phase 1: forward ACS, SP stays in VMEM ---------------------------------
     def acs_body(s, pm):
         y_s = y_ref[pl.ds(s, 1)][0].astype(acc_dtype)  # (R, TILE)
-        bm_rows = []
-        for row in range(4):
-            acc = jnp.zeros((nb, tile), dtype=acc_dtype)
-            for r in range(code.R):
-                acc = acc + signs_ref[row, :, r][:, None] * y_s[r][None, :]
-            bm_rows.append(acc)
-        bm_te, bm_to, bm_be, bm_bo = bm_rows
+        # symmetry-folded BM: 2^(R-1) rows once, α/γ/β/θ by in-register signs
+        pos, neg = folded_bm_rows(y_s, code, acc_dtype)
+        bm_te = butterfly_bm_row(pos, neg, code, "te", tile, acc_dtype)
+        bm_to = butterfly_bm_row(pos, neg, code, "to", tile, acc_dtype)
+        bm_be = butterfly_bm_row(pos, neg, code, "be", tile, acc_dtype)
+        bm_bo = butterfly_bm_row(pos, neg, code, "bo", tile, acc_dtype)
 
-        pairs = pm.reshape(nb, 2, tile)
+        pairs = pm.reshape(code.n_butterflies, 2, tile)
         pm_even, pm_odd = pairs[:, 0], pairs[:, 1]
         m_te, m_to = pm_even + bm_te, pm_odd + bm_to
         dec_top = (m_to < m_te).astype(jnp.int32)
@@ -76,6 +75,13 @@ def _fused_kernel(
         dec_bot = (m_bo < m_be).astype(jnp.int32)
         pm_bot = jnp.minimum(m_be, m_bo)
         new_pm = jnp.concatenate([pm_top, pm_bot], axis=0)
+        if norm_every:  # amortized min-subtract (i16/i8 saturation contract)
+            new_pm = jax.lax.cond(
+                s % norm_every == norm_every - 1,
+                lambda p: p - jnp.min(p, axis=0, keepdims=True),
+                lambda p: p,
+                new_pm,
+            )
 
         dec = jnp.concatenate([dec_top, dec_bot], axis=0)
         pad = (-dec.shape[0]) % 32
@@ -121,7 +127,8 @@ def _fused_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("code", "decode_start", "n_decode", "interpret")
+    jax.jit,
+    static_argnames=("code", "decode_start", "n_decode", "interpret", "metric_mode"),
 )
 def pbvd_fused_pallas(
     y: jnp.ndarray,
@@ -131,29 +138,33 @@ def pbvd_fused_pallas(
     n_decode: int,
     start_state: jnp.ndarray | None = None,
     interpret: bool = False,
+    metric_mode: str = "f32",
 ) -> jnp.ndarray:
     """One-kernel PBVD decode. y (T, R, B) → packed bits (n_decode/32, B) int32.
 
     n_decode must be a multiple of 32 (bit-packed output words).
+    ``metric_mode`` "i16"/"i8" adds the per-stage min-subtract normalization
+    (int32 VPU registers — see ``repro.kernels.registry.METRIC_MODES``).
     """
     T, R, B = y.shape
     if n_decode % 32:
         raise ValueError("n_decode must be a multiple of 32")
     if B % LANE_TILE:
         raise ValueError(f"B={B} not a multiple of {LANE_TILE}")
-    integer = jnp.issubdtype(y.dtype, jnp.integer)
-    acc_dtype = jnp.int32 if integer else jnp.float32
+    semantic = _acc_dtype_for(y.dtype, metric_mode)
+    acc_dtype = jnp.float32 if semantic == jnp.float32 else jnp.int32
+    norm_every = norm_interval(code, metric_mode)
     y = y.astype(acc_dtype)
+    if norm_every:
+        # saturate out-of-budget pre-quantized symbols (see acs_forward_ref)
+        qm = metric_mode_qmax(code, metric_mode)
+        y = jnp.clip(y, -qm, qm)
 
     N = code.n_states
     W = (N + 31) // 32
-    nb = code.n_butterflies
     n_bt = B // LANE_TILE
     n_words = n_decode // 32
 
-    cw = code.butterfly_codewords
-    signs_np = code.codeword_signs[cw[:, [0, 2, 1, 3]]]
-    signs_arr = jnp.asarray(np.transpose(signs_np, (1, 0, 2)), dtype=acc_dtype)
     if start_state is None:
         start_state = jnp.zeros((B,), jnp.int32)
 
@@ -164,13 +175,13 @@ def pbvd_fused_pallas(
         decode_start=decode_start,
         n_decode=n_decode,
         acc_dtype=acc_dtype,
+        norm_every=norm_every,
     )
     packed = pl.pallas_call(
         kernel,
         grid=(n_bt,),
         in_specs=[
             pl.BlockSpec((T, R, LANE_TILE), lambda bt: (0, 0, bt)),
-            pl.BlockSpec((4, nb, R), lambda bt: (0, 0, 0)),
             pl.BlockSpec((1, LANE_TILE), lambda bt: (0, bt)),
         ],
         out_specs=pl.BlockSpec((n_words, LANE_TILE), lambda bt: (0, bt)),
@@ -180,5 +191,5 @@ def pbvd_fused_pallas(
             pltpu.VMEM((N, LANE_TILE), acc_dtype),
         ],
         interpret=interpret,
-    )(y, signs_arr, start_state.reshape(1, B).astype(jnp.int32))
+    )(y, start_state.reshape(1, B).astype(jnp.int32))
     return packed

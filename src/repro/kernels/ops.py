@@ -33,8 +33,10 @@ from repro.core.trellis import ConvCode
 from . import ref as _ref
 from .acs import LANE_TILE, DEFAULT_STAGE_CHUNK, acs_forward_pallas
 from .registry import (
+    METRIC_MODES,
     FramedBlocks,
     available_backends,
+    backend_metric_modes,
     backend_start_policies,
     get_backend,
     register_backend,
@@ -45,10 +47,12 @@ __all__ = [
     "pbvd_decode_blocks",
     "default_interpret",
     "FramedBlocks",
+    "METRIC_MODES",
     "register_backend",
     "get_backend",
     "available_backends",
     "backend_start_policies",
+    "backend_metric_modes",
 ]
 
 
@@ -69,7 +73,7 @@ def _pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 # Backends
 # ---------------------------------------------------------------------------
-@register_backend("ref")
+@register_backend("ref", metric_modes=("f32", "i16", "i8"))
 def _decode_ref(
     blocks: FramedBlocks,
     code: ConvCode,
@@ -77,10 +81,11 @@ def _decode_ref(
     start_policy: str = "zero",
     stage_chunk: int = DEFAULT_STAGE_CHUNK,
     interpret: bool = False,
+    metric_mode: str = "f32",
 ) -> jnp.ndarray:
     """Pure-jnp oracle path (also the XLA-fused fast path on CPU)."""
     B = blocks.y.shape[2]
-    sp, pm = _ref.acs_forward_ref(blocks.y, code)
+    sp, pm = _ref.acs_forward_ref(blocks.y, code, metric_mode=metric_mode)
     if start_policy == "argmin":
         start = jnp.argmin(pm, axis=0).astype(jnp.int32)
     else:
@@ -89,7 +94,7 @@ def _decode_ref(
     return bits[:, : blocks.n_real_blocks]
 
 
-@register_backend("pallas")
+@register_backend("pallas", metric_modes=("f32", "i16", "i8"))
 def _decode_pallas(
     blocks: FramedBlocks,
     code: ConvCode,
@@ -97,6 +102,7 @@ def _decode_pallas(
     start_policy: str = "zero",
     stage_chunk: int = DEFAULT_STAGE_CHUNK,
     interpret: bool = False,
+    metric_mode: str = "f32",
 ) -> jnp.ndarray:
     """Two-kernel path (paper K1 ACS + K2 traceback)."""
     T = blocks.y.shape[0]
@@ -104,7 +110,9 @@ def _decode_pallas(
     y = _pad_axis(y, 0, stage_chunk)  # stage padding (end; BM-neutral zeros)
     Bp = y.shape[2]
 
-    sp, pm = acs_forward_pallas(y, code, stage_chunk=stage_chunk, interpret=interpret)
+    sp, pm = acs_forward_pallas(
+        y, code, stage_chunk=stage_chunk, interpret=interpret, metric_mode=metric_mode
+    )
     if start_policy == "argmin":
         # argmin over the padded-final metrics: the zero-BM pad stages only
         # min-merge paths, so the padded walk recovers a true argmin state at
@@ -127,7 +135,7 @@ def _decode_pallas(
     return bits[:, : blocks.n_real_blocks]
 
 
-@register_backend("fused", start_policies=("zero",))
+@register_backend("fused", start_policies=("zero",), metric_modes=("f32", "i16", "i8"))
 def _decode_fused(
     blocks: FramedBlocks,
     code: ConvCode,
@@ -135,6 +143,7 @@ def _decode_fused(
     start_policy: str = "zero",
     stage_chunk: int = DEFAULT_STAGE_CHUNK,
     interpret: bool = False,
+    metric_mode: str = "f32",
 ) -> jnp.ndarray:
     """Single-kernel path (ACS + in-VMEM traceback, bit-packed output) —
     see kernels/fused.py; unpacked here for API compatibility."""
@@ -149,7 +158,12 @@ def _decode_fused(
     nd = -(-blocks.n_decode // 32) * 32  # kernel emits 32-bit words
     y = _pad_axis(blocks.y, 2, LANE_TILE)
     packed = pbvd_fused_pallas(
-        y, code, decode_start=blocks.decode_start, n_decode=nd, interpret=interpret
+        y,
+        code,
+        decode_start=blocks.decode_start,
+        n_decode=nd,
+        interpret=interpret,
+        metric_mode=metric_mode,
     )
     shifts = jnp.arange(32, dtype=jnp.int32)
     bits = ((packed[:, None, :] >> shifts[None, :, None]) & 1).reshape(-1, y.shape[2])
@@ -170,6 +184,7 @@ def _decode_fused(
         "stage_chunk",
         "interpret",
         "n_real",
+        "metric_mode",
     ),
 )
 def _decode_blocks_jit(
@@ -183,6 +198,7 @@ def _decode_blocks_jit(
     stage_chunk: int,
     interpret: bool,
     n_real: int | None,
+    metric_mode: str,
 ) -> jnp.ndarray:
     fn = get_backend(backend)
     return fn(
@@ -196,6 +212,7 @@ def _decode_blocks_jit(
         start_policy=start_policy,
         stage_chunk=stage_chunk,
         interpret=interpret,
+        metric_mode=metric_mode,
     )
 
 
@@ -210,6 +227,7 @@ def pbvd_decode_blocks(
     stage_chunk: int = DEFAULT_STAGE_CHUNK,
     interpret: bool | None = None,
     frame_counts: tuple[int, ...] | None = None,
+    metric_mode: Literal["f32", "i16", "i8"] = "f32",
 ) -> jnp.ndarray:
     """Decode framed parallel blocks via the named backend.
 
@@ -218,11 +236,16 @@ def pbvd_decode_blocks(
         axis may pack several frames (``frame_counts``, see
         :class:`FramedBlocks`); trailing lanes beyond the real blocks are
         padding.
+    ``metric_mode`` selects the path-metric pipeline (:data:`METRIC_MODES`):
+        "f32" accumulates unbounded; "i16"/"i8" run the narrow normalized
+        pipeline and require pre-quantized integer symbols within the
+        saturation budget (the engine quantizes accordingly).
     Returns (n_decode, n_real_blocks) int32 decoded bits.
 
-    Backend and start-policy are validated *before* jit: an unknown backend
-    raises ``KeyError``, an unsupported start policy raises ``ValueError``
-    eagerly (never a trace-time error from inside the kernel adapter).
+    Backend, start-policy and metric-mode are validated *before* jit: an
+    unknown backend raises ``KeyError``, an unsupported start policy or
+    metric mode raises ``ValueError`` eagerly (never a trace-time error from
+    inside the kernel adapter).
 
     Only the TOTAL real-lane count enters the jit cache key: lanes are
     mutually independent and per-frame unpacking happens host-side, so the
@@ -238,6 +261,12 @@ def pbvd_decode_blocks(
             f"backend {backend!r} does not support start_policy={start_policy!r}; "
             f"supported: {supported}"
         )
+    supported_modes = backend_metric_modes(backend)
+    if metric_mode not in supported_modes:
+        raise ValueError(
+            f"backend {backend!r} does not support metric_mode={metric_mode!r}; "
+            f"supported: {supported_modes}"
+        )
     return _decode_blocks_jit(
         y_blocks,
         code,
@@ -248,4 +277,5 @@ def pbvd_decode_blocks(
         stage_chunk=stage_chunk,
         interpret=interpret,
         n_real=sum(frame_counts) if frame_counts is not None else None,
+        metric_mode=metric_mode,
     )

@@ -28,11 +28,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quantize import metric_mode_qmax, norm_interval
 from repro.core.trellis import ConvCode
 
 __all__ = [
     "viterbi_classic_np",
     "branch_metric_table",
+    "folded_branch_metric_table",
+    "expand_folded_bm",
     "acs_forward_ref",
     "traceback_ref",
     "pbvd_decode_ref",
@@ -92,12 +95,42 @@ def viterbi_classic_np(
 # Level 2: vectorized jnp K1/K2 references (the Pallas oracles)
 # ---------------------------------------------------------------------------
 def branch_metric_table(y: jnp.ndarray, code: ConvCode) -> jnp.ndarray:
-    """BM table for all 2^R codewords. y: (..., R) → (..., 2^R).
+    """Full BM table for all 2^R codewords. y: (..., R) → (..., 2^R).
 
     This is the paper's group reduction: 2^R metrics per stage, not 2^K.
+    Kept as the unfolded reference — the decode paths compute the
+    symmetry-folded half table (:func:`folded_branch_metric_table`) and
+    expand it with signs.
     """
     signs = jnp.asarray(code.codeword_signs)  # (2^R, R)
     return jnp.einsum("...r,cr->...c", y, signs)
+
+
+def folded_branch_metric_table(y: jnp.ndarray, code: ConvCode) -> jnp.ndarray:
+    """Symmetry-folded BM table. y: (..., R) → (..., 2^(R-1)).
+
+    The correlation metric is antipodal in the label (BM(~c) = -BM(c)), so
+    only the 2^(R-1) fold representatives (labels with MSB 0) need computing;
+    every other label is a sign flip (:func:`expand_folded_bm`). The rows are
+    built as static add/sub chains — no multiplies, and bit-exact to the full
+    table's rows because IEEE negation/rounding are sign-symmetric.
+    """
+    rows = []
+    svals = code.folded_codeword_signs  # (2^(R-1), R) static ±1
+    for k in range(code.n_folded):
+        acc = None
+        for r in range(code.R):
+            term = y[..., r] if svals[k, r] > 0 else -y[..., r]
+            acc = term if acc is None else acc + term
+        rows.append(acc)
+    return jnp.stack(rows, axis=-1)
+
+
+def expand_folded_bm(bm_folded: jnp.ndarray, code: ConvCode) -> jnp.ndarray:
+    """(..., 2^(R-1)) folded table → (..., 2^R) full table via in-register signs."""
+    gathered = bm_folded[..., code.fold_index]  # static gather
+    neg = jnp.asarray(code.fold_sign < 0)
+    return jnp.where(neg, -gathered, gathered)
 
 
 def _pack_decisions(dec_bits: jnp.ndarray) -> jnp.ndarray:
@@ -112,15 +145,42 @@ def _pack_decisions(dec_bits: jnp.ndarray) -> jnp.ndarray:
     return (d * weights).sum(axis=1, dtype=jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("code",))
-def acs_forward_ref(y: jnp.ndarray, code: ConvCode) -> tuple[jnp.ndarray, jnp.ndarray]:
+def _acc_dtype_for(y_dtype, metric_mode: str):
+    """Accumulator/storage dtype of the path metrics for a metric mode."""
+    integer = jnp.issubdtype(y_dtype, jnp.integer)
+    if metric_mode == "f32":
+        return jnp.int32 if integer else jnp.float32
+    if metric_mode not in ("i16", "i8"):
+        raise ValueError(f"unknown metric_mode {metric_mode!r}")
+    if not integer:
+        raise ValueError(
+            f"metric_mode={metric_mode!r} needs pre-quantized integer symbols "
+            f"(got {y_dtype}); the engine quantizes within the saturation "
+            f"budget (see repro.kernels.registry.METRIC_MODES)"
+        )
+    return jnp.int16 if metric_mode == "i16" else jnp.int8
+
+
+@partial(jax.jit, static_argnames=("code", "metric_mode", "fold"))
+def acs_forward_ref(
+    y: jnp.ndarray,
+    code: ConvCode,
+    metric_mode: str = "f32",
+    fold: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Forward ACS over a batch of parallel blocks (paper K1).
 
-    y: (T, R, B) soft symbols (float32 or int-like; int inputs accumulate in
-       int32 — exact integer path used by the quantized decoder).
+    y: (T, R, B) soft symbols (float32 or int-like; int inputs accumulate
+       exactly — int32 for ``metric_mode="f32"``, int16/int8 with min-subtract
+       normalization every ``norm_interval(code, mode)`` stages for
+       ``"i16"``/``"i8"``, never saturating within the registry's documented
+       budget).
+    ``fold=True`` (the hot path) computes only the 2^(R-1) symmetry-folded
+    branch metrics per stage and expands them with in-register signs;
+    ``fold=False`` keeps the full 2^R table (benchmark/parity reference).
     Returns (sp, pm_final):
       sp: (T, ceil(N/32), B) int32 bit-packed survivor decisions
-      pm_final: (N, B) final path metrics.
+      pm_final: (N, B) final path metrics (normalized for i16/i8).
     """
     T, R, B = y.shape
     N = code.n_states
@@ -131,13 +191,28 @@ def acs_forward_ref(y: jnp.ndarray, code: ConvCode) -> tuple[jnp.ndarray, jnp.nd
     cw_be = jnp.asarray(tabs["cw_bot_even"])  # β
     cw_bo = jnp.asarray(tabs["cw_bot_odd"])  # θ
 
-    integer = jnp.issubdtype(y.dtype, jnp.integer)
-    acc_dtype = jnp.int32 if integer else jnp.float32
+    acc_dtype = _acc_dtype_for(y.dtype, metric_mode)
+    norm_every = norm_interval(code, metric_mode)  # 0 → never (f32)
+    if norm_every:
+        # saturate out-of-budget pre-quantized symbols on ingestion: the
+        # no-saturation guarantee assumes |y| ≤ metric_mode_qmax, and symbol
+        # values are tracers (uncheckable eagerly) — clipping makes the
+        # contract self-enforcing (identity for engine-quantized inputs,
+        # graceful degradation instead of PM wrap for everything else)
+        qm = metric_mode_qmax(code, metric_mode)
+        y = jnp.clip(y, -qm, qm)
     signs = jnp.asarray(code.codeword_signs, dtype=acc_dtype)  # (2^R, R)
 
-    def step(pm, y_t):
+    def step(pm, xs):
+        y_t, t = xs
         # y_t: (R, B) → bm table (2^R, B)
-        bm = signs @ y_t.astype(acc_dtype)
+        y_t = y_t.astype(acc_dtype)
+        if fold:
+            # folded half table, sign-expanded — bit-exact to the full table
+            # (IEEE negation is sign-symmetric); the helpers are channel-last
+            bm = expand_folded_bm(folded_branch_metric_table(y_t.T, code), code).T
+        else:
+            bm = signs @ y_t
         pairs = pm.reshape(nb, 2, B)
         pm_even, pm_odd = pairs[:, 0], pairs[:, 1]
         # top targets j: even pred uses α, odd pred uses γ
@@ -151,11 +226,20 @@ def acs_forward_ref(y: jnp.ndarray, code: ConvCode) -> tuple[jnp.ndarray, jnp.nd
         dec_bot = (m_bo < m_be).astype(jnp.int32)
         pm_bot = jnp.minimum(m_be, m_bo)
         new_pm = jnp.concatenate([pm_top, pm_bot], axis=0)
+        if norm_every:
+            # amortized min-subtract: decisions are invariant to the uniform
+            # per-lane shift, so only the saturation budget fixes the cadence
+            new_pm = jax.lax.cond(
+                t % norm_every == norm_every - 1,
+                lambda p: p - jnp.min(p, axis=0, keepdims=True),
+                lambda p: p,
+                new_pm,
+            )
         sp_words = _pack_decisions(jnp.concatenate([dec_top, dec_bot], axis=0))
         return new_pm, sp_words
 
     pm0 = jnp.zeros((N, B), dtype=acc_dtype)
-    pm_final, sp = jax.lax.scan(step, pm0, y)
+    pm_final, sp = jax.lax.scan(step, pm0, (y, jnp.arange(T, dtype=jnp.int32)))
     return sp, pm_final
 
 
@@ -207,7 +291,8 @@ def pbvd_decode_ref(
     n_decode: int,
     n_traceback: int,
     start_state: int = 0,
+    metric_mode: str = "f32",
 ) -> jnp.ndarray:
     """Decode framed parallel blocks: y_blocks (T, R, B) → (D, B) bits."""
-    sp, _ = acs_forward_ref(y_blocks, code)
+    sp, _ = acs_forward_ref(y_blocks, code, metric_mode=metric_mode)
     return traceback_ref(sp, code, n_traceback, n_decode, start_state)

@@ -3,7 +3,8 @@
 Every backend is a function with the common contract
 
     backend(blocks: FramedBlocks, code: ConvCode, *,
-            start_policy, stage_chunk, interpret) -> (n_decode, B_real) int32 bits
+            start_policy, stage_chunk, interpret, metric_mode)
+        -> (n_decode, B_real) int32 bits
 
 registered under a name via ``@register_backend("name")``. The engine (and
 the legacy ``pbvd_decode_blocks`` wrapper) dispatch through :func:`get_backend`
@@ -22,6 +23,9 @@ Contract details (DESIGN.md §3):
   ``register_backend(name, start_policies=...)``; the dispatcher validates
   the policy *before* entering jit so unsupported combinations fail with an
   eager ``ValueError`` instead of a trace-time error.
+* Backends likewise declare the **metric modes** they implement
+  (``register_backend(name, metric_modes=...)``); the mode semantics are the
+  :data:`METRIC_MODES` contract below, validated eagerly the same way.
 """
 
 from __future__ import annotations
@@ -32,11 +36,63 @@ from typing import Any, Callable, Protocol
 __all__ = [
     "FramedBlocks",
     "DecodeBackend",
+    "METRIC_MODES",
     "register_backend",
     "get_backend",
     "available_backends",
     "backend_start_policies",
+    "backend_metric_modes",
 ]
+
+
+# ---------------------------------------------------------------------------
+# The quantized-metric contract (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+# ``metric_mode`` fixes the *semantics* of the path-metric pipeline — symbol
+# width, normalization cadence, and saturation budget. Storage width is a
+# backend implementation detail: the pure-XLA ``ref`` backend stores PM in
+# the narrow dtype (CPU SIMD lanes are 2–4× wider at int16/int8), while the
+# Pallas kernels keep 32-bit VPU registers (TPU lanes are 32-bit; the narrow
+# win there is HBM symbol traffic, already int8) — bit-identical either way,
+# because the budget keeps every value inside the narrow range.
+#
+# Saturation budget (see ``repro.core.quantize.pm_spread_bound``): with
+# min-subtract normalization every k stages and symbols bounded by
+# |y| ≤ qmax, every path metric ever formed obeys
+# |PM| ≤ (2·v + k)·R·qmax. A mode is well-defined for a code/quantizer pair
+# iff that bound fits ``pm_dtype`` — the engine picks the widest symbol
+# quantizer that satisfies it at k=1 (``repro.core.quantize.max_symbol_bits``)
+# and the kernels spend the remaining headroom on the normalization cadence
+# (``repro.core.quantize.norm_interval``; identical k in every backend), so
+# the narrow paths can NEVER saturate, regardless of stream length
+# (10k-stage adversarial streams are driven against this in
+# tests/test_kernels.py).
+METRIC_MODES: dict[str, dict[str, Any]] = {
+    "f32": dict(
+        pm_dtype="float32/int32",
+        symbols="float32, or any pre-quantized int (exact int32 accumulation)",
+        normalization="none (unbounded accumulation)",
+        saturation_budget="int32 headroom: 2^31 / (R·2^q) stages per block",
+    ),
+    "i16": dict(
+        pm_dtype="int16",
+        symbols="int8 (q ≤ 8; widest q with the k=1 budget ≤ 32767)",
+        normalization="min-subtract every norm_interval(code, 'i16') stages "
+        "(per lane; ~100+ for the registered codes)",
+        saturation_budget="(2·v+k)·R·qmax ≤ 32767 — hard-decision bit-exact "
+        "to f32 on the same symbols",
+    ),
+    "i8": dict(
+        pm_dtype="int8",
+        symbols="coarse int (widest q with the k=1 budget ≤ 127; q=3 for "
+        "the registered codes)",
+        normalization="min-subtract every norm_interval(code, 'i8') stages "
+        "(per lane; ~8-9 for the registered codes)",
+        saturation_budget="(2·v+k)·R·qmax ≤ 127 — exact vs f32 on the same "
+        "coarse symbols; vs q=8 the difference is the quantizer's (≈0.2–0.3 dB "
+        "at 3-bit soft decisions)",
+    ),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +160,7 @@ class DecodeBackend(Protocol):
         start_policy: str,
         stage_chunk: int,
         interpret: bool,
+        metric_mode: str,
     ) -> Any: ...
 
 
@@ -111,13 +168,23 @@ _BACKENDS: dict[str, DecodeBackend] = {}
 
 
 def register_backend(
-    name: str, *, start_policies: tuple[str, ...] = ("zero", "argmin")
+    name: str,
+    *,
+    start_policies: tuple[str, ...] = ("zero", "argmin"),
+    metric_modes: tuple[str, ...] = ("f32",),
 ) -> Callable[[DecodeBackend], DecodeBackend]:
     """Decorator: register a decode backend under ``name``.
 
     ``start_policies`` declares which traceback start policies the backend
-    implements; the dispatcher rejects others eagerly (pre-jit).
+    implements; ``metric_modes`` declares which :data:`METRIC_MODES` entries
+    it implements. The dispatcher rejects others eagerly (pre-jit). The
+    default is the conservative ``("f32",)`` — a backend must OPT INTO the
+    narrow normalized pipeline explicitly, otherwise the eager check would
+    wave through modes it never implemented.
     """
+    unknown = set(metric_modes) - METRIC_MODES.keys()
+    if unknown:
+        raise ValueError(f"unknown metric modes {sorted(unknown)}")
 
     def deco(fn: DecodeBackend) -> DecodeBackend:
         if name in _BACKENDS:
@@ -125,6 +192,7 @@ def register_backend(
         _BACKENDS[name] = fn
         fn.backend_name = name  # type: ignore[attr-defined]
         fn.start_policies = tuple(start_policies)  # type: ignore[attr-defined]
+        fn.metric_modes = tuple(metric_modes)  # type: ignore[attr-defined]
         return fn
 
     return deco
@@ -142,6 +210,11 @@ def get_backend(name: str) -> DecodeBackend:
 def backend_start_policies(name: str) -> tuple[str, ...]:
     """Start policies the named backend supports."""
     return getattr(get_backend(name), "start_policies", ("zero", "argmin"))
+
+
+def backend_metric_modes(name: str) -> tuple[str, ...]:
+    """Metric modes the named backend supports (see :data:`METRIC_MODES`)."""
+    return getattr(get_backend(name), "metric_modes", ("f32",))
 
 
 def available_backends() -> list[str]:

@@ -161,10 +161,11 @@ class SessionPool:
     @staticmethod
     def _group_key(s: DecoderSession) -> tuple:
         cfg = s.cfg
+        q = cfg.effective_q  # narrow metric modes force/cap the quantizer
         if s._int_dtype is not None:
             dt = np.dtype(s._int_dtype).str
-        elif cfg.q is not None:
-            dt = "int8" if cfg.q <= 8 else "int16"
+        elif q is not None:
+            dt = "int8" if q <= 8 else "int16"
         else:
             dt = "float32"
         mesh = s.engine.mesh
@@ -174,6 +175,7 @@ class SessionPool:
             cfg.L,
             cfg.backend,
             cfg.start_policy,
+            cfg.metric_mode,
             dt,
             s._interpret,
             id(mesh) if mesh is not None else None,
@@ -296,6 +298,12 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=512, help="decode block length D")
     ap.add_argument("--l", type=int, default=42, help="traceback depth L")
     ap.add_argument("--q", type=int, default=8, help="quantization bits (0 = float32)")
+    ap.add_argument(
+        "--metric-mode",
+        default="f32",
+        choices=["f32", "i16", "i8"],
+        help="path-metric pipeline (narrow modes re-cap q to the saturation budget)",
+    )
     ap.add_argument("--chunk-bits", type=int, default=4096, help="payload bits per chunk")
     ap.add_argument("--n-chunks", type=int, default=100)
     ap.add_argument(
@@ -315,11 +323,13 @@ def main() -> None:
         L=args.l,
         q=args.q or None,
         backend=args.backend,
+        metric_mode=args.metric_mode,
     )
     engine = DecoderEngine(cfg)
     print(
         f"[serve_decoder] {spec.name}: K={spec.code.K}, rate={spec.rate:.3f}, "
-        f"D={cfg.D}, L={cfg.L}, q={cfg.q}, backend={cfg.backend}; "
+        f"D={cfg.D}, L={cfg.L}, q={cfg.effective_q}, backend={cfg.backend}, "
+        f"metric_mode={cfg.metric_mode}; "
         f"{args.streams} stream(s) × {args.chunk_bits * args.n_chunks} payload bits "
         f"in {args.n_chunks} chunks at Eb/N0={args.ebn0} dB"
     )

@@ -1,0 +1,79 @@
+"""Golden known-answer suite (tier-1).
+
+Fixed-seed noisy symbols → expected decoded bits, committed as
+``tests/golden/*.npz`` (one per registered CodeSpec) by
+``tools/regen_golden.py``. The symbols are read from disk, NOT re-derived
+through the encoder/channel at test time, so a JAX/XLA version bump that
+moves any stage of the decode path — framing, depuncturing, quantization,
+folded branch metrics, ACS, traceback — fails here against a byte-stable
+reference instead of drifting silently.
+
+Every registered CodeSpec × backend × metric mode is replayed:
+``bits_f32`` must be reproduced exactly by metric modes "f32" AND "i16"
+(the i16 contract is bit-exact hard decisions), ``bits_i8`` by "i8".
+"""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.codespec import available_code_specs, get_code_spec
+from repro.core.engine import DecoderEngine
+from repro.core.pbvd import PBVDConfig
+from repro.kernels.ops import available_backends
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+
+
+def _load(name):
+    path = GOLDEN_DIR / (name.replace("/", "_") + ".npz")
+    if not path.exists():
+        pytest.fail(
+            f"missing golden vector {path.name} — run "
+            f"PYTHONPATH=src python tools/regen_golden.py"
+        )
+    with np.load(path, allow_pickle=False) as z:
+        data = {k: z[k] for k in z.files}
+    data["meta"] = json.loads(str(data["meta"]))
+    return data
+
+
+@pytest.mark.tier1
+def test_golden_covers_every_registered_spec():
+    missing = [
+        name
+        for name in available_code_specs()
+        if not (GOLDEN_DIR / (name.replace("/", "_") + ".npz")).exists()
+    ]
+    assert not missing, f"no golden vectors for {missing}; run tools/regen_golden.py"
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("backend", available_backends())
+@pytest.mark.parametrize("name", available_code_specs())
+@pytest.mark.parametrize("metric_mode", ["f32", "i16", "i8"])
+def test_golden_decode(name, backend, metric_mode):
+    g = _load(name)
+    meta = g["meta"]
+    spec = get_code_spec(name)
+    cfg = PBVDConfig(
+        spec=spec,
+        D=meta["D"],
+        L=meta["L"],
+        q=meta["q"],
+        backend=backend,
+        metric_mode=metric_mode,
+    )
+    bits = np.asarray(
+        DecoderEngine(cfg).decode(jnp.asarray(g["y"]), meta["n_bits"])
+    )
+    expected = g["bits_i8"] if metric_mode == "i8" else g["bits_f32"]
+    np.testing.assert_array_equal(
+        bits,
+        expected,
+        err_msg=f"{name}/{backend}/{metric_mode} drifted from the golden vector",
+    )

@@ -132,3 +132,185 @@ def test_integer_path_exactness():
     sp16, pm16 = acs_forward_ref(y16, code)
     assert jnp.array_equal(sp8, sp16)
     assert jnp.array_equal(pm8, pm16)
+
+
+# ---------------------------------------------------------------------------
+# Symmetry-folded branch metrics (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "name",
+    [
+        "ccsds", "ccsds-2/3", "ccsds-3/4", "ccsds-5/6",
+        "is95-k9", "is95-k9-2/3", "is95-k9-3/4", "is95-k9-5/6",
+        "lte-1/3",
+    ],
+)
+def test_folded_bm_equals_full_under_sign_expansion(name):
+    """Per-stage folded table == full table for every CodeSpec, punctured
+    rates included (erased symbols are exact zeros and stay BM-neutral)."""
+    import zlib
+
+    from repro.core.codespec import get_code_spec
+    from repro.kernels.ref import (
+        branch_metric_table,
+        expand_folded_bm,
+        folded_branch_metric_table,
+    )
+
+    rng = np.random.default_rng(zlib.adler32(name.encode()))
+    spec = get_code_spec(name)
+    code = spec.code
+    T = 12
+    y_punct = rng.normal(size=spec.n_symbols_for(T)).astype(np.float32)
+    y = spec.depuncture_stream(jnp.asarray(y_punct), T)  # (T, R), zeros erased
+    full = branch_metric_table(y, code)
+    folded = folded_branch_metric_table(y, code)
+    assert folded.shape[-1] == code.n_folded == (1 << (code.R - 1))
+    assert jnp.array_equal(expand_folded_bm(folded, code), full)
+    # erased (zero) symbols are BM-neutral: flipping an erased codeword bit
+    # cannot change any metric
+    if spec.is_punctured:
+        full_np = np.asarray(full)
+        y_np = np.asarray(y)
+        erased = np.nonzero(y_np == 0.0)  # (t, r) erased slots
+        for t, r in zip(*erased):
+            bit = 1 << (code.R - 1 - r)
+            for c in range(1 << code.R):
+                assert full_np[t, c] == full_np[t, c ^ bit]
+
+
+@pytest.mark.parametrize("code", [CCSDS_27, CODE_25, CODE_37], ids=["217", "215", "317"])
+@pytest.mark.parametrize("dtype", [np.float32, np.int8], ids=["f32", "i8"])
+def test_folded_acs_bit_exact_vs_full(code, dtype):
+    """The folded ACS path (the hot path) is bit-exact to the full-BM path."""
+    rng = np.random.default_rng(23)
+    y = _rand_y(rng, 96, code.R, 128, dtype)
+    sp_f, pm_f = acs_forward_ref(y, code, fold=True)
+    sp_u, pm_u = acs_forward_ref(y, code, fold=False)
+    assert jnp.array_equal(sp_f, sp_u)
+    assert jnp.array_equal(pm_f, pm_u)  # exact even in f32: ± rounding symmetry
+
+
+@pytest.mark.parametrize("start_policy", ["zero", "argmin"])
+def test_folded_decode_bit_exact_vs_full_decode(start_policy):
+    """Composed decode through the folded kernels == decode on the full
+    table (ref fold=False ACS + shared traceback), per start policy."""
+    rng = np.random.default_rng(29)
+    code = CCSDS_27
+    D, L = 64, 32
+    y = _rand_y(rng, D + 2 * L, code.R, 96, np.float32)
+    sp, pm = acs_forward_ref(y, code, fold=False)
+    if start_policy == "argmin":
+        start = jnp.argmin(pm, axis=0).astype(jnp.int32)
+    else:
+        start = jnp.zeros((y.shape[2],), jnp.int32)
+    full_bits = traceback_ref(sp, code, L, D, start)
+    for backend in ["ref", "pallas"] + (["fused"] if start_policy == "zero" else []):
+        got = pbvd_decode_blocks(
+            y, code, decode_start=L, n_decode=D, backend=backend,
+            start_policy=start_policy, interpret=True,
+        )
+        assert jnp.array_equal(got, full_bits), backend
+
+
+# ---------------------------------------------------------------------------
+# Narrow metric pipeline: the saturation contract (registry.METRIC_MODES)
+# ---------------------------------------------------------------------------
+def _normalized_acs_max_transient(y, code, norm_every):
+    """Numpy shadow of the normalized integer ACS (int64 — cannot wrap);
+    returns the largest |metric| ever formed across all stages, normalizing
+    at the same cadence the production kernels use."""
+    T, R, B = y.shape
+    signs = code.codeword_signs.astype(np.int64)
+    cw = code.butterfly_codewords
+    pm = np.zeros((code.n_states, B), np.int64)
+    max_abs = 0
+    for t in range(T):
+        bm = signs @ y[t].astype(np.int64)
+        pe, po = pm[0::2], pm[1::2]
+        m_te, m_to = pe + bm[cw[:, 0]], po + bm[cw[:, 2]]
+        m_be, m_bo = pe + bm[cw[:, 1]], po + bm[cw[:, 3]]
+        max_abs = max(
+            max_abs,
+            int(np.abs(np.concatenate([m_te, m_to, m_be, m_bo])).max()),
+        )
+        pm = np.concatenate([np.minimum(m_te, m_to), np.minimum(m_be, m_bo)])
+        if t % norm_every == norm_every - 1:
+            pm = pm - pm.min(axis=0, keepdims=True)
+    return max_abs
+
+
+def _adversarial_stream(rng, T, R, B, qmax):
+    """Worst-case-seeking stream: extreme ±qmax symbols (random, constant
+    runs, and alternating runs — the patterns that pump the PM spread)."""
+    thirds = T // 3
+    a = rng.choice([-qmax, qmax], size=(thirds, R, B))
+    b = np.full((thirds, R, B), qmax)
+    c = np.tile(
+        np.array([qmax, -qmax]).repeat(R * B).reshape(2, R, B),
+        (T - 2 * thirds + 1) // 2 + 1,
+    ).reshape(-1, R, B)[: T - 2 * thirds]
+    return np.concatenate([a, b, c]).astype(np.int64)
+
+
+@pytest.mark.parametrize(
+    "metric_mode,dtype_max", [("i16", 32767), ("i8", 127)], ids=["i16", "i8"]
+)
+@pytest.mark.parametrize("code", [CCSDS_27, CODE_37], ids=["217", "317"])
+def test_narrow_pm_never_saturates_10k_stages(code, metric_mode, dtype_max):
+    """10k adversarial stages: every transient metric stays within the
+    documented budget (< dtype max), and the narrow jnp path's decisions
+    stay bit-exact to unbounded int32 accumulation — saturation never
+    occurred."""
+    from repro.core.quantize import (
+        max_symbol_bits,
+        metric_mode_qmax,
+        norm_interval,
+        pm_spread_bound,
+    )
+
+    q = max_symbol_bits(code, dtype_max)
+    qmax = (1 << (q - 1)) - 1
+    assert qmax == metric_mode_qmax(code, metric_mode)
+    k = norm_interval(code, metric_mode)
+    budget = pm_spread_bound(code, qmax, k)
+    assert budget <= dtype_max  # the contract is satisfiable at this (q, k)
+
+    rng = np.random.default_rng(41)
+    T, B = 10_000, 2
+    y = _adversarial_stream(rng, T, code.R, B, qmax)
+
+    # numpy shadow tracks the true transient maximum over all 10k stages at
+    # the production cadence
+    max_abs = _normalized_acs_max_transient(y, code, k)
+    assert max_abs <= budget, f"transient {max_abs} exceeds budget {budget}"
+
+    # the narrow jnp pipeline agrees with unbounded int32 accumulation
+    yj = jnp.asarray(y.astype(np.int8 if qmax <= 127 else np.int16))
+    sp_narrow, pm_narrow = acs_forward_ref(yj, code, metric_mode=metric_mode)
+    sp_wide, _ = acs_forward_ref(yj.astype(jnp.int32), code, metric_mode="f32")
+    assert jnp.array_equal(sp_narrow, sp_wide)
+    assert int(jnp.max(jnp.abs(pm_narrow))) <= budget
+
+
+def test_narrow_pm_rejects_float_symbols():
+    """i16/i8 need pre-quantized integers; float symbols fail loudly."""
+    y = jnp.zeros((8, 2, 4), jnp.float32)
+    with pytest.raises(ValueError, match="pre-quantized"):
+        acs_forward_ref(y, CCSDS_27, metric_mode="i16")
+
+
+def test_narrow_pm_saturates_out_of_budget_symbols():
+    """Pre-quantized symbols beyond the mode's budget are CLIPPED on
+    ingestion, not wrapped: q=8 symbols through i8 decode like the exact
+    path on the clipped (±qmax) symbols — degraded, never garbage."""
+    from repro.core.quantize import metric_mode_qmax
+
+    rng = np.random.default_rng(47)
+    code = CCSDS_27
+    y8 = _rand_y(rng, 64, code.R, 128, np.int8)  # |y| up to 127 ≫ budget (3)
+    qm = metric_mode_qmax(code, "i8")
+    sp_i8, pm_i8 = acs_forward_ref(y8, code, metric_mode="i8")
+    sp_ref, _ = acs_forward_ref(jnp.clip(y8, -qm, qm), code, metric_mode="f32")
+    assert jnp.array_equal(sp_i8, sp_ref)
+    assert int(jnp.max(jnp.abs(pm_i8))) <= 127  # no wrap

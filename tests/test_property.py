@@ -62,14 +62,16 @@ def _tx(spec, n_bits, ebn0_db, seed):
     st.floats(3.0, 6.5),  # ebn0_db
     st.sampled_from([8, None]),  # quantization
     st.sampled_from(["zero", "argmin"]),  # start policy
+    st.sampled_from(["f32", "i16", "i8"]),  # metric mode
 )
-def test_backend_parity_matrix(name, n_bits, seed, ebn0_db, q, policy):
+def test_backend_parity_matrix(name, n_bits, seed, ebn0_db, q, policy, metric_mode):
     spec = get_code_spec(name)
     y = _tx(spec, n_bits, ebn0_db, seed)
     outs = {}
     for backend in BACKENDS:
         cfg = PBVDConfig(
-            spec=spec, D=32, L=12, q=q, backend=backend, start_policy=policy
+            spec=spec, D=32, L=12, q=q, backend=backend, start_policy=policy,
+            metric_mode=metric_mode,
         )
         engine = DecoderEngine(cfg)
         if policy not in backend_start_policies(backend):
@@ -80,8 +82,51 @@ def test_backend_parity_matrix(name, n_bits, seed, ebn0_db, q, policy):
     assert len(outs) >= 2
     for backend, bits in outs.items():
         np.testing.assert_array_equal(
-            bits, outs["ref"], err_msg=f"{name}/{backend}/{policy} diverged"
+            bits,
+            outs["ref"],
+            err_msg=f"{name}/{backend}/{policy}/{metric_mode} diverged",
         )
+
+
+# ---------------------------------------------------------------------------
+# metric-mode parity: f32 vs i16 exact; i8 exact on shared symbols and
+# within the quantizer's documented tolerance end-to-end
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", available_code_specs())
+@settings(**_COMMON)
+@given(
+    st.integers(48, 160),  # n_bits
+    st.integers(0, 2**16 - 1),  # seed
+    st.floats(4.0, 6.5),  # ebn0_db
+)
+def test_metric_mode_parity(name, n_bits, seed, ebn0_db):
+    spec = get_code_spec(name)
+    y = _tx(spec, n_bits, ebn0_db, seed)
+    # an adequate truncation depth (≈6K) keeps the i8-vs-f32 comparison in
+    # the quantizer-only regime — at marginal L the truncation noise itself
+    # cascades and swamps the quantizer tolerance
+    L = 6 * spec.code.K
+
+    def bits_for(mode, yy):
+        cfg = PBVDConfig(spec=spec, D=32, L=L, q=8, backend="ref", metric_mode=mode)
+        return np.asarray(DecoderEngine(cfg).decode(yy, n_bits)), cfg
+
+    f32, _ = bits_for("f32", y)
+    i16, _ = bits_for("i16", y)
+    # i16 never saturates within its budget → hard decisions are bit-exact
+    np.testing.assert_array_equal(i16, f32, err_msg=f"{name}: i16 != f32")
+
+    # i8 on the SAME coarse symbols as an f32 decode is also bit-exact: the
+    # budget proves no saturation, so only the quantizer can differ...
+    i8, cfg8 = bits_for("i8", y)
+    y_coarse = cfg8.quantize(DecoderEngine(cfg8)._to_full_rate(y))
+    f32_coarse, _ = bits_for("f32", y_coarse)
+    np.testing.assert_array_equal(
+        i8, f32_coarse, err_msg=f"{name}: i8 != f32 on shared coarse symbols"
+    )
+    # ...and end-to-end the coarse (q=3) quantizer stays within its documented
+    # tolerance of the q=8 decode (≈0.2-0.3 dB — far inside a 25% bit budget)
+    assert np.mean(i8 != f32) <= 0.25, f"{name}: i8 deviates beyond tolerance"
 
 
 # ---------------------------------------------------------------------------

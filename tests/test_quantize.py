@@ -65,4 +65,41 @@ def test_paper_u1_u2_values():
 def test_quantize_saturates():
     y = jnp.asarray([1e9, -1e9], dtype=jnp.float32)
     z = np.asarray(quantize_soft(y, 8))
-    assert z[0] == 127 and z[1] == -128
+    # clipping is SYMMETRIC: -2^(q-1) is excluded so in-register negation of
+    # a quantized symbol (the folded BM path) can never wrap
+    assert z[0] == 127 and z[1] == -127
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 3, 4, 8, 12, 16]))
+@settings(max_examples=25, deadline=None)
+def test_quantize_symmetric_clip_bounds(seed, q):
+    """|quantize_soft| ≤ 2^(q-1)-1 for any input, any q — and the bound is hit."""
+    rng = np.random.default_rng(seed)
+    qmax = (1 << (q - 1)) - 1
+    y = np.concatenate(
+        [rng.normal(scale=100.0, size=256), [1e30, -1e30, 0.0]]
+    ).astype(np.float32)
+    z = np.asarray(quantize_soft(jnp.asarray(y), q), dtype=np.int64)
+    assert z.max() == qmax and z.min() == -qmax
+    assert np.all(np.abs(z) <= qmax)
+    # negation of every representable value stays representable (fold safety)
+    assert np.all(np.abs(-z) <= qmax)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 16]))
+@settings(max_examples=25, deadline=None)
+def test_word_pack_roundtrip_non_multiple(seed, q):
+    """pack_words zero-pads a ragged last dim; unpack(per_axis_len) trims it."""
+    rng = np.random.default_rng(seed)
+    per = 32 // q
+    n = int(rng.integers(1, 16) * per + rng.integers(1, per))  # NOT a multiple
+    assert n % per != 0
+    qmax = (1 << (q - 1)) - 1
+    vals = rng.integers(-qmax, qmax + 1, n).astype(np.int32)
+    w = pack_words(jnp.asarray(vals), q)
+    assert w.shape == (-(-n // per),)
+    back = np.asarray(unpack_words(w, q, per_axis_len=n))
+    assert np.array_equal(back, vals)
+    # the pad region decodes as zeros (unpack without trimming)
+    full = np.asarray(unpack_words(w, q))
+    assert np.all(full[n:] == 0)

@@ -1,0 +1,118 @@
+"""Regenerate the golden known-answer vectors in tests/golden/.
+
+    PYTHONPATH=src python tools/regen_golden.py [--check]
+
+One ``.npz`` per registered CodeSpec, each holding a fixed-seed noisy
+transmission (the *symbols themselves* are stored, so the test suite never
+re-derives them through the encoder/channel — cross-version JAX/XLA drift in
+either shows up as a golden mismatch, not a silently moved reference):
+
+  ``payload``      (n_bits,) uint8   — the transmitted payload bits
+  ``y``            float32           — received soft symbols ((n, R) full-rate,
+                                       or (n,) punctured wire format)
+  ``bits_f32``     (n_bits,) uint8   — expected decode, metric_mode="f32"
+                                       (bit-exact for "i16" too, by contract)
+  ``bits_i8``      (n_bits,) uint8   — expected decode, metric_mode="i8"
+  ``meta``         json string       — geometry + generator provenance
+
+Decodes are generated with the ``ref`` backend; the backend-parity suite
+holds ``pallas``/``fused`` equal to ``ref``, so ``tests/test_golden.py``
+replays every spec × backend × metric mode against these arrays.
+
+``--check`` regenerates in memory and fails (exit 1) on any mismatch with
+the committed files — the regeneration workflow is: edit decoder → run
+``--check`` → if the change is *intended* to move decode results, rerun
+without ``--check`` and commit the new vectors with an explanation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import transmit
+from repro.core.codespec import available_code_specs, get_code_spec
+from repro.core.encoder import encode_jax, terminate
+from repro.core.engine import DecoderEngine
+from repro.core.pbvd import PBVDConfig
+
+GOLDEN_DIR = Path(__file__).resolve().parent.parent / "tests" / "golden"
+
+# Fixed golden geometry: D/L exercise the framing (several blocks per
+# stream, depth ≈ 6K for the largest registered K), q=8 symbols.
+GEOMETRY = dict(D=48, L=28, q=8)
+N_BITS = 160
+EBN0_DB = 4.5
+SEED = 20260729  # never change without regenerating every vector
+
+
+def spec_filename(name: str) -> str:
+    return name.replace("/", "_") + ".npz"
+
+
+def generate(name: str) -> dict:
+    spec = get_code_spec(name)
+    rng = np.random.default_rng(SEED)
+    payload = rng.integers(0, 2, N_BITS)
+    coded = encode_jax(jnp.asarray(terminate(payload, spec.code)), spec.code)
+    tx = spec.puncture_stream(coded) if spec.is_punctured else coded
+    y = np.asarray(transmit(jax.random.PRNGKey(SEED), tx, EBN0_DB, spec.rate))
+
+    out = dict(
+        payload=payload.astype(np.uint8),
+        y=y.astype(np.float32),
+        meta=json.dumps(
+            dict(spec=name, seed=SEED, ebn0_db=EBN0_DB, n_bits=N_BITS, **GEOMETRY)
+        ),
+    )
+    for mode in ("f32", "i8"):
+        cfg = PBVDConfig(spec=spec, backend="ref", metric_mode=mode, **GEOMETRY)
+        bits = np.asarray(DecoderEngine(cfg).decode(jnp.asarray(y), N_BITS))
+        out[f"bits_{mode}"] = bits.astype(np.uint8)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="verify committed vectors instead of rewriting them",
+    )
+    args = ap.parse_args(argv)
+
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    bad = []
+    for name in available_code_specs():
+        fresh = generate(name)
+        path = GOLDEN_DIR / spec_filename(name)
+        if args.check:
+            if not path.exists():
+                bad.append(f"{name}: {path.name} missing")
+                continue
+            with np.load(path, allow_pickle=False) as old:
+                for key, val in fresh.items():
+                    if key == "meta":
+                        continue
+                    if not np.array_equal(old[key], val):
+                        bad.append(f"{name}: {key} drifted")
+            print(f"[golden] {name}: ok")
+        else:
+            np.savez_compressed(path, **fresh)
+            ber = float(np.mean(fresh["bits_f32"] != fresh["payload"]))
+            print(f"[golden] wrote {path.name} (f32 BER {ber:.3f})")
+    if bad:
+        print("[golden] MISMATCH:\n  " + "\n  ".join(bad), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
