@@ -1,0 +1,58 @@
+"""Shared plumbing for the benchmark sweeps: timing, geometry, row merging.
+
+BENCH_*.json is a CUMULATIVE artifact: each sweep owns a set of row
+``kind``s and refreshing one sweep must replace exactly its own rows while
+preserving every other sweep's. Environment fields (jax version/backend,
+machine) describe the most recent write. The timing helper and the Table
+III geometry live here too, so every sweep measures the same way —
+cross-sweep comparability is the artifact's whole point.
+"""
+
+from __future__ import annotations
+
+import json
+import platform
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+# Paper Table III geometry (CCSDS (2,1,7) — 64 states, D=512, L=42, q=8).
+TABLE3 = dict(D=512, L=42, q=8)
+
+
+def time_median(fn, reps: int) -> float:
+    """Median of per-call wall times — robust to machine-load spikes that a
+    mean over one timed loop folds into every row."""
+    jax.block_until_ready(fn())  # warmup: trace + compile
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def merge_rows(
+    path: str,
+    rows: list[dict],
+    replace_kinds: tuple[str, ...],
+    *,
+    geometry: dict,
+) -> None:
+    """Merge ``rows`` into ``path``, replacing only rows of ``replace_kinds``."""
+    p = Path(path)
+    if p.exists():
+        doc = json.loads(p.read_text())
+        doc["rows"] = [
+            r for r in doc.get("rows", []) if r.get("kind") not in replace_kinds
+        ]
+    else:
+        doc = dict(geometry=geometry, rows=[])
+    doc["benchmark"] = "pbvd_bench"
+    doc["jax_version"] = jax.__version__
+    doc["jax_backend"] = jax.default_backend()
+    doc["machine"] = platform.machine()
+    doc["rows"] = doc["rows"] + rows
+    p.write_text(json.dumps(doc, indent=2) + "\n")

@@ -19,38 +19,27 @@ L=42, 8-bit symbols) and reports, per cell:
 from __future__ import annotations
 
 import argparse
-import json
-import platform
-import time
-from pathlib import Path
 
-import jax
 import jax.numpy as jnp
 import numpy as np
+
+try:
+    from . import bench_json  # package mode (python -m benchmarks.…)
+except ImportError:
+    import bench_json  # script mode (benchmarks/ on sys.path)
 
 from repro.core.codespec import get_code_spec
 from repro.core.engine import DecoderEngine
 from repro.core.pbvd import PBVDConfig
 from repro.kernels.ref import acs_forward_ref
 
-# Paper Table III geometry (CCSDS (2,1,7) — 64 states, D=512, L=42, q=8).
-TABLE3 = dict(D=512, L=42, q=8)
+TABLE3 = bench_json.TABLE3  # paper Table III geometry
 MODES = ("f32", "i16", "i8")
+METRIC_KINDS = ("acs_fold_vs_full", "metric_mode_mbps")
+_time = bench_json.time_median
 
 
-def _time(fn, reps: int) -> float:
-    """Median of per-call wall times — robust to machine-load spikes that a
-    mean over one timed loop folds into every row."""
-    jax.block_until_ready(fn())  # warmup: trace + compile
-    times = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times))
-
-
-def _fold_row(code, n_blocks: int, reps: int, seed: int) -> dict:
+def _fold_row(code, code_name: str, n_blocks: int, reps: int, seed: int) -> dict:
     """Forward-ACS folded vs full timing (quantized int8 symbols)."""
     T = TABLE3["D"] + 2 * TABLE3["L"]
     rng = np.random.default_rng(seed)
@@ -65,6 +54,7 @@ def _fold_row(code, n_blocks: int, reps: int, seed: int) -> dict:
     dt_full = _time(lambda: acs_forward_ref(y, code, fold=False), reps)
     return dict(
         kind="acs_fold_vs_full",
+        code=code_name,  # row identity for the bench_compare gate
         n_blocks=n_blocks,
         fold_ms=round(dt_fold * 1e3, 2),
         full_ms=round(dt_full * 1e3, 2),
@@ -83,7 +73,7 @@ def run(
     spec = get_code_spec(code)
     # fold micro-bench at the largest (saturating) fleet: the folded table
     # halves per-stage metric ops, which only shows once lanes fill SIMD
-    rows = [_fold_row(spec.code, max(n_blocks), reps, seed)]
+    rows = [_fold_row(spec.code, code, max(n_blocks), reps, seed)]
     for nb in n_blocks:
         n_bits = TABLE3["D"] * nb
         rng = np.random.default_rng(seed)
@@ -103,15 +93,8 @@ def run(
 
 
 def write_bench_json(rows: list[dict], path: str, *, code: str = "ccsds") -> None:
-    doc = dict(
-        benchmark="metric_sweep",
-        geometry=dict(code=code, **TABLE3),
-        jax_version=jax.__version__,
-        jax_backend=jax.default_backend(),
-        machine=platform.machine(),
-        rows=rows,
-    )
-    Path(path).write_text(json.dumps(doc, indent=2) + "\n")
+    """Merge the metric rows into ``path`` (other sweeps' rows preserved)."""
+    bench_json.merge_rows(path, rows, METRIC_KINDS, geometry=dict(code=code, **TABLE3))
 
 
 def main(argv=None):

@@ -11,11 +11,17 @@ Prints ``name,us_per_call,derived`` CSV lines per the repo convention.
                        (sequential vs decode_batch vs SessionPool)
   metric_sweep      — beyond-paper: folded-vs-full BM + f32/i16/i8
                        metric-mode decoded-bits/s (writes BENCH_*.json)
+  traceback_sweep   — beyond-paper: serial vs parallel-prefix traceback
+                       decoded-bits/s per tb_chunk + the ACS-vs-traceback
+                       phase timing split (merges into BENCH_*.json)
 
 ``--metric-mode`` runs ONLY the metric sweep (the folded/quantized
-hot-path numbers), e.g. the CI benchmark-smoke job runs
+hot-path numbers); ``--tb-mode serial prefix`` runs ONLY the traceback
+sweep (``--tb-chunk`` sizes the prefix chunks). The CI benchmark-smoke job
+runs both into one artifact, then gates it with tools/bench_compare.py:
 
     python benchmarks/run.py --metric-mode --out BENCH_pr.json --smoke
+    python benchmarks/run.py --tb-mode serial prefix --out BENCH_pr.json --smoke
 
 Roofline tables (assignment §Roofline) are produced by
 ``python -m repro.launch.roofline`` from the dry-run reports.
@@ -47,6 +53,7 @@ def _run_all() -> None:
         _sibling("punctured_sweep"),
         _sibling("batched_throughput"),
         _sibling("metric_sweep"),
+        _sibling("traceback_sweep"),
     ):
         t0 = time.perf_counter()
         mod.main()
@@ -63,7 +70,26 @@ def main(argv=None) -> None:
         action="store_true",
         help="run only the metric-pipeline sweep (folded BM + f32/i16/i8)",
     )
-    ap.add_argument("--out", default=None, help="write BENCH_*.json (metric sweep)")
+    ap.add_argument(
+        "--tb-mode",
+        nargs="+",
+        choices=("serial", "prefix"),
+        default=None,
+        metavar="MODE",
+        help="run only the traceback sweep with these tb modes (reports the "
+        "serial-vs-prefix decoded-bits/s and the ACS-vs-traceback phase split)",
+    )
+    ap.add_argument(
+        "--tb-chunk",
+        type=int,
+        nargs="+",
+        default=None,
+        metavar="C",
+        help="prefix chunk sizes for the traceback sweep (default: 32 64 128)",
+    )
+    ap.add_argument(
+        "--out", default=None, help="write/merge BENCH_*.json (sweep modes only)"
+    )
     ap.add_argument(
         "--smoke",
         action="store_true",
@@ -71,20 +97,42 @@ def main(argv=None) -> None:
     )
     args = ap.parse_args(argv)
 
-    if (args.out or args.smoke) and not args.metric_mode:
-        ap.error("--out/--smoke only apply to the metric sweep; add --metric-mode")
+    selected = args.metric_mode or args.tb_mode
+    if (args.out or args.smoke) and not selected:
+        ap.error("--out/--smoke only apply to the sweeps; add --metric-mode/--tb-mode")
+    if args.tb_chunk and not args.tb_mode:
+        ap.error("--tb-chunk only applies to the traceback sweep; add --tb-mode")
+    # smoke runs feed the CI regression gate: reps=5 medians keep a single
+    # noisy sample on a shared runner from tripping the 15% threshold
+    smoke_reps = 5
     if args.metric_mode:
         metric_sweep = _sibling("metric_sweep")
 
         n_blocks = (8,) if args.smoke else (64, 512)
-        rows = metric_sweep.run(n_blocks, reps=1 if args.smoke else 3)
+        rows = metric_sweep.run(n_blocks, reps=smoke_reps if args.smoke else 3)
         for r in rows:
             print("metric_sweep," + ",".join(f"{k}={v}" for k, v in r.items()))
         if args.out:
             metric_sweep.write_bench_json(rows, args.out)
             print(f"# wrote {args.out}", file=sys.stderr)
-        return
-    _run_all()
+    if args.tb_mode:
+        traceback_sweep = _sibling("traceback_sweep")
+
+        n_blocks = (8,) if args.smoke else (64, 512)
+        tb_chunks = tuple(args.tb_chunk) if args.tb_chunk else (32, 64, 128)
+        rows = traceback_sweep.run(
+            n_blocks,
+            tb_chunks=tb_chunks,
+            tb_modes=tuple(args.tb_mode),
+            reps=smoke_reps if args.smoke else 3,
+        )
+        for r in rows:
+            print("traceback_sweep," + ",".join(f"{k}={v}" for k, v in r.items()))
+        if args.out:
+            traceback_sweep.merge_bench_json(rows, args.out)
+            print(f"# merged into {args.out}", file=sys.stderr)
+    if not selected:
+        _run_all()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,174 @@
+"""Traceback sweep: serial-vs-prefix K2 timings + ACS/traceback phase split.
+
+Runs at the paper's 64-state Table III geometry (CCSDS (2,1,7), D=512,
+L=42, 8-bit symbols) and reports:
+
+  * ``traceback_sweep`` rows — end-to-end ``DecoderEngine.decode``
+    decoded-bits/s with ``tb_mode="serial"`` vs ``tb_mode="prefix"`` per
+    ``tb_chunk``, plus the serial step counts (T - decode_start for the
+    serial walk, the active-chunk count for the prefix walk — the paper's
+    O(T) chain becomes O(T/C));
+  * ``traceback_phase_split`` rows — forward-ACS wall time vs
+    traceback-only wall time per tb mode (the K1/K2 balance the paper
+    reports in Table III), measured on the jnp kernels directly.
+
+``--out BENCH_pr.json`` MERGES the rows into an existing benchmark artifact
+(other benchmarks' rows are kept; stale traceback rows are replaced):
+
+    PYTHONPATH=src python benchmarks/traceback_sweep.py \
+        [--n-blocks 64 512] [--tb-chunks 32 64 128] [--reps 3] \
+        [--backend ref] [--out BENCH_pr.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from . import bench_json  # package mode (python -m benchmarks.…)
+except ImportError:
+    import bench_json  # script mode (benchmarks/ on sys.path)
+
+from repro.core.codespec import get_code_spec
+from repro.core.engine import DecoderEngine
+from repro.core.pbvd import PBVDConfig
+from repro.kernels.ops import backend_tb_chunk_sensitive
+from repro.kernels.ref import acs_forward_ref, traceback_prefix_ref, traceback_ref
+from repro.kernels.traceback import prefix_chunk_geometry
+
+TABLE3 = bench_json.TABLE3  # paper Table III geometry
+TB_KINDS = ("traceback_sweep", "traceback_phase_split")
+_time = bench_json.time_median
+
+
+def _phase_split_row(code, code_name: str, n_blocks: int, reps: int, seed: int) -> dict:
+    """K1 (ACS) vs K2 (traceback) wall time on the jnp kernels."""
+    D, L = TABLE3["D"], TABLE3["L"]
+    T = D + 2 * L
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(
+        np.clip(np.round(rng.normal(size=(T, code.R, n_blocks)) * 31.75), -127, 127)
+        .astype(np.int8)
+    )
+    sp, _ = acs_forward_ref(y, code)
+    sp = jax.block_until_ready(sp)
+    start = jnp.zeros((n_blocks,), jnp.int32)
+    acs_ms = _time(lambda: acs_forward_ref(y, code), reps) * 1e3
+    tb_serial_ms = _time(lambda: traceback_ref(sp, code, L, D, start), reps) * 1e3
+    tb_prefix_ms = (
+        _time(lambda: traceback_prefix_ref(sp, code, L, D, start), reps) * 1e3
+    )
+    return dict(
+        kind="traceback_phase_split",
+        code=code_name,  # row identity for the bench_compare gate
+        backend="ref",  # the split always measures the jnp (ref) kernels
+        n_blocks=n_blocks,
+        acs_ms=round(acs_ms, 2),
+        tb_serial_ms=round(tb_serial_ms, 2),
+        tb_prefix_ms=round(tb_prefix_ms, 2),
+        tb_serial_share=round(tb_serial_ms / (acs_ms + tb_serial_ms), 3),
+        tb_prefix_share=round(tb_prefix_ms / (acs_ms + tb_prefix_ms), 3),
+    )
+
+
+def run(
+    n_blocks=(64, 512),
+    *,
+    code: str = "ccsds",
+    backend: str = "ref",
+    tb_chunks=(32, 64, 128),
+    tb_modes=("serial", "prefix"),
+    reps: int = 3,
+    seed: int = 7,
+) -> list[dict]:
+    spec = get_code_spec(code)
+    D, L = TABLE3["D"], TABLE3["L"]
+    T = D + 2 * L
+    if not backend_tb_chunk_sensitive(backend):
+        # chunk-free prefix implementation (e.g. ref's full-depth scan):
+        # per-chunk timings would be the identical launch re-measured —
+        # noise presented as a chunk-size effect. Keep one representative
+        # chunk row (its *_walk_steps still document the chunked kernels'
+        # serial-chain reduction at that C).
+        tb_chunks = tb_chunks[:1]
+    rows = [_phase_split_row(spec.code, code, max(n_blocks), reps, seed)]
+    for nb in n_blocks:
+        n_bits = D * nb
+        rng = np.random.default_rng(seed)
+        y = jnp.asarray(rng.normal(size=(n_bits, spec.code.R)).astype(np.float32))
+
+        def mbps(tb_mode: str, tb_chunk: int) -> float:
+            cfg = PBVDConfig(
+                spec=spec, backend=backend, tb_mode=tb_mode, tb_chunk=tb_chunk,
+                **TABLE3,
+            )
+            engine = DecoderEngine(cfg)
+            return n_bits / _time(lambda: engine.decode(y, n_bits), reps) / 1e6
+
+        serial_mbps = mbps("serial", tb_chunks[0]) if "serial" in tb_modes else None
+        for C in tb_chunks:
+            _, _, n_chunks, c_lo, _ = prefix_chunk_geometry(T, L, D, C)
+            row = dict(
+                kind="traceback_sweep",
+                code=code,
+                backend=backend,
+                n_blocks=nb,
+                n_bits=n_bits,
+                tb_chunk=C,
+                # walk lengths are derived stats (the *_steps suffix keeps
+                # them OUT of bench_compare's row identity — a PR that
+                # shortens the walk must still gate against the old row)
+                serial_walk_steps=T - L,  # early-exit serial walk length
+                prefix_walk_steps=n_chunks - c_lo,  # composed-map walk length
+            )
+            if serial_mbps is not None:
+                row["serial_mbps"] = round(serial_mbps, 2)
+            if "prefix" in tb_modes:
+                row["prefix_mbps"] = round(mbps("prefix", C), 2)
+            if serial_mbps is not None and "prefix" in tb_modes:
+                row["prefix_vs_serial"] = round(row["prefix_mbps"] / serial_mbps, 2)
+            rows.append(row)
+    return rows
+
+
+def merge_bench_json(rows: list[dict], path: str, *, code: str = "ccsds") -> None:
+    """Merge the traceback rows into ``path`` (other sweeps' rows preserved)."""
+    bench_json.merge_rows(path, rows, TB_KINDS, geometry=dict(code=code, **TABLE3))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-blocks", type=int, nargs="+", default=[64, 512])
+    ap.add_argument("--tb-chunks", type=int, nargs="+", default=[32, 64, 128])
+    ap.add_argument("--code", default="ccsds")
+    ap.add_argument("--backend", default="ref")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default=None, help="merge rows into this BENCH_*.json")
+    args = ap.parse_args(argv if argv is not None else [])
+    rows = run(
+        tuple(args.n_blocks),
+        code=args.code,
+        backend=args.backend,
+        tb_chunks=tuple(args.tb_chunks),
+        reps=args.reps,
+    )
+    for r in rows:
+        print("traceback_sweep," + ",".join(f"{k}={v}" for k, v in r.items()))
+    if args.out:
+        merge_bench_json(rows, args.out, code=args.code)
+        print(f"# merged into {args.out}")
+    print(
+        "\nthe prefix traceback composes tb_chunk-stage survivor maps in "
+        "parallel and walks ceil(T/C) composed maps instead of T stages — "
+        "the last serial O(T) chain in the decoder becomes O(T/C)."
+    )
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

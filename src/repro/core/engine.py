@@ -224,6 +224,8 @@ class DecoderEngine:
             interpret=interpret,
             frame_counts=frame_counts,
             metric_mode=cfg.metric_mode,
+            tb_mode=cfg.tb_mode,
+            tb_chunk=cfg.tb_chunk,
         )
 
 

@@ -24,6 +24,8 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.traceback import DEFAULT_TB_CHUNK
+
 from .codespec import CodeSpec
 from .quantize import max_symbol_bits, metric_dtype_max, quantize_soft, u1_bytes, u2_bytes
 from .trellis import CCSDS_27, ConvCode
@@ -51,6 +53,12 @@ class PBVDConfig:
     pipeline — the engine quantizes symbols to the widest width whose
     saturation budget fits the metric dtype (``effective_q``), so the narrow
     paths never saturate.
+
+    ``tb_mode`` selects the traceback algorithm (the
+    :data:`~repro.kernels.registry.TB_MODES` contract): ``"serial"`` walks
+    one stage per step; ``"prefix"`` composes ``tb_chunk``-stage survivor
+    maps in parallel and cuts the serial chain to ceil(T/tb_chunk) steps —
+    bit-exact to serial for every chunk size.
     """
 
     code: ConvCode = CCSDS_27
@@ -61,6 +69,8 @@ class PBVDConfig:
     backend: Literal["pallas", "ref", "fused"] = "pallas"
     spec: CodeSpec | None = None
     metric_mode: Literal["f32", "i16", "i8"] = "f32"
+    tb_mode: Literal["serial", "prefix"] = "serial"
+    tb_chunk: int = DEFAULT_TB_CHUNK  # prefix traceback chunk size
 
     @property
     def T(self) -> int:  # stages per parallel block
@@ -111,6 +121,10 @@ class PBVDConfig:
             raise ValueError("D must be positive, L non-negative")
         if self.metric_mode not in ("f32", "i16", "i8"):
             raise ValueError(f"unknown metric_mode {self.metric_mode!r}")
+        if self.tb_mode not in ("serial", "prefix"):
+            raise ValueError(f"unknown tb_mode {self.tb_mode!r}")
+        if self.tb_chunk < 1:
+            raise ValueError(f"tb_chunk must be >= 1, got {self.tb_chunk}")
         if self.spec is not None and self.spec.code is not self.code:
             # keep cfg.code authoritative for kernel callers
             object.__setattr__(self, "code", self.spec.code)

@@ -14,6 +14,14 @@ per decoded bit drops from ≈ 11.6 B (int8 symbols + SP out + SP in + bits)
 to ≈ (1+2L/D)·R·1 B in + 1/8 B out ≈ 2.5 B:  a ~4.6× memory-roofline win
 that the GPU architecture structurally cannot reach.
 
+``tb_mode`` selects the phase-2 traceback: ``"serial"`` walks one stage per
+step (stopping at ``decode_start`` — earlier stages emit nothing);
+``"prefix"`` runs the chunked survivor-map composition of
+:mod:`repro.kernels.traceback` directly from the VMEM SP scratch (the
+composed-map and decoded-bit scratches also live in VMEM), keeping the
+~2.5 B/bit HBM roofline while cutting the serial chain from T steps to
+ceil(T/tb_chunk) — see DESIGN.md §9.
+
 Validated bit-exactly against the two-kernel path and the jnp oracle
 (`tests/test_fused_kernel.py`).
 """
@@ -31,32 +39,26 @@ from repro.core.trellis import ConvCode
 from .acs import LANE_TILE, butterfly_bm_row, folded_bm_rows
 from repro.core.quantize import metric_mode_qmax, norm_interval
 from .ref import _acc_dtype_for
+from .traceback import DEFAULT_TB_CHUNK, _prefix_traceback_phases, prefix_chunk_geometry
 
 __all__ = ["pbvd_fused_pallas"]
 
 
-def _fused_kernel(
-    y_ref,  # (T, R, TILE) symbols
-    start_ref,  # (1, TILE) int32 traceback start state
-    bits_ref,  # (n_words, TILE) int32 out: bit-packed decoded bits
-    sp_ref,  # VMEM scratch (T, W, TILE) int32 survivor words
-    pm_ref,  # VMEM scratch (N, TILE) acc path metrics
+def _acs_phase(
+    y_ref,
+    pm_ref,
+    sp_write,
     *,
     code: ConvCode,
     n_stages: int,
-    decode_start: int,
-    n_decode: int,
     acc_dtype,
     norm_every: int,
 ):
+    """Phase 1: forward ACS; survivor words handed to ``sp_write(s, words)``."""
     tile = pm_ref.shape[-1]
-    v = code.v
-    half = code.n_states // 2
-    W = sp_ref.shape[1]
 
     pm_ref[...] = jnp.zeros_like(pm_ref)
 
-    # ---- phase 1: forward ACS, SP stays in VMEM ---------------------------------
     def acs_body(s, pm):
         y_s = y_ref[pl.ds(s, 1)][0].astype(acc_dtype)  # (R, TILE)
         # symmetry-folded BM: 2^(R-1) rows once, α/γ/β/θ by in-register signs
@@ -89,16 +91,50 @@ def _fused_kernel(
             dec = jnp.concatenate([dec, jnp.zeros((pad, tile), jnp.int32)], axis=0)
         d = dec.reshape(-1, 32, tile)
         weights = (jnp.int32(1) << jnp.arange(32, dtype=jnp.int32))[None, :, None]
-        sp_ref[pl.ds(s, 1)] = (d * weights).sum(axis=1, dtype=jnp.int32)[None]
+        sp_write(s, (d * weights).sum(axis=1, dtype=jnp.int32))  # (W, TILE)
         return new_pm
 
     pm = jax.lax.fori_loop(0, n_stages, acs_body, pm_ref[...], unroll=False)
     pm_ref[...] = pm
 
-    # ---- phase 2: traceback from VMEM, emit packed bits ---------------------------
+
+def _fused_kernel(
+    y_ref,  # (T, R, TILE) symbols
+    start_ref,  # (1, TILE) int32 traceback start state
+    bits_ref,  # (n_words, TILE) int32 out: bit-packed decoded bits
+    sp_ref,  # VMEM scratch (T, W, TILE) int32 survivor words
+    pm_ref,  # VMEM scratch (N, TILE) acc path metrics
+    *,
+    code: ConvCode,
+    n_stages: int,
+    decode_start: int,
+    n_decode: int,
+    acc_dtype,
+    norm_every: int,
+):
+    tile = pm_ref.shape[-1]
+    v = code.v
+    half = code.n_states // 2
+    W = sp_ref.shape[1]
+
+    # ---- phase 1: forward ACS, SP stays in VMEM ---------------------------------
+    def sp_write(s, words):
+        sp_ref[pl.ds(s, 1)] = words[None]
+
+    _acs_phase(
+        y_ref,
+        pm_ref,
+        sp_write,
+        code=code,
+        n_stages=n_stages,
+        acc_dtype=acc_dtype,
+        norm_every=norm_every,
+    )
+
+    # ---- phase 2: serial traceback from VMEM, emit packed bits -------------------
     def tb_body(i, carry):
         state, word = carry
-        s = n_stages - 1 - i
+        s = n_stages - 1 - i  # walk stages T-1 .. decode_start (early exit)
         sp_t = sp_ref[pl.ds(s, 1)][0]  # (W, TILE)
         word_idx = state >> 5
         sel = sp_t[0][None, :]
@@ -121,14 +157,105 @@ def _fused_kernel(
         return 2 * (state % half) + bit, word
 
     state0 = start_ref[...]
+    # stages below decode_start feed nothing the emitted words depend on:
+    # the last flush fires at s = decode_start (b = 0)
     jax.lax.fori_loop(
-        0, n_stages, tb_body, (state0, jnp.zeros((1, tile), jnp.int32)), unroll=False
+        0,
+        n_stages - decode_start,
+        tb_body,
+        (state0, jnp.zeros((1, tile), jnp.int32)),
+        unroll=False,
+    )
+
+
+def _fused_prefix_kernel(
+    y_ref,  # (T, R, TILE) symbols
+    start_ref,  # (1, TILE) int32 traceback start state
+    bits_ref,  # (n_words, TILE) int32 out: bit-packed decoded bits
+    sp_ref,  # VMEM scratch (n_chunks, C, W, TILE) int32 survivor words
+    pm_ref,  # VMEM scratch (N, TILE) acc path metrics
+    maps_ref,  # VMEM scratch (n_act, N, TILE) int32 composed chunk maps
+    entry_ref,  # VMEM scratch (nc_e, TILE) int32 chunk entry states
+    tbbits_ref,  # VMEM scratch (nc_e, C, TILE) int32 unpacked decoded bits
+    *,
+    code: ConvCode,
+    n_stages: int,
+    decode_start: int,
+    n_decode: int,
+    acc_dtype,
+    norm_every: int,
+    C: int,
+    P: int,
+    n_chunks: int,
+    c_lo: int,
+    c_hi: int,
+):
+    tile = pm_ref.shape[-1]
+
+    # ---- phase 1: forward ACS into the chunk-major SP scratch -------------------
+    if P:  # pad rows below stage 0 (chunk 0) are inert zero words
+        sp_ref[0:1, 0:P] = jnp.zeros_like(sp_ref[0:1, 0:P])
+
+    def sp_write(s, words):
+        flat = s + P
+        sp_ref[pl.ds(flat // C, 1), pl.ds(flat % C, 1)] = words[None, None]
+
+    _acs_phase(
+        y_ref,
+        pm_ref,
+        sp_write,
+        code=code,
+        n_stages=n_stages,
+        acc_dtype=acc_dtype,
+        norm_every=norm_every,
+    )
+
+    # ---- phase 2: chunked map composition + short walk + expansion --------------
+    def emit(row, out_bit):
+        tbbits_ref[:, pl.ds(row, 1)] = out_bit
+
+    _prefix_traceback_phases(
+        sp_ref,
+        start_ref[...],
+        emit,
+        maps_ref,
+        entry_ref,
+        code=code,
+        C=C,
+        n_chunks=n_chunks,
+        c_lo=c_lo,
+        c_hi=c_hi,
+    )
+
+    # ---- phase 3: pack the decode region to output words --------------------------
+    # same vectorized pack idiom as the ACS phase: flatten the chunk-major
+    # bit scratch, slice the decode window (static bounds), zero-pad bits
+    # that overhang T (they don't exist; serial mode leaves them 0 too) and
+    # reduce 32 sublanes per word
+    ds_local = (decode_start + P) - c_lo * C
+    n_window = min(n_decode, n_stages - decode_start)  # bits that exist
+    n_words = bits_ref.shape[0]
+    flat = tbbits_ref[...].reshape(-1, tile)[ds_local : ds_local + n_window]
+    pad = n_words * 32 - n_window
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad, tile), jnp.int32)], axis=0)
+    weights = (jnp.int32(1) << jnp.arange(32, dtype=jnp.int32))[None, :, None]
+    bits_ref[...] = (flat.reshape(n_words, 32, tile) * weights).sum(
+        axis=1, dtype=jnp.int32
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("code", "decode_start", "n_decode", "interpret", "metric_mode"),
+    static_argnames=(
+        "code",
+        "decode_start",
+        "n_decode",
+        "interpret",
+        "metric_mode",
+        "tb_mode",
+        "tb_chunk",
+    ),
 )
 def pbvd_fused_pallas(
     y: jnp.ndarray,
@@ -139,18 +266,24 @@ def pbvd_fused_pallas(
     start_state: jnp.ndarray | None = None,
     interpret: bool = False,
     metric_mode: str = "f32",
+    tb_mode: str = "serial",
+    tb_chunk: int = DEFAULT_TB_CHUNK,
 ) -> jnp.ndarray:
     """One-kernel PBVD decode. y (T, R, B) → packed bits (n_decode/32, B) int32.
 
     n_decode must be a multiple of 32 (bit-packed output words).
     ``metric_mode`` "i16"/"i8" adds the per-stage min-subtract normalization
     (int32 VPU registers — see ``repro.kernels.registry.METRIC_MODES``).
+    ``tb_mode="prefix"`` runs the chunked parallel-prefix traceback from the
+    VMEM survivor scratch (bit-exact to serial for any ``tb_chunk``).
     """
     T, R, B = y.shape
     if n_decode % 32:
         raise ValueError("n_decode must be a multiple of 32")
     if B % LANE_TILE:
         raise ValueError(f"B={B} not a multiple of {LANE_TILE}")
+    if tb_mode not in ("serial", "prefix"):
+        raise ValueError(f"unknown tb_mode {tb_mode!r}")
     semantic = _acc_dtype_for(y.dtype, metric_mode)
     acc_dtype = jnp.float32 if semantic == jnp.float32 else jnp.int32
     norm_every = norm_interval(code, metric_mode)
@@ -168,8 +301,7 @@ def pbvd_fused_pallas(
     if start_state is None:
         start_state = jnp.zeros((B,), jnp.int32)
 
-    kernel = functools.partial(
-        _fused_kernel,
+    common = dict(
         code=code,
         n_stages=T,
         decode_start=decode_start,
@@ -177,6 +309,35 @@ def pbvd_fused_pallas(
         acc_dtype=acc_dtype,
         norm_every=norm_every,
     )
+    if tb_mode == "serial":
+        kernel = functools.partial(_fused_kernel, **common)
+        scratch = [
+            pltpu.VMEM((T, W, LANE_TILE), jnp.int32),
+            pltpu.VMEM((N, LANE_TILE), acc_dtype),
+        ]
+    else:
+        # geometry over the bits that exist: the packed width n_decode may
+        # overhang T at ragged D (top word bits stay 0, as in serial mode)
+        n_window = min(n_decode, T - decode_start)
+        C, P, n_chunks, c_lo, c_hi = prefix_chunk_geometry(
+            T, decode_start, n_window, tb_chunk
+        )
+        kernel = functools.partial(
+            _fused_prefix_kernel,
+            **common,
+            C=C,
+            P=P,
+            n_chunks=n_chunks,
+            c_lo=c_lo,
+            c_hi=c_hi,
+        )
+        scratch = [
+            pltpu.VMEM((n_chunks, C, W, LANE_TILE), jnp.int32),
+            pltpu.VMEM((N, LANE_TILE), acc_dtype),
+            pltpu.VMEM((n_chunks - c_lo, N, LANE_TILE), jnp.int32),
+            pltpu.VMEM((c_hi - c_lo + 1, LANE_TILE), jnp.int32),
+            pltpu.VMEM((c_hi - c_lo + 1, C, LANE_TILE), jnp.int32),
+        ]
     packed = pl.pallas_call(
         kernel,
         grid=(n_bt,),
@@ -186,10 +347,7 @@ def pbvd_fused_pallas(
         ],
         out_specs=pl.BlockSpec((n_words, LANE_TILE), lambda bt: (0, bt)),
         out_shape=jax.ShapeDtypeStruct((n_words, B), jnp.int32),
-        scratch_shapes=[
-            pltpu.VMEM((T, W, LANE_TILE), jnp.int32),
-            pltpu.VMEM((N, LANE_TILE), acc_dtype),
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(y, start_state.reshape(1, B).astype(jnp.int32))
     return packed

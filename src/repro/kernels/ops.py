@@ -34,25 +34,32 @@ from . import ref as _ref
 from .acs import LANE_TILE, DEFAULT_STAGE_CHUNK, acs_forward_pallas
 from .registry import (
     METRIC_MODES,
+    TB_MODES,
     FramedBlocks,
     available_backends,
     backend_metric_modes,
     backend_start_policies,
+    backend_tb_chunk_sensitive,
+    backend_tb_modes,
     get_backend,
     register_backend,
 )
-from .traceback import traceback_pallas
+from .traceback import DEFAULT_TB_CHUNK, traceback_pallas, traceback_prefix_pallas
 
 __all__ = [
     "pbvd_decode_blocks",
     "default_interpret",
     "FramedBlocks",
     "METRIC_MODES",
+    "TB_MODES",
+    "DEFAULT_TB_CHUNK",
     "register_backend",
     "get_backend",
     "available_backends",
     "backend_start_policies",
     "backend_metric_modes",
+    "backend_tb_modes",
+    "backend_tb_chunk_sensitive",
 ]
 
 
@@ -73,7 +80,12 @@ def _pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 # Backends
 # ---------------------------------------------------------------------------
-@register_backend("ref", metric_modes=("f32", "i16", "i8"))
+@register_backend(
+    "ref",
+    metric_modes=("f32", "i16", "i8"),
+    tb_modes=("serial", "prefix"),
+    tb_chunk_sensitive=False,  # full-depth associative scan — no chunks
+)
 def _decode_ref(
     blocks: FramedBlocks,
     code: ConvCode,
@@ -82,19 +94,30 @@ def _decode_ref(
     stage_chunk: int = DEFAULT_STAGE_CHUNK,
     interpret: bool = False,
     metric_mode: str = "f32",
+    tb_mode: str = "serial",
+    tb_chunk: int = DEFAULT_TB_CHUNK,
 ) -> jnp.ndarray:
-    """Pure-jnp oracle path (also the XLA-fused fast path on CPU)."""
+    """Pure-jnp oracle path (also the XLA-fused fast path on CPU).
+
+    ``tb_mode="prefix"`` uses the ``lax.associative_scan`` state-map
+    composition (log-depth, exact); ``tb_chunk`` is a kernel-layout knob and
+    is ignored here — the scan composes at full depth either way, and the
+    decoded bits are identical for every chunking.
+    """
     B = blocks.y.shape[2]
     sp, pm = _ref.acs_forward_ref(blocks.y, code, metric_mode=metric_mode)
     if start_policy == "argmin":
         start = jnp.argmin(pm, axis=0).astype(jnp.int32)
     else:
         start = jnp.zeros((B,), jnp.int32)
-    bits = _ref.traceback_ref(sp, code, blocks.decode_start, blocks.n_decode, start)
+    tb = _ref.traceback_prefix_ref if tb_mode == "prefix" else _ref.traceback_ref
+    bits = tb(sp, code, blocks.decode_start, blocks.n_decode, start)
     return bits[:, : blocks.n_real_blocks]
 
 
-@register_backend("pallas", metric_modes=("f32", "i16", "i8"))
+@register_backend(
+    "pallas", metric_modes=("f32", "i16", "i8"), tb_modes=("serial", "prefix")
+)
 def _decode_pallas(
     blocks: FramedBlocks,
     code: ConvCode,
@@ -103,8 +126,10 @@ def _decode_pallas(
     stage_chunk: int = DEFAULT_STAGE_CHUNK,
     interpret: bool = False,
     metric_mode: str = "f32",
+    tb_mode: str = "serial",
+    tb_chunk: int = DEFAULT_TB_CHUNK,
 ) -> jnp.ndarray:
-    """Two-kernel path (paper K1 ACS + K2 traceback)."""
+    """Two-kernel path (paper K1 ACS + K2 traceback, serial or prefix)."""
     T = blocks.y.shape[0]
     y = _pad_axis(blocks.y, 2, LANE_TILE)  # lane padding
     y = _pad_axis(y, 0, stage_chunk)  # stage padding (end; BM-neutral zeros)
@@ -124,18 +149,34 @@ def _decode_pallas(
         # state at T, so drop the pad-stage survivors before the traceback.
         sp = sp[:T]
         start = jnp.zeros((Bp,), jnp.int32)
-    bits = traceback_pallas(
-        sp,
-        start,
-        code,
-        decode_start=blocks.decode_start,
-        n_decode=blocks.n_decode,
-        interpret=interpret,
-    )
+    if tb_mode == "prefix":
+        bits = traceback_prefix_pallas(
+            sp,
+            start,
+            code,
+            decode_start=blocks.decode_start,
+            n_decode=blocks.n_decode,
+            tb_chunk=tb_chunk,
+            interpret=interpret,
+        )
+    else:
+        bits = traceback_pallas(
+            sp,
+            start,
+            code,
+            decode_start=blocks.decode_start,
+            n_decode=blocks.n_decode,
+            interpret=interpret,
+        )
     return bits[:, : blocks.n_real_blocks]
 
 
-@register_backend("fused", start_policies=("zero",), metric_modes=("f32", "i16", "i8"))
+@register_backend(
+    "fused",
+    start_policies=("zero",),
+    metric_modes=("f32", "i16", "i8"),
+    tb_modes=("serial", "prefix"),
+)
 def _decode_fused(
     blocks: FramedBlocks,
     code: ConvCode,
@@ -144,6 +185,8 @@ def _decode_fused(
     stage_chunk: int = DEFAULT_STAGE_CHUNK,
     interpret: bool = False,
     metric_mode: str = "f32",
+    tb_mode: str = "serial",
+    tb_chunk: int = DEFAULT_TB_CHUNK,
 ) -> jnp.ndarray:
     """Single-kernel path (ACS + in-VMEM traceback, bit-packed output) —
     see kernels/fused.py; unpacked here for API compatibility."""
@@ -164,10 +207,25 @@ def _decode_fused(
         n_decode=nd,
         interpret=interpret,
         metric_mode=metric_mode,
+        tb_mode=tb_mode,
+        tb_chunk=tb_chunk,
     )
+    # unpack only what is kept: trim pad lanes BEFORE the 32× shift-expand
+    # and expand the ragged last word to just its live rows, so the
+    # intermediate is (n_decode, n_real) instead of (n_words·32, B_padded)
+    packed = packed[:, : blocks.n_real_blocks]
+    n_full = blocks.n_decode // 32
+    rem = blocks.n_decode - n_full * 32
     shifts = jnp.arange(32, dtype=jnp.int32)
-    bits = ((packed[:, None, :] >> shifts[None, :, None]) & 1).reshape(-1, y.shape[2])
-    return bits[: blocks.n_decode, : blocks.n_real_blocks].astype(jnp.int32)
+    parts = []
+    if n_full:
+        full = (packed[:n_full, None, :] >> shifts[None, :, None]) & 1
+        parts.append(full.reshape(n_full * 32, -1))
+    if rem:
+        tail = (packed[n_full, None, :] >> shifts[:rem, None]) & 1
+        parts.append(tail)
+    bits = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+    return bits.astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -185,6 +243,8 @@ def _decode_fused(
         "interpret",
         "n_real",
         "metric_mode",
+        "tb_mode",
+        "tb_chunk",
     ),
 )
 def _decode_blocks_jit(
@@ -199,6 +259,8 @@ def _decode_blocks_jit(
     interpret: bool,
     n_real: int | None,
     metric_mode: str,
+    tb_mode: str,
+    tb_chunk: int,
 ) -> jnp.ndarray:
     fn = get_backend(backend)
     return fn(
@@ -213,6 +275,8 @@ def _decode_blocks_jit(
         stage_chunk=stage_chunk,
         interpret=interpret,
         metric_mode=metric_mode,
+        tb_mode=tb_mode,
+        tb_chunk=tb_chunk,
     )
 
 
@@ -228,6 +292,8 @@ def pbvd_decode_blocks(
     interpret: bool | None = None,
     frame_counts: tuple[int, ...] | None = None,
     metric_mode: Literal["f32", "i16", "i8"] = "f32",
+    tb_mode: Literal["serial", "prefix"] = "serial",
+    tb_chunk: int = DEFAULT_TB_CHUNK,
 ) -> jnp.ndarray:
     """Decode framed parallel blocks via the named backend.
 
@@ -240,12 +306,16 @@ def pbvd_decode_blocks(
         "f32" accumulates unbounded; "i16"/"i8" run the narrow normalized
         pipeline and require pre-quantized integer symbols within the
         saturation budget (the engine quantizes accordingly).
+    ``tb_mode`` selects the traceback algorithm (:data:`TB_MODES`): "serial"
+        is the paper's stage walk, "prefix" the chunked parallel-prefix
+        survivor-map composition (bit-exact; ``tb_chunk`` sizes the chunks
+        and is ignored by "serial").
     Returns (n_decode, n_real_blocks) int32 decoded bits.
 
-    Backend, start-policy and metric-mode are validated *before* jit: an
-    unknown backend raises ``KeyError``, an unsupported start policy or
-    metric mode raises ``ValueError`` eagerly (never a trace-time error from
-    inside the kernel adapter).
+    Backend, start-policy, metric-mode and tb-mode are validated *before*
+    jit: an unknown backend raises ``KeyError``, an unsupported start
+    policy, metric mode or tb mode raises ``ValueError`` eagerly (never a
+    trace-time error from inside the kernel adapter).
 
     Only the TOTAL real-lane count enters the jit cache key: lanes are
     mutually independent and per-frame unpacking happens host-side, so the
@@ -267,6 +337,19 @@ def pbvd_decode_blocks(
             f"backend {backend!r} does not support metric_mode={metric_mode!r}; "
             f"supported: {supported_modes}"
         )
+    supported_tb = backend_tb_modes(backend)
+    if tb_mode not in supported_tb:
+        raise ValueError(
+            f"backend {backend!r} does not support tb_mode={tb_mode!r}; "
+            f"supported: {supported_tb}"
+        )
+    if tb_chunk < 1:
+        raise ValueError(f"tb_chunk must be >= 1, got {tb_chunk}")
+    if tb_mode == "serial" or not backend_tb_chunk_sensitive(backend):
+        # the launch ignores tb_chunk (serial walk, or a chunk-free prefix
+        # implementation): normalize it out of the jit cache key so callers
+        # sweeping tb_chunk don't recompile identical launches
+        tb_chunk = DEFAULT_TB_CHUNK
     return _decode_blocks_jit(
         y_blocks,
         code,
@@ -278,4 +361,6 @@ def pbvd_decode_blocks(
         interpret=interpret,
         n_real=sum(frame_counts) if frame_counts is not None else None,
         metric_mode=metric_mode,
+        tb_mode=tb_mode,
+        tb_chunk=tb_chunk,
     )

@@ -38,6 +38,8 @@ __all__ = [
     "expand_folded_bm",
     "acs_forward_ref",
     "traceback_ref",
+    "traceback_prefix_ref",
+    "stage_maps_ref",
     "pbvd_decode_ref",
 ]
 
@@ -283,6 +285,66 @@ def traceback_ref(
     _, bits_rev = jax.lax.scan(step, state0, sp[::-1])
     bits = bits_rev[::-1]  # (T, B), bits[t] = decoded input bit of stage t
     return jax.lax.dynamic_slice_in_dim(bits, decode_start, D, axis=0)
+
+
+def stage_maps_ref(sp: jnp.ndarray, code: ConvCode) -> jnp.ndarray:
+    """Per-stage predecessor maps from packed survivor words.
+
+    sp: (T, W, B) → f: (T, N, B) int32 with ``f[t, n]`` the state the
+    traceback walk moves to when it sits in state ``n`` after stage ``t``
+    (i.e. at "time" t+1): ``f_t(n) = 2·(n mod N/2) + sp_bit_t(n)``. The
+    word/bit extraction uses only STATIC indices (``n`` ranges over all
+    states), so no data-dependent gather exists here — the gathers live in
+    the map *composition*, which the TPU kernels replace with sublane
+    selects (DESIGN.md §9).
+    """
+    N = code.n_states
+    states = jnp.arange(N, dtype=jnp.int32)
+    words = sp[:, states >> 5, :]  # (T, N, B) static gather
+    bits = (words >> (states & 31)[None, :, None]) & 1
+    return 2 * (states % (N // 2))[None, :, None] + bits
+
+
+@partial(jax.jit, static_argnames=("code", "decode_start", "n_decode"))
+def traceback_prefix_ref(
+    sp: jnp.ndarray,
+    code: ConvCode,
+    decode_start: int,
+    n_decode: int,
+    start_state: jnp.ndarray | int = 0,
+) -> jnp.ndarray:
+    """Parallel-prefix traceback: O(log T) composition depth, zero serial walk.
+
+    Bit-exact to :func:`traceback_ref` for any survivor history: each stage's
+    predecessor map is an N-entry int vector, map composition
+    ``(g ∘ f)[n] = g[f[n]]`` is associative, and ``lax.associative_scan``
+    over the stage-reversed maps yields, for every prefix length i, the
+    composed map ``f_{T-1-i} ∘ … ∘ f_{T-1}`` — i.e. the walk state at time
+    ``T-1-i`` as a function of the start state. Applying every prefix to
+    ``start_state`` recovers the full state trajectory at once; the decoded
+    bit of stage t is the MSB of the state at time t+1 (exactly the serial
+    walk's emit rule). This is the jnp oracle for the chunked Pallas prefix
+    kernels (which trade the log-depth scan for a T/C-step walk to stay
+    gather-free — see kernels/traceback.py).
+    """
+    T, W, B = sp.shape
+    v = code.v
+
+    f = stage_maps_ref(sp, code)  # (T, N, B)
+    fr = f[::-1]  # fr[i] = f_{T-1-i}
+
+    def compose(a, b):
+        # "b after a": a is the composition of later (higher) stages
+        return jnp.take_along_axis(b, a, axis=1)
+
+    prefixes = jax.lax.associative_scan(compose, fr, axis=0)  # (T, N, B)
+    start = jnp.broadcast_to(jnp.asarray(start_state, jnp.int32), (B,))
+    idx = jnp.broadcast_to(start[None, None, :], (T, 1, B))
+    walked = jnp.take_along_axis(prefixes, idx, axis=1)[:, 0, :]  # (T, B)
+    # states at times [T, T-1, …, 1]; bits[t] = MSB(state at time t+1)
+    states_desc = jnp.concatenate([start[None, :], walked[: T - 1]], axis=0)
+    bits = (states_desc >> (v - 1))[::-1]  # (T, B), forward stage order
+    return jax.lax.dynamic_slice_in_dim(bits, decode_start, n_decode, axis=0)
 
 
 def pbvd_decode_ref(

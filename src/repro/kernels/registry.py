@@ -3,7 +3,8 @@
 Every backend is a function with the common contract
 
     backend(blocks: FramedBlocks, code: ConvCode, *,
-            start_policy, stage_chunk, interpret, metric_mode)
+            start_policy, stage_chunk, interpret, metric_mode,
+            tb_mode, tb_chunk)
         -> (n_decode, B_real) int32 bits
 
 registered under a name via ``@register_backend("name")``. The engine (and
@@ -26,6 +27,10 @@ Contract details (DESIGN.md §3):
 * Backends likewise declare the **metric modes** they implement
   (``register_backend(name, metric_modes=...)``); the mode semantics are the
   :data:`METRIC_MODES` contract below, validated eagerly the same way.
+* Backends declare the **traceback modes** they implement
+  (``register_backend(name, tb_modes=...)``); the mode semantics are the
+  :data:`TB_MODES` contract below (serial stage walk vs chunked
+  parallel-prefix survivor-map composition), validated eagerly the same way.
 """
 
 from __future__ import annotations
@@ -37,11 +42,14 @@ __all__ = [
     "FramedBlocks",
     "DecodeBackend",
     "METRIC_MODES",
+    "TB_MODES",
     "register_backend",
     "get_backend",
     "available_backends",
     "backend_start_policies",
     "backend_metric_modes",
+    "backend_tb_modes",
+    "backend_tb_chunk_sensitive",
 ]
 
 
@@ -91,6 +99,45 @@ METRIC_MODES: dict[str, dict[str, Any]] = {
         saturation_budget="(2·v+k)·R·qmax ≤ 127 — exact vs f32 on the same "
         "coarse symbols; vs q=8 the difference is the quantizer's (≈0.2–0.3 dB "
         "at 3-bit soft decisions)",
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# The traceback-mode contract (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+# ``tb_mode`` fixes the *algorithm* of the K2 traceback phase; both modes are
+# bit-exact for every survivor history (composition of exact predecessor maps
+# commutes with the walk), so the choice is purely a latency/VMEM trade:
+#
+# * ``"serial"`` — the paper's walk: one W-way word select + variable shift
+#   per stage, ``T - decode_start`` strictly serial steps on (1, lanes)
+#   operands. Minimal memory, maximal dependency chain.
+# * ``"prefix"`` — chunked survivor-map composition: each chunk of
+#   ``tb_chunk`` stages is composed into one N-entry state map (parallel
+#   across chunks × states on the sublane axis, same select idiom), the
+#   composed maps are walked in ceil(T/tb_chunk) serial steps, and all
+#   chunks' bits re-expand in parallel. ``tb_chunk`` bounds the composed-map
+#   scratch: (ceil(T/C) - c_lo)·N·lanes·4 B per lane tile (see DESIGN.md §9
+#   for the VMEM cost model and the chunk-size sweet spot).
+#
+# ``tb_chunk`` is a jit static — changing the chunk size recompiles a
+# chunk-sensitive prefix launch, it never re-frames. Where the launch
+# ignores it (``tb_mode="serial"``, or a backend registered with
+# ``tb_chunk_sensitive=False`` such as ``ref``'s full-depth scan) the
+# dispatcher normalizes it out of the cache key.
+TB_MODES: dict[str, dict[str, Any]] = {
+    "serial": dict(
+        serial_steps="T - decode_start (early exit below the decode region)",
+        scratch="none beyond the survivor history",
+        when="tiny T, VMEM-starved geometries, or as the parity oracle",
+    ),
+    "prefix": dict(
+        serial_steps="ceil(T/tb_chunk) composed-map walk",
+        scratch="composed maps (n_active·N·lanes·4 B) + entry states + "
+        "(fused) unpacked chunk bits",
+        when="the default at Table III geometry — the last O(T) chain "
+        "becomes O(T/C) with sublane-parallel composition/expansion",
     ),
 }
 
@@ -161,6 +208,8 @@ class DecodeBackend(Protocol):
         stage_chunk: int,
         interpret: bool,
         metric_mode: str,
+        tb_mode: str,
+        tb_chunk: int,
     ) -> Any: ...
 
 
@@ -172,19 +221,31 @@ def register_backend(
     *,
     start_policies: tuple[str, ...] = ("zero", "argmin"),
     metric_modes: tuple[str, ...] = ("f32",),
+    tb_modes: tuple[str, ...] = ("serial",),
+    tb_chunk_sensitive: bool = True,
 ) -> Callable[[DecodeBackend], DecodeBackend]:
     """Decorator: register a decode backend under ``name``.
 
     ``start_policies`` declares which traceback start policies the backend
     implements; ``metric_modes`` declares which :data:`METRIC_MODES` entries
-    it implements. The dispatcher rejects others eagerly (pre-jit). The
-    default is the conservative ``("f32",)`` — a backend must OPT INTO the
-    narrow normalized pipeline explicitly, otherwise the eager check would
-    wave through modes it never implemented.
+    it implements; ``tb_modes`` declares which :data:`TB_MODES` traceback
+    algorithms it implements. The dispatcher rejects others eagerly
+    (pre-jit). The defaults are the conservative ``("f32",)``/``("serial",)``
+    — a backend must OPT INTO the narrow pipeline and the prefix traceback
+    explicitly, otherwise the eager check would wave through modes it never
+    implemented.
+
+    ``tb_chunk_sensitive=False`` declares that the backend's prefix
+    traceback ignores ``tb_chunk`` (e.g. a full-depth associative scan): the
+    dispatcher then normalizes the knob out of the jit cache key, and the
+    benchmarks collapse the chunk sweep dimension.
     """
     unknown = set(metric_modes) - METRIC_MODES.keys()
     if unknown:
         raise ValueError(f"unknown metric modes {sorted(unknown)}")
+    unknown_tb = set(tb_modes) - TB_MODES.keys()
+    if unknown_tb:
+        raise ValueError(f"unknown tb modes {sorted(unknown_tb)}")
 
     def deco(fn: DecodeBackend) -> DecodeBackend:
         if name in _BACKENDS:
@@ -193,6 +254,8 @@ def register_backend(
         fn.backend_name = name  # type: ignore[attr-defined]
         fn.start_policies = tuple(start_policies)  # type: ignore[attr-defined]
         fn.metric_modes = tuple(metric_modes)  # type: ignore[attr-defined]
+        fn.tb_modes = tuple(tb_modes)  # type: ignore[attr-defined]
+        fn.tb_chunk_sensitive = bool(tb_chunk_sensitive)  # type: ignore[attr-defined]
         return fn
 
     return deco
@@ -215,6 +278,16 @@ def backend_start_policies(name: str) -> tuple[str, ...]:
 def backend_metric_modes(name: str) -> tuple[str, ...]:
     """Metric modes the named backend supports (see :data:`METRIC_MODES`)."""
     return getattr(get_backend(name), "metric_modes", ("f32",))
+
+
+def backend_tb_modes(name: str) -> tuple[str, ...]:
+    """Traceback modes the named backend supports (see :data:`TB_MODES`)."""
+    return getattr(get_backend(name), "tb_modes", ("serial",))
+
+
+def backend_tb_chunk_sensitive(name: str) -> bool:
+    """Whether the named backend's prefix traceback depends on ``tb_chunk``."""
+    return getattr(get_backend(name), "tb_chunk_sensitive", True)
 
 
 def available_backends() -> list[str]:

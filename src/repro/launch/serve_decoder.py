@@ -37,7 +37,11 @@ from repro.core.codespec import available_code_specs, get_code_spec
 from repro.core.encoder import encode_jax, terminate
 from repro.core.engine import DecoderEngine, DecoderSession, _pow2_at_least
 from repro.core.pbvd import PBVDConfig
-from repro.kernels.ops import available_backends
+from repro.kernels.ops import (
+    DEFAULT_TB_CHUNK,
+    available_backends,
+    backend_tb_chunk_sensitive,
+)
 
 __all__ = ["SessionPool", "PooledSession", "main"]
 
@@ -97,8 +101,9 @@ class SessionPool:
     kernel launches.
 
     Sessions are grouped by *launch compatibility* — the key is
-    ``(mother code, D, L, backend, start_policy, window dtype, interpret,
-    mesh)``: everything that shapes or parameterizes the kernel launch.
+    ``(mother code, D, L, backend, start_policy, metric_mode, tb_mode,
+    tb_chunk, window dtype, interpret, mesh)``: everything that shapes or
+    parameterizes the kernel launch.
     Code specs that share a mother code but differ in puncturing land in the
     same group (puncturing only affects ingest, never the launch), as do
     sessions with different payload lengths or chunk cadences.
@@ -176,6 +181,13 @@ class SessionPool:
             cfg.backend,
             cfg.start_policy,
             cfg.metric_mode,
+            cfg.tb_mode,
+            # tb_chunk only parameterizes chunk-sensitive prefix launches
+            # (the dispatcher normalizes it out otherwise); keying on it
+            # elsewhere would only split coalescable groups
+            cfg.tb_chunk
+            if cfg.tb_mode == "prefix" and backend_tb_chunk_sensitive(cfg.backend)
+            else None,
             dt,
             s._interpret,
             id(mesh) if mesh is not None else None,
@@ -304,6 +316,18 @@ def main() -> None:
         choices=["f32", "i16", "i8"],
         help="path-metric pipeline (narrow modes re-cap q to the saturation budget)",
     )
+    ap.add_argument(
+        "--tb-mode",
+        default="serial",
+        choices=["serial", "prefix"],
+        help="traceback algorithm (prefix = chunked survivor-map composition)",
+    )
+    ap.add_argument(
+        "--tb-chunk",
+        type=int,
+        default=DEFAULT_TB_CHUNK,
+        help="prefix traceback chunk size (stages composed per chunk map)",
+    )
     ap.add_argument("--chunk-bits", type=int, default=4096, help="payload bits per chunk")
     ap.add_argument("--n-chunks", type=int, default=100)
     ap.add_argument(
@@ -324,12 +348,14 @@ def main() -> None:
         q=args.q or None,
         backend=args.backend,
         metric_mode=args.metric_mode,
+        tb_mode=args.tb_mode,
+        tb_chunk=args.tb_chunk,
     )
     engine = DecoderEngine(cfg)
     print(
         f"[serve_decoder] {spec.name}: K={spec.code.K}, rate={spec.rate:.3f}, "
         f"D={cfg.D}, L={cfg.L}, q={cfg.effective_q}, backend={cfg.backend}, "
-        f"metric_mode={cfg.metric_mode}; "
+        f"metric_mode={cfg.metric_mode}, tb_mode={cfg.tb_mode}; "
         f"{args.streams} stream(s) × {args.chunk_bits * args.n_chunks} payload bits "
         f"in {args.n_chunks} chunks at Eb/N0={args.ebn0} dB"
     )

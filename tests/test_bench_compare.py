@@ -1,0 +1,87 @@
+"""tools/bench_compare.py: the BENCH_*.json regression gate (tier-1).
+
+The gate is CI-critical (a wrong exit code silently ungates perf), so the
+row-matching and threshold semantics are pinned here: rows match on their
+identity (non-measurement) fields only, only ``*_mbps`` fields gate, and
+"no matching rows" is a pass unless ``--min-matches`` demands otherwise.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent.parent / "tools"))
+import bench_compare  # noqa: E402
+
+
+def _doc(rows):
+    return {"benchmark": "x", "rows": rows}
+
+
+ROW = dict(kind="traceback_sweep", backend="ref", tb_chunk=64, n_blocks=8)
+
+
+def _write(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps(_doc(rows)))
+    return str(p)
+
+
+@pytest.mark.tier1
+def test_identity_ignores_measurements():
+    a = dict(ROW, serial_mbps=3.0, prefix_mbps=1.0, acs_ms=5.0)
+    b = dict(ROW, serial_mbps=9.0, prefix_mbps=9.0, acs_ms=9.0)
+    assert bench_compare.row_identity(a) == bench_compare.row_identity(b)
+    assert bench_compare.row_identity(a) != bench_compare.row_identity(
+        dict(ROW, tb_chunk=32, serial_mbps=3.0)
+    )
+
+
+@pytest.mark.tier1
+def test_identity_ignores_derived_walk_steps(tmp_path):
+    # a PR that shortens the traceback walk must STILL gate its throughput
+    # against the baseline row (walk length is a derived stat, not identity)
+    old = _write(
+        tmp_path, "old.json", [dict(ROW, serial_walk_steps=596, prefix_mbps=3.0)]
+    )
+    new = _write(
+        tmp_path, "new.json", [dict(ROW, serial_walk_steps=554, prefix_mbps=1.0)]
+    )
+    assert bench_compare.main([old, new, "--min-matches", "1"]) == 1
+
+
+@pytest.mark.tier1
+def test_pass_within_threshold(tmp_path, capsys):
+    old = _write(tmp_path, "old.json", [dict(ROW, serial_mbps=3.0)])
+    new = _write(tmp_path, "new.json", [dict(ROW, serial_mbps=2.6)])  # -13%
+    assert bench_compare.main([old, new, "--threshold", "0.15"]) == 0
+
+
+@pytest.mark.tier1
+def test_fail_beyond_threshold(tmp_path):
+    old = _write(tmp_path, "old.json", [dict(ROW, serial_mbps=3.0)])
+    new = _write(tmp_path, "new.json", [dict(ROW, serial_mbps=2.4)])  # -20%
+    assert bench_compare.main([old, new, "--threshold", "0.15"]) == 1
+
+
+@pytest.mark.tier1
+def test_latency_fields_report_but_never_gate(tmp_path):
+    old = _write(tmp_path, "old.json", [dict(ROW, serial_mbps=3.0, acs_ms=1.0)])
+    new = _write(tmp_path, "new.json", [dict(ROW, serial_mbps=3.0, acs_ms=99.0)])
+    assert bench_compare.main([old, new]) == 0
+
+
+@pytest.mark.tier1
+def test_unmatched_rows_pass_unless_min_matches(tmp_path):
+    old = _write(tmp_path, "old.json", [dict(ROW, n_blocks=512, serial_mbps=3.0)])
+    new = _write(tmp_path, "new.json", [dict(ROW, n_blocks=8, serial_mbps=0.1)])
+    assert bench_compare.main([old, new]) == 0  # geometry change, not regression
+    assert bench_compare.main([old, new, "--min-matches", "1"]) == 2
+
+
+@pytest.mark.tier1
+def test_io_error_is_usage_exit(tmp_path):
+    new = _write(tmp_path, "new.json", [dict(ROW, serial_mbps=1.0)])
+    assert bench_compare.main([str(tmp_path / "missing.json"), new]) == 2

@@ -12,8 +12,18 @@ from hypothesis import given, settings, strategies as st
 from repro.core.trellis import CCSDS_27, ConvCode
 from repro.kernels.acs import acs_forward_pallas
 from repro.kernels.ops import pbvd_decode_blocks
-from repro.kernels.ref import acs_forward_ref, pbvd_decode_ref, traceback_ref, viterbi_classic_np
-from repro.kernels.traceback import traceback_pallas
+from repro.kernels.ref import (
+    acs_forward_ref,
+    pbvd_decode_ref,
+    traceback_prefix_ref,
+    traceback_ref,
+    viterbi_classic_np,
+)
+from repro.kernels.traceback import (
+    prefix_chunk_geometry,
+    traceback_pallas,
+    traceback_prefix_pallas,
+)
 
 CODE_25 = ConvCode(polys=((1, 0, 1, 1, 1), (1, 1, 1, 0, 1)))  # (2,1,5), N=16
 CODE_37 = ConvCode(polys=((1, 1, 1, 1, 0, 0, 1), (1, 0, 1, 1, 0, 1, 1), (1, 1, 0, 1, 1, 0, 1)))
@@ -58,6 +68,70 @@ def test_traceback_pallas_matches_ref(code, start_mode):
     b_r = traceback_ref(sp, code, L, D, start)
     b_p = traceback_pallas(sp, start, code, decode_start=L, n_decode=D, interpret=True)
     assert jnp.array_equal(b_r, b_p)
+
+
+# ---------------------------------------------------------------------------
+# parallel-prefix traceback: chunked survivor-map composition
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("code", [CCSDS_27, CODE_25], ids=["217", "215"])
+@pytest.mark.parametrize("start_mode", ["zero", "argmin", "random"])
+def test_traceback_prefix_ref_matches_serial(code, start_mode):
+    rng = np.random.default_rng(11)
+    T, B, D, L = 96, 8, 48, 24
+    y = _rand_y(rng, T, code.R, B, np.float32)
+    sp, pm = acs_forward_ref(y, code)
+    start = {
+        "zero": jnp.zeros((B,), jnp.int32),
+        "argmin": jnp.argmin(pm, axis=0).astype(jnp.int32),
+        "random": jnp.asarray(rng.integers(0, code.n_states, B), jnp.int32),
+    }[start_mode]
+    b_r = traceback_ref(sp, code, L, D, start)
+    b_s = traceback_prefix_ref(sp, code, L, D, start)
+    assert jnp.array_equal(b_r, b_s)
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("code", [CCSDS_27, CODE_25], ids=["217", "215"])
+@pytest.mark.parametrize("tb_chunk", [1, 7, 32, 64, 128, 200], ids=str)
+def test_traceback_prefix_pallas_matches_ref(code, tb_chunk):
+    """Bit-exact across divisor, non-divisor and >=T chunk sizes."""
+    rng = np.random.default_rng(13)
+    T, B, D, L = 128, 128, 64, 32  # decode region [32, 96): decode_start > 0
+    y = _rand_y(rng, T, code.R, B, np.float32)
+    sp, pm = acs_forward_ref(y, code)
+    start = jnp.argmin(pm, axis=0).astype(jnp.int32)
+    b_r = traceback_ref(sp, code, L, D, start)
+    b_p = traceback_prefix_pallas(
+        sp, start, code, decode_start=L, n_decode=D, tb_chunk=tb_chunk, interpret=True
+    )
+    assert jnp.array_equal(b_r, b_p)
+
+
+def test_prefix_chunk_geometry_skips_dead_chunks():
+    # T=128, decode region [32, 96), C=24 → pad 16, chunks of flat stages
+    # [0,24) [24,48) … ; flat decode region [48, 112) → c_lo=2, c_hi=4
+    C, P, n_chunks, c_lo, c_hi = prefix_chunk_geometry(128, 32, 64, 24)
+    assert (C, P, n_chunks) == (24, 16, 6)
+    assert (c_lo, c_hi) == (2, 4)
+    # serial chain shrinks to the active-chunk walk
+    assert n_chunks - c_lo == 4
+    with pytest.raises(ValueError):
+        prefix_chunk_geometry(128, 32, 64, 0)  # tb_chunk < 1
+    with pytest.raises(ValueError):
+        prefix_chunk_geometry(64, 40, 32, 16)  # decode region outside T
+
+
+def test_tb_mode_eager_validation():
+    y = jnp.zeros((16, 2, 4), jnp.float32)
+    with pytest.raises(ValueError, match="tb_mode"):
+        pbvd_decode_blocks(
+            y, CCSDS_27, decode_start=4, n_decode=8, backend="ref", tb_mode="magic"
+        )
+    with pytest.raises(ValueError, match="tb_chunk"):
+        pbvd_decode_blocks(
+            y, CCSDS_27, decode_start=4, n_decode=8, backend="ref",
+            tb_mode="prefix", tb_chunk=0,
+        )
 
 
 def test_composed_decode_pallas_matches_ref_aligned():

@@ -89,6 +89,47 @@ def test_backend_parity_matrix(name, n_bits, seed, ebn0_db, q, policy, metric_mo
 
 
 # ---------------------------------------------------------------------------
+# prefix-traceback parity: tb_mode="prefix" is bit-exact to "serial" for
+# every CodeSpec × backend × chunk size (divisors, non-divisors, 1, >= T) —
+# the decode region starts at decode_start = L > 0, so the dead-chunk
+# early-exit path is always exercised
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", available_code_specs())
+@settings(**_COMMON)
+@given(
+    st.integers(24, 96),  # n_bits
+    st.integers(0, 2**16 - 1),  # seed
+    st.floats(3.0, 6.5),  # ebn0_db
+    st.sampled_from(["f32", "i16", "i8"]),  # metric mode
+    st.sampled_from([1, 7, 32, 64, "T"]),  # tb_chunk ("T" → one whole-T chunk)
+)
+def test_prefix_traceback_parity_matrix(name, n_bits, seed, ebn0_db, metric_mode, tb_chunk):
+    spec = get_code_spec(name)
+    y = _tx(spec, n_bits, ebn0_db, seed)
+    D, L = 32, 12
+    chunk = D + 2 * L if tb_chunk == "T" else tb_chunk
+    for backend in BACKENDS:
+        serial = DecoderEngine(
+            PBVDConfig(
+                spec=spec, D=D, L=L, q=8, backend=backend,
+                metric_mode=metric_mode, tb_mode="serial",
+            )
+        ).decode(y, n_bits)
+        prefix = DecoderEngine(
+            PBVDConfig(
+                spec=spec, D=D, L=L, q=8, backend=backend,
+                metric_mode=metric_mode, tb_mode="prefix", tb_chunk=chunk,
+            )
+        ).decode(y, n_bits)
+        np.testing.assert_array_equal(
+            np.asarray(prefix),
+            np.asarray(serial),
+            err_msg=f"{name}/{backend}/{metric_mode}/tb_chunk={chunk} "
+            f"prefix diverged from serial",
+        )
+
+
+# ---------------------------------------------------------------------------
 # metric-mode parity: f32 vs i16 exact; i8 exact on shared symbols and
 # within the quantizer's documented tolerance end-to-end
 # ---------------------------------------------------------------------------

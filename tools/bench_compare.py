@@ -1,0 +1,132 @@
+"""Diff two BENCH_*.json artifacts and fail on throughput regressions.
+
+Rows are matched by their IDENTITY fields — every key that is not a
+measurement or derived statistic (``*_ms``, ``*_mbps``, ``*_speedup``,
+``*_share``, ``*_steps``, ``*_vs_*``) — so a row compares only against the
+same benchmark kind, geometry, backend and knob settings, and a PR that
+legitimately changes a derived value (e.g. the traceback walk length) still
+gates its throughput against the baseline row. On each matched row, every decoded-bits/s field
+(``*_mbps``) in the new file must be at least ``(1 - threshold)`` × the old
+value; latency fields are reported but not gated (they overlap the mbps
+signal and double-gating doubles the noise).
+
+Exit status: 0 = no regression (including "no matching rows" — geometry
+changes are not regressions), 1 = at least one gated field regressed
+beyond the threshold, 2 = usage/IO error.
+
+CI usage (the bench-smoke job runs the smoke sweep on the PR head AND on
+the merge-base of the same runner, so the comparison is same-machine):
+
+    python tools/bench_compare.py BENCH_base.json BENCH_head.json \
+        [--threshold 0.15] [--min-matches 1]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+MEASUREMENT_SUFFIXES = ("_ms", "_mbps", "_speedup", "_share", "_steps")
+
+
+def _is_measurement(key: str) -> bool:
+    return key.endswith(MEASUREMENT_SUFFIXES) or "_vs_" in key
+
+
+def row_identity(row: dict) -> tuple:
+    """Hashable identity of a row: its non-measurement fields, sorted."""
+    return tuple(sorted((k, v) for k, v in row.items() if not _is_measurement(k)))
+
+
+def load_rows(path: str) -> list[dict]:
+    doc = json.loads(Path(path).read_text())
+    rows = doc.get("rows", doc if isinstance(doc, list) else [])
+    if not isinstance(rows, list):
+        raise ValueError(f"{path}: no 'rows' list found")
+    return rows
+
+
+def compare(
+    old_rows: list[dict], new_rows: list[dict], *, threshold: float
+) -> tuple[list[str], int]:
+    """Returns (regression messages, number of matched gated fields)."""
+    old_by_id = {row_identity(r): r for r in old_rows}
+    regressions: list[str] = []
+    matched = 0
+    for new in new_rows:
+        old = old_by_id.get(row_identity(new))
+        if old is None:
+            continue
+        label = ",".join(
+            f"{k}={v}" for k, v in sorted(new.items()) if not _is_measurement(k)
+        )
+        for key, new_val in new.items():
+            if not key.endswith("_mbps") or key not in old:
+                continue
+            old_val = old[key]
+            if not isinstance(old_val, (int, float)) or old_val <= 0:
+                continue
+            matched += 1
+            ratio = float(new_val) / float(old_val)
+            line = f"{label}: {key} {old_val} → {new_val} ({ratio:.2f}×)"
+            if ratio < 1.0 - threshold:
+                regressions.append(line)
+                print(f"REGRESSION  {line}")
+            else:
+                print(f"ok          {line}")
+    return regressions, matched
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.15,
+        help="maximum tolerated fractional drop in any *_mbps field (default 0.15)",
+    )
+    ap.add_argument(
+        "--min-matches",
+        type=int,
+        default=0,
+        help="fail unless at least this many gated fields matched (guards "
+        "against a silently vacuous comparison; default 0 = allow none)",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        old_rows = load_rows(args.old)
+        new_rows = load_rows(args.new)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    regressions, matched = compare(old_rows, new_rows, threshold=args.threshold)
+    print(
+        f"# {matched} gated field(s) compared across "
+        f"{len(new_rows)} candidate row(s); threshold {args.threshold:.0%}"
+    )
+    if matched < args.min_matches:
+        print(
+            f"error: only {matched} matched field(s) < --min-matches "
+            f"{args.min_matches} (identity fields drifted?)",
+            file=sys.stderr,
+        )
+        return 2
+    if regressions:
+        print(
+            f"FAIL: {len(regressions)} field(s) regressed beyond "
+            f"{args.threshold:.0%}",
+            file=sys.stderr,
+        )
+        return 1
+    print("PASS: no throughput regression")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
