@@ -16,17 +16,21 @@ cell:
 and reports aggregate payload Mb/s plus the batched/sequential speedup.
 
     PYTHONPATH=src python benchmarks/batched_throughput.py \
-        [--streams 1 4 16 64] [--frame-bits 256 1024 4096] [--reps 3]
+        [--streams 1 4 16 64] [--frame-bits 256 1024 4096] [--reps 5]
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+try:
+    from . import bench_json  # package mode (python -m benchmarks.…)
+except ImportError:
+    import bench_json  # script mode (benchmarks/ on sys.path)
 
 from repro.core.channel import transmit
 from repro.core.codespec import get_code_spec
@@ -36,7 +40,7 @@ from repro.core.pbvd import PBVDConfig
 from repro.launch.serve_decoder import SessionPool
 
 # Paper Table III geometry (CCSDS (2,1,7), D=512, L=42, 8-bit symbols).
-TABLE3 = dict(D=512, L=42, q=8)
+TABLE3 = bench_json.TABLE3
 
 
 def _streams(spec, n_streams: int, frame_bits: int, ebn0: float, seed: int):
@@ -51,12 +55,10 @@ def _streams(spec, n_streams: int, frame_bits: int, ebn0: float, seed: int):
     return outs
 
 
-def _time(fn, reps: int) -> float:
-    jax.block_until_ready(fn())  # warmup: trace + compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(fn())
-    return (time.perf_counter() - t0) / reps
+# reps>=5 MEDIAN of per-call times (the repo-wide sweep policy from
+# bench_json) — the old mean-of-one-timed-loop folded any machine-load
+# spike into every row
+_time = bench_json.time_median
 
 
 def run(
@@ -65,7 +67,7 @@ def run(
     *,
     code: str = "ccsds",
     backend: str = "ref",
-    reps: int = 3,
+    reps: int = 5,
     ebn0: float = 4.0,
     with_pool: bool = True,
     metric_mode: str = "f32",
@@ -124,7 +126,7 @@ def main(argv=None):
     ap.add_argument("--streams", type=int, nargs="+", default=[1, 4, 16, 64])
     ap.add_argument("--frame-bits", type=int, nargs="+", default=[256, 1024, 4096])
     ap.add_argument("--backend", default="ref")
-    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--reps", type=int, default=5)
     ap.add_argument(
         "--metric-mode", default="f32", choices=["f32", "i16", "i8"],
         help="path-metric pipeline for every launch in the sweep",

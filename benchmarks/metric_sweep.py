@@ -13,7 +13,7 @@ L=42, 8-bit symbols) and reports, per cell:
 ``--out BENCH_pr.json`` writes the rows as a benchmark artifact:
 
     PYTHONPATH=src python benchmarks/metric_sweep.py \
-        [--n-blocks 64 512] [--reps 3] [--backend ref] [--out BENCH_pr.json]
+        [--n-blocks 64 512] [--reps 5] [--backend ref] [--out BENCH_pr.json]
 """
 
 from __future__ import annotations
@@ -67,7 +67,7 @@ def run(
     *,
     code: str = "ccsds",
     backend: str = "ref",
-    reps: int = 3,
+    reps: int = 5,
     seed: int = 7,
 ) -> list[dict]:
     spec = get_code_spec(code)
@@ -102,7 +102,7 @@ def main(argv=None):
     ap.add_argument("--n-blocks", type=int, nargs="+", default=[64, 512])
     ap.add_argument("--code", default="ccsds")
     ap.add_argument("--backend", default="ref")
-    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--out", default=None, help="write rows to this BENCH_*.json")
     args = ap.parse_args(argv if argv is not None else [])
     rows = run(tuple(args.n_blocks), code=args.code, backend=args.backend, reps=args.reps)

@@ -14,14 +14,19 @@ Prints ``name,us_per_call,derived`` CSV lines per the repo convention.
   traceback_sweep   — beyond-paper: serial vs parallel-prefix traceback
                        decoded-bits/s per tb_chunk + the ACS-vs-traceback
                        phase timing split (merges into BENCH_*.json)
+  acs_radix_sweep   — beyond-paper: stage-fused radix-4 vs radix-2 ACS
+                       decoded-bits/s per backend + the per-radix ACS
+                       phase split (merges into BENCH_*.json)
 
 ``--metric-mode`` runs ONLY the metric sweep (the folded/quantized
 hot-path numbers); ``--tb-mode serial prefix`` runs ONLY the traceback
-sweep (``--tb-chunk`` sizes the prefix chunks). The CI benchmark-smoke job
-runs both into one artifact, then gates it with tools/bench_compare.py:
+sweep (``--tb-chunk`` sizes the prefix chunks); ``--acs-radix`` runs ONLY
+the radix sweep. The CI benchmark-smoke job runs all three into one
+artifact, then gates it with tools/bench_compare.py:
 
     python benchmarks/run.py --metric-mode --out BENCH_pr.json --smoke
     python benchmarks/run.py --tb-mode serial prefix --out BENCH_pr.json --smoke
+    python benchmarks/run.py --acs-radix --out BENCH_pr.json --smoke
 
 Roofline tables (assignment §Roofline) are produced by
 ``python -m repro.launch.roofline`` from the dry-run reports.
@@ -54,6 +59,7 @@ def _run_all() -> None:
         _sibling("batched_throughput"),
         _sibling("metric_sweep"),
         _sibling("traceback_sweep"),
+        _sibling("acs_radix_sweep"),
     ):
         t0 = time.perf_counter()
         mod.main()
@@ -88,6 +94,11 @@ def main(argv=None) -> None:
         help="prefix chunk sizes for the traceback sweep (default: 32 64 128)",
     )
     ap.add_argument(
+        "--acs-radix",
+        action="store_true",
+        help="run only the ACS-radix sweep (stage-fused radix-4 vs radix-2)",
+    )
+    ap.add_argument(
         "--out", default=None, help="write/merge BENCH_*.json (sweep modes only)"
     )
     ap.add_argument(
@@ -97,19 +108,24 @@ def main(argv=None) -> None:
     )
     args = ap.parse_args(argv)
 
-    selected = args.metric_mode or args.tb_mode
+    selected = args.metric_mode or args.tb_mode or args.acs_radix
     if (args.out or args.smoke) and not selected:
-        ap.error("--out/--smoke only apply to the sweeps; add --metric-mode/--tb-mode")
+        ap.error(
+            "--out/--smoke only apply to the sweeps; add "
+            "--metric-mode/--tb-mode/--acs-radix"
+        )
     if args.tb_chunk and not args.tb_mode:
         ap.error("--tb-chunk only applies to the traceback sweep; add --tb-mode")
-    # smoke runs feed the CI regression gate: reps=5 medians keep a single
-    # noisy sample on a shared runner from tripping the 15% threshold
-    smoke_reps = 5
+    # ALL sweep runs (smoke and full) use reps>=5 medians: the smoke rows
+    # feed the CI regression gate — one noisy sample on a shared runner must
+    # not trip the 15% threshold — and the committed full-geometry artifact
+    # records the perf trajectory, which single-sample timings would smear
+    reps = 5
     if args.metric_mode:
         metric_sweep = _sibling("metric_sweep")
 
         n_blocks = (8,) if args.smoke else (64, 512)
-        rows = metric_sweep.run(n_blocks, reps=smoke_reps if args.smoke else 3)
+        rows = metric_sweep.run(n_blocks, reps=reps)
         for r in rows:
             print("metric_sweep," + ",".join(f"{k}={v}" for k, v in r.items()))
         if args.out:
@@ -124,12 +140,22 @@ def main(argv=None) -> None:
             n_blocks,
             tb_chunks=tb_chunks,
             tb_modes=tuple(args.tb_mode),
-            reps=smoke_reps if args.smoke else 3,
+            reps=reps,
         )
         for r in rows:
             print("traceback_sweep," + ",".join(f"{k}={v}" for k, v in r.items()))
         if args.out:
             traceback_sweep.merge_bench_json(rows, args.out)
+            print(f"# merged into {args.out}", file=sys.stderr)
+    if args.acs_radix:
+        acs_radix_sweep = _sibling("acs_radix_sweep")
+
+        n_blocks = (8,) if args.smoke else (64, 256)
+        rows = acs_radix_sweep.run(n_blocks, reps=reps)
+        for r in rows:
+            print("acs_radix_sweep," + ",".join(f"{k}={v}" for k, v in r.items()))
+        if args.out:
+            acs_radix_sweep.merge_bench_json(rows, args.out)
             print(f"# merged into {args.out}", file=sys.stderr)
     if not selected:
         _run_all()

@@ -16,7 +16,7 @@ L=42, 8-bit symbols) and reports:
 (other benchmarks' rows are kept; stale traceback rows are replaced):
 
     PYTHONPATH=src python benchmarks/traceback_sweep.py \
-        [--n-blocks 64 512] [--tb-chunks 32 64 128] [--reps 3] \
+        [--n-blocks 64 512] [--tb-chunks 32 64 128] [--reps 5] \
         [--backend ref] [--out BENCH_pr.json]
 """
 
@@ -82,7 +82,7 @@ def run(
     backend: str = "ref",
     tb_chunks=(32, 64, 128),
     tb_modes=("serial", "prefix"),
-    reps: int = 3,
+    reps: int = 5,
     seed: int = 7,
 ) -> list[dict]:
     spec = get_code_spec(code)
@@ -146,7 +146,7 @@ def main(argv=None):
     ap.add_argument("--tb-chunks", type=int, nargs="+", default=[32, 64, 128])
     ap.add_argument("--code", default="ccsds")
     ap.add_argument("--backend", default="ref")
-    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--out", default=None, help="merge rows into this BENCH_*.json")
     args = ap.parse_args(argv if argv is not None else [])
     rows = run(

@@ -226,6 +226,7 @@ class DecoderEngine:
             metric_mode=cfg.metric_mode,
             tb_mode=cfg.tb_mode,
             tb_chunk=cfg.tb_chunk,
+            acs_radix=cfg.acs_radix,
         )
 
 

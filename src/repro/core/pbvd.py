@@ -27,7 +27,14 @@ import jax.numpy as jnp
 from repro.kernels.traceback import DEFAULT_TB_CHUNK
 
 from .codespec import CodeSpec
-from .quantize import max_symbol_bits, metric_dtype_max, quantize_soft, u1_bytes, u2_bytes
+from .quantize import (
+    max_symbol_bits,
+    metric_dtype_max,
+    norm_interval,
+    quantize_soft,
+    u1_bytes,
+    u2_bytes,
+)
 from .trellis import CCSDS_27, ConvCode
 
 __all__ = [
@@ -58,7 +65,17 @@ class PBVDConfig:
     :data:`~repro.kernels.registry.TB_MODES` contract): ``"serial"`` walks
     one stage per step; ``"prefix"`` composes ``tb_chunk``-stage survivor
     maps in parallel and cuts the serial chain to ceil(T/tb_chunk) steps —
-    bit-exact to serial for every chunk size.
+    bit-exact to serial for every chunk size. The default ``"auto"``
+    resolves to the backend's declared measured-fastest mode (serial on
+    ``ref``, prefix on the Pallas kernels), so picking a backend no longer
+    requires knowing the benchmark table.
+
+    ``acs_radix`` selects the forward-ACS step (the
+    :data:`~repro.kernels.registry.ACS_RADIX` contract): ``2`` is the
+    paper's per-stage butterfly; ``4`` collapses two trellis stages into one
+    stage-fused 4-way compare-select step — bit-exact decoded bits, half the
+    forward serial chain, one normalization/survivor-emission round per two
+    bits, and (fused backend) a double-buffered HBM→VMEM symbol pipeline.
     """
 
     code: ConvCode = CCSDS_27
@@ -69,8 +86,9 @@ class PBVDConfig:
     backend: Literal["pallas", "ref", "fused"] = "pallas"
     spec: CodeSpec | None = None
     metric_mode: Literal["f32", "i16", "i8"] = "f32"
-    tb_mode: Literal["serial", "prefix"] = "serial"
+    tb_mode: Literal["serial", "prefix", "auto"] = "auto"
     tb_chunk: int = DEFAULT_TB_CHUNK  # prefix traceback chunk size
+    acs_radix: Literal[2, 4] = 2  # forward-ACS stages fused per step (radix/2)
 
     @property
     def T(self) -> int:  # stages per parallel block
@@ -121,13 +139,22 @@ class PBVDConfig:
             raise ValueError("D must be positive, L non-negative")
         if self.metric_mode not in ("f32", "i16", "i8"):
             raise ValueError(f"unknown metric_mode {self.metric_mode!r}")
-        if self.tb_mode not in ("serial", "prefix"):
+        if self.tb_mode not in ("serial", "prefix", "auto"):
             raise ValueError(f"unknown tb_mode {self.tb_mode!r}")
         if self.tb_chunk < 1:
             raise ValueError(f"tb_chunk must be >= 1, got {self.tb_chunk}")
+        if self.acs_radix not in (2, 4):
+            raise ValueError(f"acs_radix must be 2 or 4, got {self.acs_radix}")
         if self.spec is not None and self.spec.code is not self.code:
             # keep cfg.code authoritative for kernel callers
             object.__setattr__(self, "code", self.spec.code)
+        if self.acs_radix == 4:
+            if self.code.n_states < 4:
+                raise ValueError(f"acs_radix=4 needs K >= 3 (got K={self.code.K})")
+            # narrow modes: the saturation budget must absorb the fused
+            # step's two unnormalized stages — fail at CONFIG time, with
+            # norm_interval's ValueError, not by silent saturation in-kernel
+            norm_interval(self.code, self.metric_mode, self.acs_radix)
 
 
 @partial(jax.jit, static_argnames=("D", "L", "n_blocks"))

@@ -189,19 +189,40 @@ def metric_mode_qmax(code, metric_mode: str) -> int:
     return (1 << (max_symbol_bits(code, metric_dtype_max(metric_mode)) - 1)) - 1
 
 
-def norm_interval(code, metric_mode: str) -> int:
-    """Static min-subtract cadence (stages) of a narrow metric mode.
+def norm_interval(code, metric_mode: str, acs_radix: int = 2) -> int:
+    """Static min-subtract cadence (ACS *steps*) of a narrow metric mode.
 
-    Per-stage normalization costs a sublane reduction every stage; the
+    Per-step normalization costs a sublane reduction every step; the
     saturation budget usually has slack beyond ``interval=1``, so the
-    normalization runs every k-th stage with the largest k that keeps
-    ``pm_spread_bound(code, qmax, k) ≤ dtype_max`` — identical decisions
-    (min-subtract is a uniform per-lane shift), identical saturation
-    guarantee, fraction of the cost. Every backend derives the SAME k from
-    the code + mode, so path metrics stay bit-comparable across backends.
+    normalization runs every k-th step with the largest k that keeps
+    ``pm_spread_bound(code, qmax, k·stages_per_step) ≤ dtype_max`` —
+    identical decisions (min-subtract is a uniform per-lane shift),
+    identical saturation guarantee, fraction of the cost. Every backend
+    derives the SAME k from the code + mode + radix, so path metrics stay
+    bit-comparable across backends.
+
+    ``acs_radix`` fixes how many trellis stages one ACS step accumulates
+    before the kernel can normalize: 1 stage for the radix-2 butterfly,
+    2 for the stage-fused radix-4 step (so the radix-2 cadence, in stages,
+    is unchanged from the historical single-argument form). A configuration
+    whose budget cannot fit even the tightest cadence at this radix —
+    ``pm_spread_bound(code, qmax, stages_per_step) > dtype_max`` — raises
+    ``ValueError`` here, at config time, instead of silently saturating
+    inside a jitted kernel.
     """
     if metric_mode == "f32":
         return 0  # no normalization
+    if acs_radix not in (2, 4):
+        raise ValueError(f"acs_radix must be 2 or 4, got {acs_radix}")
+    stages_per_step = 1 if acs_radix == 2 else 2
     dtype_max = metric_dtype_max(metric_mode)
     qmax = metric_mode_qmax(code, metric_mode)
-    return max(1, dtype_max // (code.R * qmax) - 2 * code.v)
+    if pm_spread_bound(code, qmax, stages_per_step) > dtype_max:
+        raise ValueError(
+            f"metric_mode={metric_mode!r} cannot run at acs_radix={acs_radix} "
+            f"for K={code.K}, R={code.R}: even the tightest normalization "
+            f"cadence ({stages_per_step} stage(s) per step) has worst-case "
+            f"path metric {pm_spread_bound(code, qmax, stages_per_step)} "
+            f"> dtype max {dtype_max}"
+        )
+    return max(1, (dtype_max // (code.R * qmax) - 2 * code.v) // stages_per_step)

@@ -254,6 +254,119 @@ class ConvCode:
         """
         return self.codeword_signs[: self.n_folded]
 
+    # ---- collapsed two-stage (radix-4) trellis tables ------------------------------
+    # Two consecutive trellis stages collapse into one radix-4 step: every
+    # state n at time t+2 has the FOUR predecessors ``4·(n mod N/4) + j``
+    # (j = 2·b_m + b_p) at time t, reached through the intermediate state
+    # ``m = 2·(n mod N/2) + b_m`` at time t+1. The combined 2-symbol branch
+    # label is the 2R-bit concatenation ``cc = (c1 << R) | c2`` of the two
+    # stage labels, and the correlation metric stays antipodal in cc
+    # (BM2(~cc) = −BM2(cc)), so only 2^(2R−1) distinct combined metrics
+    # exist per fused step — the PR 3 fold composed over the stage pair.
+    #
+    # Target states group by ``k = n >> (v-2)`` (the two MSBs of n): group k
+    # covers targets ``n = k·N/4 + q``; its stage-(t+1) input bit is
+    # ``x2 = k >> 1`` and its stage-t input bit is ``x1 = k & 1`` (the two
+    # decoded bits the fused step emits). Groups k and k+2 share their
+    # stage-t sub-problem (same x1, same intermediates), which is what lets
+    # the kernels run the 4-way compare-select as a tournament whose first
+    # round is computed once per x1.
+    @property
+    def n_folded4(self) -> int:
+        """Distinct folded combined (2-stage) branch metrics: 2^(2R-1)."""
+        return 1 << (2 * self.R - 1)
+
+    @cached_property
+    def fold_index4(self) -> np.ndarray:
+        """(2^(2R),) int32: folded-table row of each combined label."""
+        cc = np.arange(1 << (2 * self.R))
+        mask = (1 << (2 * self.R)) - 1
+        return np.where(cc < self.n_folded4, cc, cc ^ mask).astype(np.int32)
+
+    @cached_property
+    def fold_sign4(self) -> np.ndarray:
+        """(2^(2R),) int32 ±1: BM2(cc) = fold_sign4[cc] · BM2_folded[fold_index4[cc]]."""
+        cc = np.arange(1 << (2 * self.R))
+        return np.where(cc < self.n_folded4, 1, -1).astype(np.int32)
+
+    @cached_property
+    def folded_radix4_codeword_signs(self) -> np.ndarray:
+        """(2^(2R-1), 2R) float32 sign rows of the combined-label fold reps.
+
+        Row cc = signs of the 2R bits of cc, stage-t label first:
+        ``BM2_folded = folded_radix4_codeword_signs @ [y_t; y_{t+1}]``. Every
+        representative has MSB 0 (stage-t label < 2^(R-1)), so each row is
+        ``[+folded stage row i | ± full stage row j]`` — 2^(R-1)·2^(R-1)·2
+        = 2^(2R-1) distinct static add/sub chains.
+        """
+        n = self.n_folded4
+        R2 = 2 * self.R
+        rows = []
+        for cc in range(n):
+            bits = [(cc >> (R2 - 1 - r)) & 1 for r in range(R2)]
+            rows.append([2.0 * b - 1.0 for b in bits])
+        return np.array(rows, dtype=np.float32)
+
+    @cached_property
+    def radix4_preds(self) -> np.ndarray:
+        """(N, 4) int32: the four predecessors of each state two stages back,
+        ordered by j = 2·b_m + b_p (b_m = stage-(t+1) survivor bit, b_p =
+        stage-t survivor bit)."""
+        if self.v < 2:
+            raise ValueError(f"radix-4 tables need K >= 3 (got K={self.K})")
+        n = np.arange(self.n_states)
+        quarter = self.n_states // 4
+        return (4 * (n[:, None] % quarter) + np.arange(4)[None, :]).astype(np.int32)
+
+    @cached_property
+    def radix4_acs_tables(self) -> dict:
+        """Static per-quad label/fold tables for the radix-4 ACS kernels.
+
+        A radix-4 "quad" q ∈ [0, N/4) is the complete bipartite unit of 4
+        source states {4q+j} and 4 target states {k·N/4 + q}. Arrays (all
+        int32, last axis length N/4):
+
+          ``c1[x1, j]``  stage-t label of pred j under stage-t input x1
+                         (shared by target groups k and k+2, x1 = k & 1)
+          ``c2[k, bm]``  stage-(t+1) label of intermediate b_m for group k
+          ``cc[k, j]``   combined 2R-bit label (c1 << R) | c2
+          ``fold_c1_idx/sgn``, ``fold_c2_idx/sgn``: the per-stage fold
+                         (2^(R-1) rows) of c1/c2 — the f32 staged path
+          ``fold_cc_idx/sgn``: the combined fold (2^(2R-1) rows) of cc —
+                         the exact integer path
+        """
+        if self.v < 2:
+            raise ValueError(f"radix-4 tables need K >= 3 (got K={self.K})")
+        N = self.n_states
+        Q = N // 4
+        half = N // 2
+        q = np.arange(Q)
+        c1 = np.zeros((2, 4, Q), dtype=np.int64)
+        c2 = np.zeros((4, 2, Q), dtype=np.int64)
+        cc = np.zeros((4, 4, Q), dtype=np.int64)
+        for k in range(4):
+            x1, x2 = k & 1, k >> 1
+            n = k * Q + q
+            for bm in (0, 1):
+                m = 2 * (n % half) + bm
+                c2[k, bm] = self.output_int(m, x2)
+                for bp in (0, 1):
+                    j = 2 * bm + bp
+                    p = 4 * q + j
+                    c1[x1, j] = self.output_int(p, x1)
+                    cc[k, j] = (c1[x1, j] << self.R) | c2[k, bm]
+        return dict(
+            c1=c1.astype(np.int32),
+            c2=c2.astype(np.int32),
+            cc=cc.astype(np.int32),
+            fold_c1_idx=self.fold_index[c1].astype(np.int32),
+            fold_c1_sgn=self.fold_sign[c1].astype(np.int32),
+            fold_c2_idx=self.fold_index[c2].astype(np.int32),
+            fold_c2_sgn=self.fold_sign[c2].astype(np.int32),
+            fold_cc_idx=self.fold_index4[cc].astype(np.int32),
+            fold_cc_sgn=self.fold_sign4[cc].astype(np.int32),
+        )
+
     @cached_property
     def folded_acs_tables(self) -> dict:
         """Static per-butterfly folded lookups for the ACS kernels.

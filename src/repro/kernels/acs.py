@@ -77,18 +77,14 @@ def folded_bm_rows(y_s, code: ConvCode, acc_dtype):
     return pos, neg
 
 
-def butterfly_bm_row(pos, neg, code: ConvCode, key: str, tile: int, acc_dtype):
-    """Expand the folded rows to a (n_butterflies, TILE) per-butterfly row.
+def expand_run_rows(pos, neg, idx, sgn, tile: int):
+    """Expand static (index, sign) tables over ±folded rows to a metric row.
 
-    ``key`` ∈ {te, to, be, bo} names the α/γ/β/θ codeword column. Each
-    butterfly's metric is ± one folded entry; the (index, sign) tables are
-    static, so the expansion is a static run-length concat of broadcast
-    ±folded rows (no captured constants, no gathers) — cheaper than the
-    4·nb·R multiply-adds of the unfolded form and exactly equal to it.
+    ``pos``/``neg`` are lists of (1, TILE) folded rows and their negations;
+    ``idx``/``sgn`` are STATIC int arrays (trace-time constants). The
+    expansion is a run-length concat of broadcast ±folded rows — no captured
+    constants, no gathers — and exactly equals the gather-based form.
     """
-    tabs = code.folded_acs_tables
-    idx = tabs["fold_cw_" + key]  # (nb,) static
-    sgn = tabs["fold_sgn_" + key]  # (nb,) static ±1
     runs: list[tuple[tuple[int, int], int]] = []
     for i, s in zip(idx.tolist(), sgn.tolist()):
         if runs and runs[-1][0] == (i, s):
@@ -102,6 +98,170 @@ def butterfly_bm_row(pos, neg, code: ConvCode, key: str, tile: int, acc_dtype):
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
 
 
+def butterfly_bm_row(pos, neg, code: ConvCode, key: str, tile: int, acc_dtype):
+    """Expand the folded rows to a (n_butterflies, TILE) per-butterfly row.
+
+    ``key`` ∈ {te, to, be, bo} names the α/γ/β/θ codeword column. Each
+    butterfly's metric is ± one folded entry; the (index, sign) tables are
+    static, so the expansion is a static run-length concat of broadcast
+    ±folded rows (no captured constants, no gathers) — cheaper than the
+    4·nb·R multiply-adds of the unfolded form and exactly equal to it.
+    """
+    tabs = code.folded_acs_tables
+    return expand_run_rows(
+        pos, neg, tabs["fold_cw_" + key], tabs["fold_sgn_" + key], tile
+    )
+
+
+def folded_radix4_bm_rows(y0, y1, code: ConvCode, acc_dtype):
+    """Stage-pair symbols → 2^(2R-1) combined folded rows [+, −], (1, TILE) each.
+
+    The combined two-stage label stays antipodal (BM2(~cc) = −BM2(cc)), so
+    one static add/sub chain per fold representative covers all 2^(2R)
+    combined metrics — the PR 3 fold composed over the stage pair.
+    """
+    fsv = code.folded_radix4_codeword_signs  # (2^(2R-1), 2R) static ±1
+    R = code.R
+    pos, neg = [], []
+    for k in range(code.n_folded4):
+        acc = None
+        for r in range(2 * R):
+            y_r = y0[r] if r < R else y1[r - R]
+            term = y_r if fsv[k, r] > 0 else -y_r
+            acc = term if acc is None else acc + term
+        row = acc.astype(acc_dtype)[None, :]
+        pos.append(row)
+        neg.append(-row)
+    return pos, neg
+
+
+def _pack_plane(dec, tile: int):
+    """(N, TILE) {0,1} decisions → (ceil(N/32), TILE) int32 packed words."""
+    pad = (-dec.shape[0]) % 32
+    if pad:
+        dec = jnp.concatenate([dec, jnp.zeros((pad, tile), jnp.int32)], axis=0)
+    d = dec.reshape(-1, 32, tile)
+    weights = (jnp.int32(1) << jnp.arange(32, dtype=jnp.int32))[None, :, None]
+    return (d * weights).sum(axis=1, dtype=jnp.int32)
+
+
+def radix4_stage_pair(pm, y0, y1, code: ConvCode, acc_dtype, tile: int, combine: bool = False):
+    """One stage-fused radix-4 ACS step on (N, TILE) operands.
+
+    Mirrors :func:`repro.kernels.ref._radix4_step` with the Pallas row
+    idiom: the metric tables are expanded by static run-length concats of
+    ±folded rows (no gathers). The default (staged) form shares the first
+    tournament round between the two target groups with the same stage-t
+    input bit and fixes the add order to the two-stage accumulation — the
+    identical op sequence as two radix-2 stages (bit-exact even in IEEE
+    float), fused into one step body: one symbol fetch, one normalization
+    round and one survivor-emission round per two decoded bits.
+
+    ``combine=True`` (integer accumulators only) adds the combined
+    2^(2R-1)-folded two-stage metric once per candidate instead — exact by
+    integer associativity, one fewer dependent add round at the cost of N
+    extra compare/selects (the measured alternative; see DESIGN.md §10).
+
+    Returns (new_pm, dec1, dec2): the time-(t+2) metrics plus the two
+    STANDARD radix-2 survivor bit-planes of stages t and t+1.
+    """
+    N = code.n_states
+    Q = N // 4
+    tabs = code.radix4_acs_tables
+    pm4 = pm.reshape(Q, 4, tile)
+    if combine and jnp.issubdtype(acc_dtype, jnp.integer):
+        pos2, neg2 = folded_radix4_bm_rows(y0, y1, code, acc_dtype)
+        d1, l1 = {}, {}
+        for k in range(4):
+            cand = [
+                pm4[:, j]
+                + expand_run_rows(
+                    pos2, neg2, tabs["fold_cc_idx"][k, j], tabs["fold_cc_sgn"][k, j], tile
+                )
+                for j in range(4)
+            ]
+            for bm_bit in (0, 1):
+                even, odd = cand[2 * bm_bit], cand[2 * bm_bit + 1]
+                d1[k, bm_bit] = (odd < even).astype(jnp.int32)
+                l1[k, bm_bit] = jnp.minimum(even, odd)
+    else:
+        pos_a, neg_a = folded_bm_rows(y0, code, acc_dtype)
+        pos_b, neg_b = folded_bm_rows(y1, code, acc_dtype)
+        mu, d1v = {}, {}
+        for x1 in range(2):
+            a = [
+                pm4[:, j]
+                + expand_run_rows(
+                    pos_a, neg_a, tabs["fold_c1_idx"][x1, j], tabs["fold_c1_sgn"][x1, j], tile
+                )
+                for j in range(4)
+            ]
+            for bm_bit in (0, 1):
+                even, odd = a[2 * bm_bit], a[2 * bm_bit + 1]
+                d1v[x1, bm_bit] = (odd < even).astype(jnp.int32)
+                mu[x1, bm_bit] = jnp.minimum(even, odd)
+        d1, l1 = {}, {}
+        for k in range(4):
+            for bm_bit in (0, 1):
+                d1[k, bm_bit] = d1v[k & 1, bm_bit]
+                l1[k, bm_bit] = mu[k & 1, bm_bit] + expand_run_rows(
+                    pos_b, neg_b, tabs["fold_c2_idx"][k, bm_bit], tabs["fold_c2_sgn"][k, bm_bit], tile
+                )
+    outs, d2 = [], []
+    for k in range(4):
+        d2.append((l1[k, 1] < l1[k, 0]).astype(jnp.int32))
+        outs.append(jnp.minimum(l1[k, 0], l1[k, 1]))
+    new_pm = jnp.concatenate(outs, axis=0)
+    # stage-t plane from groups k=0/1 (intermediates [0, N/2)/[N/2, N));
+    # the interleave is a free sublane reshape, like the butterfly read
+    dec1 = jnp.concatenate(
+        [
+            jnp.stack([d1[0, 0], d1[0, 1]], axis=1).reshape(N // 2, tile),
+            jnp.stack([d1[1, 0], d1[1, 1]], axis=1).reshape(N // 2, tile),
+        ],
+        axis=0,
+    )
+    dec2 = jnp.concatenate(d2, axis=0)
+    return new_pm, dec1, dec2
+
+
+def radix2_stage(pm, y_s, code: ConvCode, acc_dtype, tile: int):
+    """One radix-2 butterfly stage on (N, TILE) operands → (new_pm, dec).
+
+    Symmetry-folded branch metrics: 2^(R-1) folded rows once per stage
+    (static add/sub chains), then the four α/γ/β/θ rows by in-register sign
+    selects; the butterfly read is a free sublane reshape (the TPU analogue
+    of the GPU shared-memory shuffle).
+    """
+    nb = code.n_butterflies
+    pos, neg = folded_bm_rows(y_s, code, acc_dtype)
+    bm_te = butterfly_bm_row(pos, neg, code, "te", tile, acc_dtype)
+    bm_to = butterfly_bm_row(pos, neg, code, "to", tile, acc_dtype)
+    bm_be = butterfly_bm_row(pos, neg, code, "be", tile, acc_dtype)
+    bm_bo = butterfly_bm_row(pos, neg, code, "bo", tile, acc_dtype)
+
+    pairs = pm.reshape(nb, 2, tile)
+    pm_even, pm_odd = pairs[:, 0], pairs[:, 1]
+
+    m_te = pm_even + bm_te
+    m_to = pm_odd + bm_to
+    dec_top = (m_to < m_te).astype(jnp.int32)
+    pm_top = jnp.minimum(m_te, m_to)
+
+    m_be = pm_even + bm_be
+    m_bo = pm_odd + bm_bo
+    dec_bot = (m_bo < m_be).astype(jnp.int32)
+    pm_bot = jnp.minimum(m_be, m_bo)
+
+    new_pm = jnp.concatenate([pm_top, pm_bot], axis=0)  # (N, TILE)
+    dec = jnp.concatenate([dec_top, dec_bot], axis=0)  # (N, TILE)
+    return new_pm, dec
+
+
+def _min_subtract(pm):
+    return pm - jnp.min(pm, axis=0, keepdims=True)
+
+
 def _acs_kernel(
     y_ref,  # (SC, R, TILE) soft symbols for this stage chunk
     sp_ref,  # (SC, W, TILE) int32 out: packed survivor words
@@ -112,8 +272,8 @@ def _acs_kernel(
     stage_chunk: int,
     acc_dtype,
     norm_every: int,
+    radix: int,
 ):
-    nb = code.n_butterflies
     tile = pm_ref.shape[-1]
     # global stage base of this chunk — hoisted out of the stage loop
     # (program_id is only available at kernel top level)
@@ -123,64 +283,49 @@ def _acs_kernel(
     def _init():
         pm_ref[...] = jnp.zeros_like(pm_ref)
 
-    def stage_body(s, pm):
-        # ---- symmetry-folded branch metrics -----------------------------------
-        # 2^(R-1) folded rows once per stage (static add/sub chains), then the
-        # four α/γ/β/θ rows by in-register sign selects.
-        y_s = y_ref[pl.ds(s, 1)][0]  # (R, TILE)
-        y_s = y_s.astype(acc_dtype)
-        pos, neg = folded_bm_rows(y_s, code, acc_dtype)
-        bm_te = butterfly_bm_row(pos, neg, code, "te", tile, acc_dtype)
-        bm_to = butterfly_bm_row(pos, neg, code, "to", tile, acc_dtype)
-        bm_be = butterfly_bm_row(pos, neg, code, "be", tile, acc_dtype)
-        bm_bo = butterfly_bm_row(pos, neg, code, "bo", tile, acc_dtype)
+    def maybe_norm(pm, step_idx):
+        if not norm_every:
+            return pm
+        # amortized min-subtract (i16/i8 saturation contract); cadence counts
+        # GLOBAL steps so chunking can't change the normalization points
+        return jax.lax.cond(
+            step_idx % norm_every == norm_every - 1, _min_subtract, lambda p: p, pm
+        )
 
-        # ---- butterfly ACS: reshape replaces the GPU shared-memory shuffle ---
-        pairs = pm.reshape(nb, 2, tile)
-        pm_even, pm_odd = pairs[:, 0], pairs[:, 1]
+    if radix == 2:
 
-        m_te = pm_even + bm_te
-        m_to = pm_odd + bm_to
-        dec_top = (m_to < m_te).astype(jnp.int32)
-        pm_top = jnp.minimum(m_te, m_to)
+        def stage_body(s, pm):
+            y_s = y_ref[pl.ds(s, 1)][0].astype(acc_dtype)  # (R, TILE)
+            new_pm, dec = radix2_stage(pm, y_s, code, acc_dtype, tile)
+            new_pm = maybe_norm(new_pm, chunk_base + s)
+            sp_ref[pl.ds(s, 1)] = _pack_plane(dec, tile)[None]
+            return new_pm
 
-        m_be = pm_even + bm_be
-        m_bo = pm_odd + bm_bo
-        dec_bot = (m_bo < m_be).astype(jnp.int32)
-        pm_bot = jnp.minimum(m_be, m_bo)
+        n_steps = stage_chunk
+    else:
+        # radix 4: two trellis stages per step; the wrapper guarantees an
+        # even stage_chunk, so pairs never straddle a chunk boundary
+        step_base = chunk_base // 2
 
-        new_pm = jnp.concatenate([pm_top, pm_bot], axis=0)  # (N, TILE)
-        if norm_every:  # amortized min-subtract (i16/i8 saturation contract);
-            # cadence counts GLOBAL stages so chunking can't change the points
-            t = chunk_base + s
-            new_pm = jax.lax.cond(
-                t % norm_every == norm_every - 1,
-                lambda p: p - jnp.min(p, axis=0, keepdims=True),
-                lambda p: p,
-                new_pm,
-            )
+        def stage_body(s, pm):
+            y0 = y_ref[pl.ds(2 * s, 1)][0].astype(acc_dtype)
+            y1 = y_ref[pl.ds(2 * s + 1, 1)][0].astype(acc_dtype)
+            new_pm, dec1, dec2 = radix4_stage_pair(pm, y0, y1, code, acc_dtype, tile)
+            new_pm = maybe_norm(new_pm, step_base + s)
+            words = jnp.stack([_pack_plane(dec1, tile), _pack_plane(dec2, tile)])
+            sp_ref[pl.ds(2 * s, 2)] = words  # two radix-2 bit-planes per step
+            return new_pm
 
-        # ---- bit-pack survivor decisions to int32 words ----------------------
-        dec = jnp.concatenate([dec_top, dec_bot], axis=0)  # (N, TILE)
-        n = dec.shape[0]
-        pad = (-n) % 32
-        if pad:
-            dec = jnp.concatenate([dec, jnp.zeros((pad, tile), jnp.int32)], axis=0)
-        n_words = dec.shape[0] // 32
-        d = dec.reshape(n_words, 32, tile)
-        weights = (jnp.int32(1) << jnp.arange(32, dtype=jnp.int32))[None, :, None]
-        words = (d * weights).sum(axis=1, dtype=jnp.int32)  # (W, TILE)
-        sp_ref[pl.ds(s, 1)] = words[None]
-        return new_pm
+        n_steps = stage_chunk // 2
 
     pm = pm_ref[...]
-    pm = jax.lax.fori_loop(0, stage_chunk, stage_body, pm, unroll=False)
+    pm = jax.lax.fori_loop(0, n_steps, stage_body, pm, unroll=False)
     pm_ref[...] = pm
     pm_out_ref[...] = pm
 
 
 @functools.partial(
-    jax.jit, static_argnames=("code", "stage_chunk", "interpret", "metric_mode")
+    jax.jit, static_argnames=("code", "stage_chunk", "interpret", "metric_mode", "radix")
 )
 def acs_forward_pallas(
     y: jnp.ndarray,
@@ -189,15 +334,19 @@ def acs_forward_pallas(
     stage_chunk: int = DEFAULT_STAGE_CHUNK,
     interpret: bool = False,
     metric_mode: str = "f32",
+    radix: int = 2,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Forward ACS over parallel blocks. y: (T, R, B) → (sp (T, W, B), pm (N, B)).
 
     T must be a multiple of ``stage_chunk`` and B a multiple of 128 (the ops
     wrapper pads). Float32 and integer (int8/int16/int32) inputs supported;
     integer inputs run the exact integer path. ``metric_mode`` "i16"/"i8"
-    adds the per-stage min-subtract normalization (int32 VPU registers; the
+    adds the amortized min-subtract normalization (int32 VPU registers; the
     values stay bit-identical to narrow-dtype arithmetic by the saturation
     budget — see ``repro.kernels.registry.METRIC_MODES``).
+    ``radix=4`` runs the stage-fused two-stage ACS (stage_chunk must be
+    even): half the serial chain, two radix-2 survivor bit-planes per step —
+    ``sp`` is bit-identical to the radix-2 history.
     """
     T, R, B = y.shape
     if R != code.R:
@@ -206,11 +355,17 @@ def acs_forward_pallas(
         raise ValueError(f"T={T} not a multiple of stage_chunk={stage_chunk}")
     if B % LANE_TILE:
         raise ValueError(f"B={B} not a multiple of {LANE_TILE}")
+    if radix not in (2, 4):
+        raise ValueError(f"radix must be 2 or 4, got {radix}")
+    if radix == 4 and stage_chunk % 2:
+        raise ValueError(f"radix-4 needs an even stage_chunk, got {stage_chunk}")
+    if radix == 4 and code.n_states < 4:
+        raise ValueError(f"radix-4 ACS needs K >= 3 (got K={code.K})")
     # semantic dtype check (raises for float symbols with i16/i8); registers
     # stay 32-bit wide on the VPU
     semantic = _acc_dtype_for(y.dtype, metric_mode)
     acc_dtype = jnp.float32 if semantic == jnp.float32 else jnp.int32
-    norm_every = norm_interval(code, metric_mode)
+    norm_every = norm_interval(code, metric_mode, radix)
     y = y.astype(acc_dtype)
     if norm_every:
         # saturate out-of-budget pre-quantized symbols (see acs_forward_ref)
@@ -228,6 +383,7 @@ def acs_forward_pallas(
         stage_chunk=stage_chunk,
         acc_dtype=acc_dtype,
         norm_every=norm_every,
+        radix=radix,
     )
     sp, pm = pl.pallas_call(
         kernel,

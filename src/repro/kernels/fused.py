@@ -36,12 +36,26 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.trellis import ConvCode
-from .acs import LANE_TILE, butterfly_bm_row, folded_bm_rows
+from .acs import (
+    LANE_TILE,
+    _min_subtract,
+    _pack_plane,
+    butterfly_bm_row,
+    folded_bm_rows,
+    radix2_stage,
+    radix4_stage_pair,
+)
 from repro.core.quantize import metric_mode_qmax, norm_interval
 from .ref import _acc_dtype_for
 from .traceback import DEFAULT_TB_CHUNK, _prefix_traceback_phases, prefix_chunk_geometry
 
-__all__ = ["pbvd_fused_pallas"]
+__all__ = ["pbvd_fused_pallas", "DEFAULT_SYM_CHUNK"]
+
+# Stages per double-buffered symbol tile (radix-4 path): the HBM read of the
+# next tile overlaps the current tile's ACS compute. Even (radix-4 pairs
+# never straddle a tile) and big enough to amortize the DMA issue cost; the
+# 2× scratch is 2·64·R·TILE symbol bytes — see DESIGN.md §10 for the model.
+DEFAULT_SYM_CHUNK = 64
 
 
 def _acs_phase(
@@ -54,63 +68,172 @@ def _acs_phase(
     acc_dtype,
     norm_every: int,
 ):
-    """Phase 1: forward ACS; survivor words handed to ``sp_write(s, words)``."""
+    """Phase 1 (radix 2): forward ACS from VMEM-resident symbols; survivor
+    words handed to ``sp_write(s, words)``."""
     tile = pm_ref.shape[-1]
 
     pm_ref[...] = jnp.zeros_like(pm_ref)
 
     def acs_body(s, pm):
         y_s = y_ref[pl.ds(s, 1)][0].astype(acc_dtype)  # (R, TILE)
-        # symmetry-folded BM: 2^(R-1) rows once, α/γ/β/θ by in-register signs
-        pos, neg = folded_bm_rows(y_s, code, acc_dtype)
-        bm_te = butterfly_bm_row(pos, neg, code, "te", tile, acc_dtype)
-        bm_to = butterfly_bm_row(pos, neg, code, "to", tile, acc_dtype)
-        bm_be = butterfly_bm_row(pos, neg, code, "be", tile, acc_dtype)
-        bm_bo = butterfly_bm_row(pos, neg, code, "bo", tile, acc_dtype)
-
-        pairs = pm.reshape(code.n_butterflies, 2, tile)
-        pm_even, pm_odd = pairs[:, 0], pairs[:, 1]
-        m_te, m_to = pm_even + bm_te, pm_odd + bm_to
-        dec_top = (m_to < m_te).astype(jnp.int32)
-        pm_top = jnp.minimum(m_te, m_to)
-        m_be, m_bo = pm_even + bm_be, pm_odd + bm_bo
-        dec_bot = (m_bo < m_be).astype(jnp.int32)
-        pm_bot = jnp.minimum(m_be, m_bo)
-        new_pm = jnp.concatenate([pm_top, pm_bot], axis=0)
+        new_pm, dec = radix2_stage(pm, y_s, code, acc_dtype, tile)
         if norm_every:  # amortized min-subtract (i16/i8 saturation contract)
             new_pm = jax.lax.cond(
-                s % norm_every == norm_every - 1,
-                lambda p: p - jnp.min(p, axis=0, keepdims=True),
-                lambda p: p,
-                new_pm,
+                s % norm_every == norm_every - 1, _min_subtract, lambda p: p, new_pm
             )
-
-        dec = jnp.concatenate([dec_top, dec_bot], axis=0)
-        pad = (-dec.shape[0]) % 32
-        if pad:
-            dec = jnp.concatenate([dec, jnp.zeros((pad, tile), jnp.int32)], axis=0)
-        d = dec.reshape(-1, 32, tile)
-        weights = (jnp.int32(1) << jnp.arange(32, dtype=jnp.int32))[None, :, None]
-        sp_write(s, (d * weights).sum(axis=1, dtype=jnp.int32))  # (W, TILE)
+        sp_write(s, _pack_plane(dec, tile))  # (W, TILE)
         return new_pm
 
     pm = jax.lax.fori_loop(0, n_stages, acs_body, pm_ref[...], unroll=False)
     pm_ref[...] = pm
 
 
+def _acs_phase_r4_dbuf(
+    y_hbm,  # (T_pad, R, B) symbols, HBM/ANY — in their ORIGINAL dtype
+    bt,  # lane-tile index of this program instance
+    pm_ref,  # VMEM scratch (N, TILE)
+    sp_write,  # per-stage survivor-word writer (odd trailing stage)
+    sp_write_pair,  # per-step writer: (flat stage, words1, words2)
+    sym_ref,  # VMEM scratch (2, SYM, R, TILE), y dtype — the double buffer
+    sem_ref,  # DMA semaphores (2,)
+    *,
+    code: ConvCode,
+    n_stages: int,
+    acc_dtype,
+    norm_every: int,
+    clip_qmax: int | None,
+    sym_chunk: int,
+):
+    """Phase 1 (radix 4): stage-fused ACS with a double-buffered symbol pipeline.
+
+    Symbols stay in HBM in their quantized dtype; while the radix-4
+    butterflies of tile c compute, the DMA engine prefetches tile c+1 into
+    the other half of the double buffer, so the HBM read of ``ys`` overlaps
+    ACS compute instead of serializing with it (and the HBM traffic stays at
+    the narrow symbol width — the cast to 32-bit VPU registers happens after
+    the VMEM load). The wrapper pads T to a ``sym_chunk`` multiple so every
+    DMA has static shape; the compute loops stop at the true ``n_stages``.
+    """
+    tile = pm_ref.shape[-1]
+    T = n_stages
+    n_chunks = -(-T // sym_chunk)
+
+    def dma(c, slot):
+        return pltpu.make_async_copy(
+            y_hbm.at[pl.ds(c * sym_chunk, sym_chunk), :, pl.ds(bt * tile, tile)],
+            sym_ref.at[slot],
+            sem_ref.at[slot],
+        )
+
+    pm_ref[...] = jnp.zeros_like(pm_ref)
+    pm = pm_ref[...]
+    dma(0, 0).start()
+    for c in range(n_chunks):  # static chunk count: python-level pipeline
+        slot = c % 2
+        if c + 1 < n_chunks:
+            dma(c + 1, (c + 1) % 2).start()  # prefetch overlaps this chunk
+        dma(c, slot).wait()
+        lo = c * sym_chunk
+        hi = min(lo + sym_chunk, T)
+        step_base = lo // 2  # sym_chunk is even: pairs never straddle tiles
+
+        def load(row, n_rows, slot=slot):
+            # widen (and clip, narrow modes — see acs_forward_ref; in-kernel
+            # because the HBM copy keeps the wire dtype) at the VMEM read
+            y_t = sym_ref[slot, pl.ds(row, n_rows)].astype(acc_dtype)
+            if clip_qmax is not None:
+                y_t = jnp.clip(y_t, -clip_qmax, clip_qmax)
+            return y_t
+
+        def pair_body(s, pm, step_base=step_base):
+            y_pair = load(2 * s, 2)  # (2, R, TILE)
+            new_pm, dec1, dec2 = radix4_stage_pair(
+                pm, y_pair[0], y_pair[1], code, acc_dtype, tile
+            )
+            if norm_every:  # cadence counts GLOBAL fused steps
+                new_pm = jax.lax.cond(
+                    (step_base + s) % norm_every == norm_every - 1,
+                    _min_subtract,
+                    lambda p: p,
+                    new_pm,
+                )
+            sp_write_pair(
+                lo + 2 * s, _pack_plane(dec1, tile), _pack_plane(dec2, tile)
+            )
+            return new_pm
+
+        pm = jax.lax.fori_loop(0, (hi - lo) // 2, pair_body, pm, unroll=False)
+        if (hi - lo) % 2:
+            # trailing radix-2 step (odd T, last tile only); narrow modes
+            # min-subtract unconditionally — uniform shift, budget-safe
+            pm, dec = radix2_stage(pm, load(hi - 1 - lo, 1)[0], code, acc_dtype, tile)
+            if norm_every:
+                pm = _min_subtract(pm)
+            sp_write(hi - 1, _pack_plane(dec, tile))
+    pm_ref[...] = pm
+
+
+def _run_acs_phase(
+    y_ref,
+    pm_ref,
+    sp_write,
+    sp_write_pair,
+    extra_scratch,
+    *,
+    code: ConvCode,
+    n_stages: int,
+    acc_dtype,
+    norm_every: int,
+    radix: int,
+    clip_qmax: int | None,
+    sym_chunk: int,
+):
+    """Dispatch phase 1: VMEM-resident radix-2, or double-buffered radix-4."""
+    if radix == 2:
+        _acs_phase(
+            y_ref,
+            pm_ref,
+            sp_write,
+            code=code,
+            n_stages=n_stages,
+            acc_dtype=acc_dtype,
+            norm_every=norm_every,
+        )
+    else:
+        sym_ref, sem_ref = extra_scratch
+        _acs_phase_r4_dbuf(
+            y_ref,
+            pl.program_id(0),
+            pm_ref,
+            sp_write,
+            sp_write_pair,
+            sym_ref,
+            sem_ref,
+            code=code,
+            n_stages=n_stages,
+            acc_dtype=acc_dtype,
+            norm_every=norm_every,
+            clip_qmax=clip_qmax,
+            sym_chunk=sym_chunk,
+        )
+
+
 def _fused_kernel(
-    y_ref,  # (T, R, TILE) symbols
+    y_ref,  # (T, R, TILE) symbols in VMEM (radix 2) or (T_pad, R, B) in ANY (radix 4)
     start_ref,  # (1, TILE) int32 traceback start state
     bits_ref,  # (n_words, TILE) int32 out: bit-packed decoded bits
     sp_ref,  # VMEM scratch (T, W, TILE) int32 survivor words
     pm_ref,  # VMEM scratch (N, TILE) acc path metrics
-    *,
+    *extra_scratch,  # radix 4: (sym double buffer, DMA semaphores)
     code: ConvCode,
     n_stages: int,
     decode_start: int,
     n_decode: int,
     acc_dtype,
     norm_every: int,
+    radix: int,
+    clip_qmax: int | None,
+    sym_chunk: int,
 ):
     tile = pm_ref.shape[-1]
     v = code.v
@@ -121,14 +244,24 @@ def _fused_kernel(
     def sp_write(s, words):
         sp_ref[pl.ds(s, 1)] = words[None]
 
-    _acs_phase(
+    def sp_write_pair(s, words1, words2):
+        # stage-major scratch: both of a radix-4 step's bit-planes land in
+        # one contiguous store
+        sp_ref[pl.ds(s, 2)] = jnp.stack([words1, words2])
+
+    _run_acs_phase(
         y_ref,
         pm_ref,
         sp_write,
+        sp_write_pair,
+        extra_scratch,
         code=code,
         n_stages=n_stages,
         acc_dtype=acc_dtype,
         norm_every=norm_every,
+        radix=radix,
+        clip_qmax=clip_qmax,
+        sym_chunk=sym_chunk,
     )
 
     # ---- phase 2: serial traceback from VMEM, emit packed bits -------------------
@@ -169,7 +302,7 @@ def _fused_kernel(
 
 
 def _fused_prefix_kernel(
-    y_ref,  # (T, R, TILE) symbols
+    y_ref,  # (T, R, TILE) symbols in VMEM (radix 2) or (T_pad, R, B) in ANY (radix 4)
     start_ref,  # (1, TILE) int32 traceback start state
     bits_ref,  # (n_words, TILE) int32 out: bit-packed decoded bits
     sp_ref,  # VMEM scratch (n_chunks, C, W, TILE) int32 survivor words
@@ -177,13 +310,16 @@ def _fused_prefix_kernel(
     maps_ref,  # VMEM scratch (n_act, N, TILE) int32 composed chunk maps
     entry_ref,  # VMEM scratch (nc_e, TILE) int32 chunk entry states
     tbbits_ref,  # VMEM scratch (nc_e, C, TILE) int32 unpacked decoded bits
-    *,
+    *extra_scratch,  # radix 4: (sym double buffer, DMA semaphores)
     code: ConvCode,
     n_stages: int,
     decode_start: int,
     n_decode: int,
     acc_dtype,
     norm_every: int,
+    radix: int,
+    clip_qmax: int | None,
+    sym_chunk: int,
     C: int,
     P: int,
     n_chunks: int,
@@ -200,14 +336,25 @@ def _fused_prefix_kernel(
         flat = s + P
         sp_ref[pl.ds(flat // C, 1), pl.ds(flat % C, 1)] = words[None, None]
 
-    _acs_phase(
+    def sp_write_pair(s, words1, words2):
+        # chunk-major scratch: a stage pair may straddle a traceback-chunk
+        # boundary (odd C), so the planes store individually
+        sp_write(s, words1)
+        sp_write(s + 1, words2)
+
+    _run_acs_phase(
         y_ref,
         pm_ref,
         sp_write,
+        sp_write_pair,
+        extra_scratch,
         code=code,
         n_stages=n_stages,
         acc_dtype=acc_dtype,
         norm_every=norm_every,
+        radix=radix,
+        clip_qmax=clip_qmax,
+        sym_chunk=sym_chunk,
     )
 
     # ---- phase 2: chunked map composition + short walk + expansion --------------
@@ -255,6 +402,8 @@ def _fused_prefix_kernel(
         "metric_mode",
         "tb_mode",
         "tb_chunk",
+        "acs_radix",
+        "sym_chunk",
     ),
 )
 def pbvd_fused_pallas(
@@ -268,14 +417,21 @@ def pbvd_fused_pallas(
     metric_mode: str = "f32",
     tb_mode: str = "serial",
     tb_chunk: int = DEFAULT_TB_CHUNK,
+    acs_radix: int = 2,
+    sym_chunk: int = DEFAULT_SYM_CHUNK,
 ) -> jnp.ndarray:
     """One-kernel PBVD decode. y (T, R, B) → packed bits (n_decode/32, B) int32.
 
     n_decode must be a multiple of 32 (bit-packed output words).
-    ``metric_mode`` "i16"/"i8" adds the per-stage min-subtract normalization
+    ``metric_mode`` "i16"/"i8" adds the amortized min-subtract normalization
     (int32 VPU registers — see ``repro.kernels.registry.METRIC_MODES``).
     ``tb_mode="prefix"`` runs the chunked parallel-prefix traceback from the
     VMEM survivor scratch (bit-exact to serial for any ``tb_chunk``).
+    ``acs_radix=4`` halves the forward serial chain with stage-fused radix-4
+    steps AND moves the symbol read to a double-buffered HBM→VMEM pipeline:
+    the symbols stay in their wire dtype in HBM and the next ``sym_chunk``
+    stages prefetch while the current ones compute (odd T runs one trailing
+    radix-2 step; decoded bits stay bit-identical to radix 2).
     """
     T, R, B = y.shape
     if n_decode % 32:
@@ -284,14 +440,32 @@ def pbvd_fused_pallas(
         raise ValueError(f"B={B} not a multiple of {LANE_TILE}")
     if tb_mode not in ("serial", "prefix"):
         raise ValueError(f"unknown tb_mode {tb_mode!r}")
+    if acs_radix not in (2, 4):
+        raise ValueError(f"acs_radix must be 2 or 4, got {acs_radix}")
+    if acs_radix == 4 and sym_chunk % 2:
+        raise ValueError(f"sym_chunk must be even, got {sym_chunk}")
+    if acs_radix == 4 and code.n_states < 4:
+        raise ValueError(f"radix-4 ACS needs K >= 3 (got K={code.K})")
     semantic = _acc_dtype_for(y.dtype, metric_mode)
     acc_dtype = jnp.float32 if semantic == jnp.float32 else jnp.int32
-    norm_every = norm_interval(code, metric_mode)
-    y = y.astype(acc_dtype)
-    if norm_every:
-        # saturate out-of-budget pre-quantized symbols (see acs_forward_ref)
-        qm = metric_mode_qmax(code, metric_mode)
-        y = jnp.clip(y, -qm, qm)
+    norm_every = norm_interval(code, metric_mode, acs_radix)
+    clip_qmax = metric_mode_qmax(code, metric_mode) if norm_every else None
+    if acs_radix == 2:
+        # symbols ride the pallas pipeline into VMEM, widened to the
+        # register dtype up front
+        y = y.astype(acc_dtype)
+        if clip_qmax is not None:
+            # saturate out-of-budget pre-quantized symbols (see acs_forward_ref)
+            y = jnp.clip(y, -clip_qmax, clip_qmax)
+        y_spec = pl.BlockSpec((T, R, LANE_TILE), lambda bt: (0, 0, bt))
+    else:
+        # symbols stay in HBM in their WIRE dtype (the kernel widens/clips
+        # after the VMEM load); pad T so every double-buffer DMA is
+        # statically shaped — the pad stages are never computed
+        pad = (-T) % sym_chunk
+        if pad:
+            y = jnp.pad(y, ((0, pad), (0, 0), (0, 0)))
+        y_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
 
     N = code.n_states
     W = (N + 31) // 32
@@ -308,6 +482,9 @@ def pbvd_fused_pallas(
         n_decode=n_decode,
         acc_dtype=acc_dtype,
         norm_every=norm_every,
+        radix=acs_radix,
+        clip_qmax=clip_qmax,
+        sym_chunk=sym_chunk,
     )
     if tb_mode == "serial":
         kernel = functools.partial(_fused_kernel, **common)
@@ -338,11 +515,16 @@ def pbvd_fused_pallas(
             pltpu.VMEM((c_hi - c_lo + 1, LANE_TILE), jnp.int32),
             pltpu.VMEM((c_hi - c_lo + 1, C, LANE_TILE), jnp.int32),
         ]
+    if acs_radix == 4:
+        scratch = scratch + [
+            pltpu.VMEM((2, sym_chunk, R, LANE_TILE), y.dtype),  # double buffer
+            pltpu.SemaphoreType.DMA((2,)),
+        ]
     packed = pl.pallas_call(
         kernel,
         grid=(n_bt,),
         in_specs=[
-            pl.BlockSpec((T, R, LANE_TILE), lambda bt: (0, 0, bt)),
+            y_spec,
             pl.BlockSpec((1, LANE_TILE), lambda bt: (0, bt)),
         ],
         out_specs=pl.BlockSpec((n_words, LANE_TILE), lambda bt: (0, bt)),

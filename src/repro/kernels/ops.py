@@ -29,20 +29,25 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import norm_interval
 from repro.core.trellis import ConvCode
 from . import ref as _ref
 from .acs import LANE_TILE, DEFAULT_STAGE_CHUNK, acs_forward_pallas
 from .registry import (
+    ACS_RADIX,
     METRIC_MODES,
     TB_MODES,
     FramedBlocks,
     available_backends,
+    backend_acs_radix,
     backend_metric_modes,
+    backend_preferred_tb_mode,
     backend_start_policies,
     backend_tb_chunk_sensitive,
     backend_tb_modes,
     get_backend,
     register_backend,
+    resolve_tb_mode,
 )
 from .traceback import DEFAULT_TB_CHUNK, traceback_pallas, traceback_prefix_pallas
 
@@ -52,6 +57,7 @@ __all__ = [
     "FramedBlocks",
     "METRIC_MODES",
     "TB_MODES",
+    "ACS_RADIX",
     "DEFAULT_TB_CHUNK",
     "register_backend",
     "get_backend",
@@ -60,6 +66,9 @@ __all__ = [
     "backend_metric_modes",
     "backend_tb_modes",
     "backend_tb_chunk_sensitive",
+    "backend_acs_radix",
+    "backend_preferred_tb_mode",
+    "resolve_tb_mode",
 ]
 
 
@@ -85,6 +94,8 @@ def _pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
     metric_modes=("f32", "i16", "i8"),
     tb_modes=("serial", "prefix"),
     tb_chunk_sensitive=False,  # full-depth associative scan — no chunks
+    preferred_tb_mode="serial",  # BENCH_pr.json: prefix 0.14-0.39× serial here
+    acs_radix=(2, 4),
 )
 def _decode_ref(
     blocks: FramedBlocks,
@@ -96,6 +107,7 @@ def _decode_ref(
     metric_mode: str = "f32",
     tb_mode: str = "serial",
     tb_chunk: int = DEFAULT_TB_CHUNK,
+    acs_radix: int = 2,
 ) -> jnp.ndarray:
     """Pure-jnp oracle path (also the XLA-fused fast path on CPU).
 
@@ -105,7 +117,9 @@ def _decode_ref(
     decoded bits are identical for every chunking.
     """
     B = blocks.y.shape[2]
-    sp, pm = _ref.acs_forward_ref(blocks.y, code, metric_mode=metric_mode)
+    sp, pm = _ref.acs_forward_ref(
+        blocks.y, code, metric_mode=metric_mode, radix=acs_radix
+    )
     if start_policy == "argmin":
         start = jnp.argmin(pm, axis=0).astype(jnp.int32)
     else:
@@ -116,7 +130,15 @@ def _decode_ref(
 
 
 @register_backend(
-    "pallas", metric_modes=("f32", "i16", "i8"), tb_modes=("serial", "prefix")
+    "pallas",
+    metric_modes=("f32", "i16", "i8"),
+    tb_modes=("serial", "prefix"),
+    # measured-fastest on the committed bench (BENCH_pr.json, acs_radix_sweep
+    # / traceback_sweep): the interpret lowering pays ~4× for the prefix
+    # composition phases. Flip to "prefix" once a real-TPU bench lands —
+    # the declaration IS the auto-resolution, one line per backend.
+    preferred_tb_mode="serial",
+    acs_radix=(2, 4),
 )
 def _decode_pallas(
     blocks: FramedBlocks,
@@ -128,6 +150,7 @@ def _decode_pallas(
     metric_mode: str = "f32",
     tb_mode: str = "serial",
     tb_chunk: int = DEFAULT_TB_CHUNK,
+    acs_radix: int = 2,
 ) -> jnp.ndarray:
     """Two-kernel path (paper K1 ACS + K2 traceback, serial or prefix)."""
     T = blocks.y.shape[0]
@@ -136,7 +159,12 @@ def _decode_pallas(
     Bp = y.shape[2]
 
     sp, pm = acs_forward_pallas(
-        y, code, stage_chunk=stage_chunk, interpret=interpret, metric_mode=metric_mode
+        y,
+        code,
+        stage_chunk=stage_chunk,
+        interpret=interpret,
+        metric_mode=metric_mode,
+        radix=acs_radix,
     )
     if start_policy == "argmin":
         # argmin over the padded-final metrics: the zero-BM pad stages only
@@ -176,6 +204,9 @@ def _decode_pallas(
     start_policies=("zero",),
     metric_modes=("f32", "i16", "i8"),
     tb_modes=("serial", "prefix"),
+    preferred_tb_mode="serial",  # measured-fastest on the committed bench
+    # (see the pallas registration note; same TPU re-measure applies here)
+    acs_radix=(2, 4),
 )
 def _decode_fused(
     blocks: FramedBlocks,
@@ -187,6 +218,7 @@ def _decode_fused(
     metric_mode: str = "f32",
     tb_mode: str = "serial",
     tb_chunk: int = DEFAULT_TB_CHUNK,
+    acs_radix: int = 2,
 ) -> jnp.ndarray:
     """Single-kernel path (ACS + in-VMEM traceback, bit-packed output) —
     see kernels/fused.py; unpacked here for API compatibility."""
@@ -209,6 +241,7 @@ def _decode_fused(
         metric_mode=metric_mode,
         tb_mode=tb_mode,
         tb_chunk=tb_chunk,
+        acs_radix=acs_radix,
     )
     # unpack only what is kept: trim pad lanes BEFORE the 32× shift-expand
     # and expand the ragged last word to just its live rows, so the
@@ -245,6 +278,7 @@ def _decode_fused(
         "metric_mode",
         "tb_mode",
         "tb_chunk",
+        "acs_radix",
     ),
 )
 def _decode_blocks_jit(
@@ -261,6 +295,7 @@ def _decode_blocks_jit(
     metric_mode: str,
     tb_mode: str,
     tb_chunk: int,
+    acs_radix: int,
 ) -> jnp.ndarray:
     fn = get_backend(backend)
     return fn(
@@ -277,6 +312,7 @@ def _decode_blocks_jit(
         metric_mode=metric_mode,
         tb_mode=tb_mode,
         tb_chunk=tb_chunk,
+        acs_radix=acs_radix,
     )
 
 
@@ -292,8 +328,9 @@ def pbvd_decode_blocks(
     interpret: bool | None = None,
     frame_counts: tuple[int, ...] | None = None,
     metric_mode: Literal["f32", "i16", "i8"] = "f32",
-    tb_mode: Literal["serial", "prefix"] = "serial",
+    tb_mode: Literal["serial", "prefix", "auto"] = "serial",
     tb_chunk: int = DEFAULT_TB_CHUNK,
+    acs_radix: int = 2,
 ) -> jnp.ndarray:
     """Decode framed parallel blocks via the named backend.
 
@@ -309,12 +346,18 @@ def pbvd_decode_blocks(
     ``tb_mode`` selects the traceback algorithm (:data:`TB_MODES`): "serial"
         is the paper's stage walk, "prefix" the chunked parallel-prefix
         survivor-map composition (bit-exact; ``tb_chunk`` sizes the chunks
-        and is ignored by "serial").
+        and is ignored by "serial"), and "auto" resolves — eagerly, before
+        the cache key — to the backend's declared measured-fastest mode.
+    ``acs_radix`` selects the forward-ACS step (:data:`ACS_RADIX`): 2 is the
+        paper's butterfly, 4 the stage-fused two-stage step (bit-exact; odd
+        T runs one trailing radix-2 step).
     Returns (n_decode, n_real_blocks) int32 decoded bits.
 
-    Backend, start-policy, metric-mode and tb-mode are validated *before*
-    jit: an unknown backend raises ``KeyError``, an unsupported start
-    policy, metric mode or tb mode raises ``ValueError`` eagerly (never a
+    Backend, start-policy, metric-mode, tb-mode and acs-radix are validated
+    *before* jit: an unknown backend raises ``KeyError``; an unsupported
+    start policy, metric mode, tb mode or radix — including a narrow metric
+    mode whose saturation budget cannot absorb the radix-4 double-stage
+    accumulation for this code — raises ``ValueError`` eagerly (never a
     trace-time error from inside the kernel adapter).
 
     Only the TOTAL real-lane count enters the jit cache key: lanes are
@@ -337,6 +380,7 @@ def pbvd_decode_blocks(
             f"backend {backend!r} does not support metric_mode={metric_mode!r}; "
             f"supported: {supported_modes}"
         )
+    tb_mode = resolve_tb_mode(backend, tb_mode)  # "auto" → declared fastest
     supported_tb = backend_tb_modes(backend)
     if tb_mode not in supported_tb:
         raise ValueError(
@@ -345,6 +389,18 @@ def pbvd_decode_blocks(
         )
     if tb_chunk < 1:
         raise ValueError(f"tb_chunk must be >= 1, got {tb_chunk}")
+    supported_radix = backend_acs_radix(backend)
+    if acs_radix not in supported_radix:
+        raise ValueError(
+            f"backend {backend!r} does not support acs_radix={acs_radix}; "
+            f"supported: {supported_radix}"
+        )
+    if acs_radix == 4 and code.n_states < 4:
+        raise ValueError(f"acs_radix=4 needs K >= 3 (got K={code.K})")
+    # narrow modes: the re-derived normalization cadence must exist at this
+    # radix — norm_interval raises a clear ValueError here, pre-jit, when
+    # the budget cannot absorb the fused step's double-stage accumulation
+    norm_interval(code, metric_mode, acs_radix)
     if tb_mode == "serial" or not backend_tb_chunk_sensitive(backend):
         # the launch ignores tb_chunk (serial walk, or a chunk-free prefix
         # implementation): normalize it out of the jit cache key so callers
@@ -363,4 +419,5 @@ def pbvd_decode_blocks(
         metric_mode=metric_mode,
         tb_mode=tb_mode,
         tb_chunk=tb_chunk,
+        acs_radix=acs_radix,
     )

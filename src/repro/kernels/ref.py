@@ -36,6 +36,8 @@ __all__ = [
     "branch_metric_table",
     "folded_branch_metric_table",
     "expand_folded_bm",
+    "folded_radix4_bm_table",
+    "expand_folded_radix4_bm",
     "acs_forward_ref",
     "traceback_ref",
     "traceback_prefix_ref",
@@ -135,6 +137,32 @@ def expand_folded_bm(bm_folded: jnp.ndarray, code: ConvCode) -> jnp.ndarray:
     return jnp.where(neg, -gathered, gathered)
 
 
+def folded_radix4_bm_table(y2: jnp.ndarray, code: ConvCode) -> jnp.ndarray:
+    """Combined two-stage folded BM table. y2: (..., 2R) → (..., 2^(2R-1)).
+
+    ``y2`` is the stage pair ``[y_t; y_{t+1}]`` concatenated channel-last.
+    The combined label stays antipodal (BM2(~cc) = −BM2(cc)), so only the
+    2^(2R-1) fold representatives need computing — static add/sub chains
+    over :attr:`ConvCode.folded_radix4_codeword_signs`, no multiplies.
+    """
+    rows = []
+    svals = code.folded_radix4_codeword_signs  # (2^(2R-1), 2R) static ±1
+    for k in range(code.n_folded4):
+        acc = None
+        for r in range(2 * code.R):
+            term = y2[..., r] if svals[k, r] > 0 else -y2[..., r]
+            acc = term if acc is None else acc + term
+        rows.append(acc)
+    return jnp.stack(rows, axis=-1)
+
+
+def expand_folded_radix4_bm(bm2_folded: jnp.ndarray, code: ConvCode) -> jnp.ndarray:
+    """(..., 2^(2R-1)) combined folded table → (..., 2^(2R)) full table."""
+    gathered = bm2_folded[..., code.fold_index4]  # static gather
+    neg = jnp.asarray(code.fold_sign4 < 0)
+    return jnp.where(neg, -gathered, gathered)
+
+
 def _pack_decisions(dec_bits: jnp.ndarray) -> jnp.ndarray:
     """dec_bits: (N, B) {0,1} → (ceil(N/32), B) int32, bit (n%32) of word n//32."""
     n, b = dec_bits.shape
@@ -163,38 +191,146 @@ def _acc_dtype_for(y_dtype, metric_mode: str):
     return jnp.int16 if metric_mode == "i16" else jnp.int8
 
 
-@partial(jax.jit, static_argnames=("code", "metric_mode", "fold"))
+def _radix2_stage(pm: jnp.ndarray, bm: jnp.ndarray, code: ConvCode):
+    """One radix-2 butterfly stage. pm (N, B) + bm table (2^R, B) →
+    (new_pm (N, B), dec (N, B) int32 odd-predecessor decisions)."""
+    nb = code.n_butterflies
+    tabs = code.acs_tables
+    pairs = pm.reshape(nb, 2, pm.shape[-1])
+    pm_even, pm_odd = pairs[:, 0], pairs[:, 1]
+    # top targets j: even pred uses α, odd pred uses γ
+    m_te = pm_even + bm[jnp.asarray(tabs["cw_top_even"])]
+    m_to = pm_odd + bm[jnp.asarray(tabs["cw_top_odd"])]
+    dec_top = (m_to < m_te).astype(jnp.int32)
+    pm_top = jnp.minimum(m_te, m_to)
+    # bottom targets j+N/2: even pred uses β, odd pred uses θ
+    m_be = pm_even + bm[jnp.asarray(tabs["cw_bot_even"])]
+    m_bo = pm_odd + bm[jnp.asarray(tabs["cw_bot_odd"])]
+    dec_bot = (m_bo < m_be).astype(jnp.int32)
+    pm_bot = jnp.minimum(m_be, m_bo)
+    new_pm = jnp.concatenate([pm_top, pm_bot], axis=0)
+    return new_pm, jnp.concatenate([dec_top, dec_bot], axis=0)
+
+
+def _interleave_sublanes(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(Q, B) pairs → (2Q, B): row 2q from ``a``, row 2q+1 from ``b``."""
+    q, lanes = a.shape
+    return jnp.stack([a, b], axis=1).reshape(2 * q, lanes)
+
+
+def _radix4_step(
+    pm: jnp.ndarray,
+    y0: jnp.ndarray,
+    y1: jnp.ndarray,
+    code: ConvCode,
+    acc_dtype,
+    combine: bool = False,
+):
+    """One stage-fused radix-4 ACS step (two trellis stages).
+
+    pm (N, B) at time t; y0/y1 (R, B) symbols of stages t, t+1 (already in
+    ``acc_dtype``). Returns (new_pm (N, B) at time t+2, dec1, dec2) where
+    dec1/dec2 are the STANDARD radix-2 survivor bit-planes of stages t and
+    t+1 — the fused step emits exactly what two radix-2 steps would, so the
+    traceback (serial or prefix) and the packed SP layout are untouched.
+
+    The 4-way compare-select per target runs as a tournament whose first
+    round is SHARED between the two target groups with the same stage-t
+    input bit — exactly the sharing the radix-2 trellis does — so the
+    default (staged) form is the identical op sequence as two radix-2
+    stages, with the add order fixed to the two-stage accumulation
+    (bit-exact even in IEEE float).
+
+    ``combine=True`` (integer accumulators only) instead adds the combined
+    2^(2R-1)-folded two-stage metric once per candidate — exact because
+    integer addition is associative and, within a fixed intermediate, the
+    stage-(t+1) term is a common offset to both compared candidates. It
+    trades the shared first round for one fewer dependent add round
+    (4 adds + 3 compare/select rounds vs 6 adds + 4); measured slower under
+    XLA CPU SIMD (the extra N compare/selects dominate), kept as the
+    selectable reference for architectures where dependency depth wins.
+    """
+    if not combine or not jnp.issubdtype(acc_dtype, jnp.integer):
+        # staged-shared: literally the two radix-2 half-steps, fused in one
+        # step body (one normalization/emission round per two stages)
+        bm_a = expand_folded_bm(folded_branch_metric_table(y0.T, code), code).T
+        bm_b = expand_folded_bm(folded_branch_metric_table(y1.T, code), code).T
+        pm1, dec1 = _radix2_stage(pm, bm_a, code)
+        new_pm, dec2 = _radix2_stage(pm1, bm_b, code)
+        return new_pm, dec1, dec2
+    N = code.n_states
+    Q = N // 4
+    tabs = code.radix4_acs_tables
+    pm4 = pm.reshape(Q, 4, pm.shape[-1])
+    # combined folded metric set: 2^(2R-1) distinct two-stage metrics
+    y2 = jnp.concatenate([y0, y1], axis=0)  # (2R, B)
+    bm2 = expand_folded_radix4_bm(folded_radix4_bm_table(y2.T, code), code).T
+    d1, l1 = {}, {}
+    for k in range(4):
+        cand = [pm4[:, j] + bm2[jnp.asarray(tabs["cc"][k, j])] for j in range(4)]
+        for bm_bit in (0, 1):
+            even, odd = cand[2 * bm_bit], cand[2 * bm_bit + 1]
+            d1[k, bm_bit] = (odd < even).astype(jnp.int32)
+            l1[k, bm_bit] = jnp.minimum(even, odd)
+    outs, d2 = [], []
+    for k in range(4):
+        d2.append((l1[k, 1] < l1[k, 0]).astype(jnp.int32))
+        outs.append(jnp.minimum(l1[k, 0], l1[k, 1]))
+    new_pm = jnp.concatenate(outs, axis=0)
+    # stage-t bit-plane: groups k=0/1 cover intermediates [0, N/2)/[N/2, N)
+    # (groups 2/3 would duplicate them); stage-(t+1) plane is in group order
+    dec1 = jnp.concatenate(
+        [_interleave_sublanes(d1[0, 0], d1[0, 1]), _interleave_sublanes(d1[1, 0], d1[1, 1])],
+        axis=0,
+    )
+    dec2 = jnp.concatenate(d2, axis=0)
+    return new_pm, dec1, dec2
+
+
+@partial(jax.jit, static_argnames=("code", "metric_mode", "fold", "radix", "r4_combine"))
 def acs_forward_ref(
     y: jnp.ndarray,
     code: ConvCode,
     metric_mode: str = "f32",
     fold: bool = True,
+    radix: int = 2,
+    r4_combine: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Forward ACS over a batch of parallel blocks (paper K1).
 
     y: (T, R, B) soft symbols (float32 or int-like; int inputs accumulate
        exactly — int32 for ``metric_mode="f32"``, int16/int8 with min-subtract
-       normalization every ``norm_interval(code, mode)`` stages for
+       normalization every ``norm_interval(code, mode, radix)`` ACS steps for
        ``"i16"``/``"i8"``, never saturating within the registry's documented
        budget).
     ``fold=True`` (the hot path) computes only the 2^(R-1) symmetry-folded
     branch metrics per stage and expands them with in-register signs;
-    ``fold=False`` keeps the full 2^R table (benchmark/parity reference).
+    ``fold=False`` keeps the full 2^R table (benchmark/parity reference,
+    radix 2 only).
+    ``radix=4`` collapses each pair of trellis stages into one stage-fused
+    4-way compare-select step (ceil(T/2) steps; odd T runs one trailing
+    radix-2 step), emitting the same two radix-2 survivor bit-planes per
+    step — the returned ``sp`` is bit-identical to the radix-2 history.
+    ``r4_combine=True`` (integer accumulators only) selects the combined
+    2^(2R-1)-folded metric formulation of the fused step (see
+    :func:`_radix4_step`; exact, kept as the measured alternative).
     Returns (sp, pm_final):
       sp: (T, ceil(N/32), B) int32 bit-packed survivor decisions
-      pm_final: (N, B) final path metrics (normalized for i16/i8).
+      pm_final: (N, B) final path metrics (normalized for i16/i8; under
+      radix 4 the narrow-mode normalization points differ from radix 2 by a
+      per-lane uniform shift only — decisions and argmin are invariant).
     """
     T, R, B = y.shape
     N = code.n_states
-    nb = N // 2
-    tabs = code.acs_tables
-    cw_te = jnp.asarray(tabs["cw_top_even"])  # α
-    cw_to = jnp.asarray(tabs["cw_top_odd"])  # γ
-    cw_be = jnp.asarray(tabs["cw_bot_even"])  # β
-    cw_bo = jnp.asarray(tabs["cw_bot_odd"])  # θ
+    if radix not in (2, 4):
+        raise ValueError(f"radix must be 2 or 4, got {radix}")
+    if radix == 4 and not fold:
+        raise ValueError("the unfolded (fold=False) reference exists only for radix 2")
+    if radix == 4 and N < 4:
+        raise ValueError(f"radix-4 ACS needs K >= 3 (got K={code.K})")
 
     acc_dtype = _acc_dtype_for(y.dtype, metric_mode)
-    norm_every = norm_interval(code, metric_mode)  # 0 → never (f32)
+    norm_every = norm_interval(code, metric_mode, radix)  # 0 → never (f32)
     if norm_every:
         # saturate out-of-budget pre-quantized symbols on ingestion: the
         # no-saturation guarantee assumes |y| ≤ metric_mode_qmax, and symbol
@@ -203,45 +339,66 @@ def acs_forward_ref(
         # graceful degradation instead of PM wrap for everything else)
         qm = metric_mode_qmax(code, metric_mode)
         y = jnp.clip(y, -qm, qm)
-    signs = jnp.asarray(code.codeword_signs, dtype=acc_dtype)  # (2^R, R)
 
-    def step(pm, xs):
-        y_t, t = xs
-        # y_t: (R, B) → bm table (2^R, B)
-        y_t = y_t.astype(acc_dtype)
-        if fold:
-            # folded half table, sign-expanded — bit-exact to the full table
-            # (IEEE negation is sign-symmetric); the helpers are channel-last
-            bm = expand_folded_bm(folded_branch_metric_table(y_t.T, code), code).T
-        else:
-            bm = signs @ y_t
-        pairs = pm.reshape(nb, 2, B)
-        pm_even, pm_odd = pairs[:, 0], pairs[:, 1]
-        # top targets j: even pred uses α, odd pred uses γ
-        m_te = pm_even + bm[cw_te]
-        m_to = pm_odd + bm[cw_to]
-        dec_top = (m_to < m_te).astype(jnp.int32)
-        pm_top = jnp.minimum(m_te, m_to)
-        # bottom targets j+N/2: even pred uses β, odd pred uses θ
-        m_be = pm_even + bm[cw_be]
-        m_bo = pm_odd + bm[cw_bo]
-        dec_bot = (m_bo < m_be).astype(jnp.int32)
-        pm_bot = jnp.minimum(m_be, m_bo)
-        new_pm = jnp.concatenate([pm_top, pm_bot], axis=0)
-        if norm_every:
-            # amortized min-subtract: decisions are invariant to the uniform
-            # per-lane shift, so only the saturation budget fixes the cadence
-            new_pm = jax.lax.cond(
-                t % norm_every == norm_every - 1,
-                lambda p: p - jnp.min(p, axis=0, keepdims=True),
-                lambda p: p,
-                new_pm,
-            )
-        sp_words = _pack_decisions(jnp.concatenate([dec_top, dec_bot], axis=0))
-        return new_pm, sp_words
+    def norm_cond(pm, step_idx):
+        # amortized min-subtract: decisions are invariant to the uniform
+        # per-lane shift, so only the saturation budget fixes the cadence
+        return jax.lax.cond(
+            step_idx % norm_every == norm_every - 1,
+            lambda p: p - jnp.min(p, axis=0, keepdims=True),
+            lambda p: p,
+            pm,
+        )
 
     pm0 = jnp.zeros((N, B), dtype=acc_dtype)
-    pm_final, sp = jax.lax.scan(step, pm0, (y, jnp.arange(T, dtype=jnp.int32)))
+
+    if radix == 2:
+        signs = jnp.asarray(code.codeword_signs, dtype=acc_dtype)  # (2^R, R)
+
+        def step(pm, xs):
+            y_t, t = xs
+            # y_t: (R, B) → bm table (2^R, B)
+            y_t = y_t.astype(acc_dtype)
+            if fold:
+                # folded half table, sign-expanded — bit-exact to the full
+                # table (IEEE negation is sign-symmetric); channel-last helpers
+                bm = expand_folded_bm(folded_branch_metric_table(y_t.T, code), code).T
+            else:
+                bm = signs @ y_t
+            new_pm, dec = _radix2_stage(pm, bm, code)
+            if norm_every:
+                new_pm = norm_cond(new_pm, t)
+            return new_pm, _pack_decisions(dec)
+
+        pm_final, sp = jax.lax.scan(step, pm0, (y, jnp.arange(T, dtype=jnp.int32)))
+        return sp, pm_final
+
+    # ---- radix 4: ceil(T/2) fused steps + optional trailing radix-2 step ----
+    T2 = T // 2
+    y_pairs = y[: 2 * T2].reshape(T2, 2, R, B)
+
+    def step4(pm, xs):
+        y_pair, r = xs
+        y0 = y_pair[0].astype(acc_dtype)
+        y1 = y_pair[1].astype(acc_dtype)
+        new_pm, dec1, dec2 = _radix4_step(pm, y0, y1, code, acc_dtype, r4_combine)
+        if norm_every:
+            new_pm = norm_cond(new_pm, r)
+        sp2 = jnp.stack([_pack_decisions(dec1), _pack_decisions(dec2)])
+        return new_pm, sp2  # (2, W, B) — two stages per step
+
+    pm_final, sp2 = jax.lax.scan(step4, pm0, (y_pairs, jnp.arange(T2, dtype=jnp.int32)))
+    sp = sp2.reshape(2 * T2, -1, B)
+    if T % 2:
+        # trailing radix-2 step (odd T); narrow modes normalize here
+        # unconditionally — a uniform shift, decision- and argmin-invariant,
+        # that keeps the inter-normalization gap within the radix-4 budget
+        y_last = y[T - 1].astype(acc_dtype)
+        bm = expand_folded_bm(folded_branch_metric_table(y_last.T, code), code).T
+        pm_final, dec = _radix2_stage(pm_final, bm, code)
+        if norm_every:
+            pm_final = pm_final - jnp.min(pm_final, axis=0, keepdims=True)
+        sp = jnp.concatenate([sp, _pack_decisions(dec)[None]], axis=0)
     return sp, pm_final
 
 

@@ -43,6 +43,7 @@ __all__ = [
     "DecodeBackend",
     "METRIC_MODES",
     "TB_MODES",
+    "ACS_RADIX",
     "register_backend",
     "get_backend",
     "available_backends",
@@ -50,6 +51,9 @@ __all__ = [
     "backend_metric_modes",
     "backend_tb_modes",
     "backend_tb_chunk_sensitive",
+    "backend_acs_radix",
+    "backend_preferred_tb_mode",
+    "resolve_tb_mode",
 ]
 
 
@@ -136,8 +140,62 @@ TB_MODES: dict[str, dict[str, Any]] = {
         serial_steps="ceil(T/tb_chunk) composed-map walk",
         scratch="composed maps (n_active·N·lanes·4 B) + entry states + "
         "(fused) unpacked chunk bits",
-        when="the default at Table III geometry — the last O(T) chain "
-        "becomes O(T/C) with sublane-parallel composition/expansion",
+        when="where the backend declares it profitable — the last O(T) "
+        "chain becomes O(T/C) with sublane-parallel composition/expansion",
+    ),
+}
+
+# ``tb_mode="auto"`` is not an algorithm: the dispatcher resolves it to the
+# backend's declared measured-fastest mode (``register_backend(
+# preferred_tb_mode=...)``) BEFORE the tb_modes validation, so callers get
+# the per-backend winner without knowing the benchmark table. The
+# declarations encode BENCH_pr.json on the platform it was recorded:
+# prefix on ``ref`` runs at 0.14-0.39× serial (XLA already fuses the
+# serial scan; the associative scan pays gather-composition for nothing on
+# CPU), and the Pallas kernels' interpret lowering pays similarly for the
+# composition phases. A backend flips its declaration to "prefix" the
+# moment a committed bench measures it profitable there (the design case:
+# real-TPU runs, where the serial walk is the dependency-chain bottleneck
+# the chunked composition removes).
+
+
+# ---------------------------------------------------------------------------
+# The ACS-radix contract (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+# ``acs_radix`` fixes how many trellis stages one forward-ACS step collapses.
+# Both radixes are bit-exact for every input (the radix-4 step emits the two
+# STANDARD radix-2 survivor bit-planes, and its compare/select tree
+# reproduces the two-stage comparisons exactly — by integer associativity on
+# the narrow pipeline, by a staged add order in f32), so the choice is a
+# pure serial-chain/bandwidth trade:
+#
+# * ``2`` — the paper's butterfly: one stage per step, T serial steps.
+# * ``4`` — stage-fused: ceil(T/2) steps of 4-way compare-select per state
+#   over the collapsed two-stage trellis (4 predecessors, combined 2-symbol
+#   labels with only 2^(2R-1) distinct folded metrics per step), one
+#   normalization/survivor-emission round amortized over two decoded bits;
+#   the fused backend additionally double-buffers the symbol reads
+#   (HBM→VMEM prefetch of the next step's tile overlaps the current
+#   butterfly). Odd T runs one trailing radix-2 step. Narrow metric modes
+#   re-derive the normalization cadence for the doubled per-step
+#   accumulation (``quantize.norm_interval(code, mode, radix)``) and reject
+#   code/mode pairs whose budget cannot absorb two unnormalized stages —
+#   eagerly, before any tracing.
+ACS_RADIX: dict[int, dict[str, Any]] = {
+    2: dict(
+        serial_steps="T butterfly stages",
+        metrics_per_step="2^(R-1) folded branch metrics",
+        when="the default: tiny codes (K < 3), narrow modes whose budget "
+        "cannot absorb two unnormalized stages, and the measured winner on "
+        "the ref/CPU backend at small batch (BENCH_pr.json acs_radix_sweep)",
+    ),
+    4: dict(
+        serial_steps="ceil(T/2) stage-fused steps (+1 radix-2 step, odd T)",
+        metrics_per_step="2^(2R-1) folded combined two-stage metrics",
+        when="the ACS-bound regime (98% of decode time post-PR 4) — halves "
+        "the forward serial chain and amortizes normalization/emission "
+        "over two bits; fused backend overlaps symbol HBM reads via a "
+        "double-buffered VMEM pipeline",
     ),
 }
 
@@ -210,6 +268,7 @@ class DecodeBackend(Protocol):
         metric_mode: str,
         tb_mode: str,
         tb_chunk: int,
+        acs_radix: int,
     ) -> Any: ...
 
 
@@ -223,17 +282,24 @@ def register_backend(
     metric_modes: tuple[str, ...] = ("f32",),
     tb_modes: tuple[str, ...] = ("serial",),
     tb_chunk_sensitive: bool = True,
+    preferred_tb_mode: str = "serial",
+    acs_radix: tuple[int, ...] = (2,),
 ) -> Callable[[DecodeBackend], DecodeBackend]:
     """Decorator: register a decode backend under ``name``.
 
     ``start_policies`` declares which traceback start policies the backend
     implements; ``metric_modes`` declares which :data:`METRIC_MODES` entries
     it implements; ``tb_modes`` declares which :data:`TB_MODES` traceback
-    algorithms it implements. The dispatcher rejects others eagerly
-    (pre-jit). The defaults are the conservative ``("f32",)``/``("serial",)``
-    — a backend must OPT INTO the narrow pipeline and the prefix traceback
+    algorithms it implements; ``acs_radix`` declares which :data:`ACS_RADIX`
+    forward-ACS radixes it implements. The dispatcher rejects others eagerly
+    (pre-jit). The defaults are the conservative
+    ``("f32",)``/``("serial",)``/``(2,)`` — a backend must OPT INTO the
+    narrow pipeline, the prefix traceback and the stage-fused ACS
     explicitly, otherwise the eager check would wave through modes it never
     implemented.
+
+    ``preferred_tb_mode`` declares the backend's measured-fastest traceback
+    mode — what ``tb_mode="auto"`` resolves to (must be in ``tb_modes``).
 
     ``tb_chunk_sensitive=False`` declares that the backend's prefix
     traceback ignores ``tb_chunk`` (e.g. a full-depth associative scan): the
@@ -246,6 +312,13 @@ def register_backend(
     unknown_tb = set(tb_modes) - TB_MODES.keys()
     if unknown_tb:
         raise ValueError(f"unknown tb modes {sorted(unknown_tb)}")
+    unknown_radix = set(acs_radix) - ACS_RADIX.keys()
+    if unknown_radix:
+        raise ValueError(f"unknown acs radixes {sorted(unknown_radix)}")
+    if preferred_tb_mode not in tb_modes:
+        raise ValueError(
+            f"preferred_tb_mode {preferred_tb_mode!r} not in tb_modes {tb_modes}"
+        )
 
     def deco(fn: DecodeBackend) -> DecodeBackend:
         if name in _BACKENDS:
@@ -256,6 +329,8 @@ def register_backend(
         fn.metric_modes = tuple(metric_modes)  # type: ignore[attr-defined]
         fn.tb_modes = tuple(tb_modes)  # type: ignore[attr-defined]
         fn.tb_chunk_sensitive = bool(tb_chunk_sensitive)  # type: ignore[attr-defined]
+        fn.preferred_tb_mode = str(preferred_tb_mode)  # type: ignore[attr-defined]
+        fn.acs_radix = tuple(acs_radix)  # type: ignore[attr-defined]
         return fn
 
     return deco
@@ -288,6 +363,26 @@ def backend_tb_modes(name: str) -> tuple[str, ...]:
 def backend_tb_chunk_sensitive(name: str) -> bool:
     """Whether the named backend's prefix traceback depends on ``tb_chunk``."""
     return getattr(get_backend(name), "tb_chunk_sensitive", True)
+
+
+def backend_acs_radix(name: str) -> tuple[int, ...]:
+    """Forward-ACS radixes the named backend supports (see :data:`ACS_RADIX`)."""
+    return getattr(get_backend(name), "acs_radix", (2,))
+
+
+def backend_preferred_tb_mode(name: str) -> str:
+    """The named backend's declared measured-fastest traceback mode."""
+    return getattr(get_backend(name), "preferred_tb_mode", "serial")
+
+
+def resolve_tb_mode(name: str, tb_mode: str) -> str:
+    """Resolve ``"auto"`` to the backend's preferred mode; pass others through.
+
+    Eager (pre-jit): the resolved mode is what enters the tb_modes
+    validation, the jit cache key and the SessionPool group key, so an
+    ``"auto"`` session coalesces with sessions that spelled the mode out.
+    """
+    return backend_preferred_tb_mode(name) if tb_mode == "auto" else tb_mode
 
 
 def available_backends() -> list[str]:

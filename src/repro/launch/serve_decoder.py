@@ -41,6 +41,7 @@ from repro.kernels.ops import (
     DEFAULT_TB_CHUNK,
     available_backends,
     backend_tb_chunk_sensitive,
+    resolve_tb_mode,
 )
 
 __all__ = ["SessionPool", "PooledSession", "main"]
@@ -174,6 +175,9 @@ class SessionPool:
         else:
             dt = "float32"
         mesh = s.engine.mesh
+        # key on the RESOLVED tb mode so an "auto" session coalesces with
+        # one that spelled the backend's preferred mode out explicitly
+        tb_mode = resolve_tb_mode(cfg.backend, cfg.tb_mode)
         return (
             cfg.code,
             cfg.D,
@@ -181,12 +185,13 @@ class SessionPool:
             cfg.backend,
             cfg.start_policy,
             cfg.metric_mode,
-            cfg.tb_mode,
+            cfg.acs_radix,
+            tb_mode,
             # tb_chunk only parameterizes chunk-sensitive prefix launches
             # (the dispatcher normalizes it out otherwise); keying on it
             # elsewhere would only split coalescable groups
             cfg.tb_chunk
-            if cfg.tb_mode == "prefix" and backend_tb_chunk_sensitive(cfg.backend)
+            if tb_mode == "prefix" and backend_tb_chunk_sensitive(cfg.backend)
             else None,
             dt,
             s._interpret,
@@ -318,15 +323,23 @@ def main() -> None:
     )
     ap.add_argument(
         "--tb-mode",
-        default="serial",
-        choices=["serial", "prefix"],
-        help="traceback algorithm (prefix = chunked survivor-map composition)",
+        default="auto",
+        choices=["auto", "serial", "prefix"],
+        help="traceback algorithm (auto = the backend's measured-fastest; "
+        "prefix = chunked survivor-map composition)",
     )
     ap.add_argument(
         "--tb-chunk",
         type=int,
         default=DEFAULT_TB_CHUNK,
         help="prefix traceback chunk size (stages composed per chunk map)",
+    )
+    ap.add_argument(
+        "--acs-radix",
+        type=int,
+        default=2,
+        choices=[2, 4],
+        help="forward-ACS radix (4 = stage-fused two-stage steps, bit-exact)",
     )
     ap.add_argument("--chunk-bits", type=int, default=4096, help="payload bits per chunk")
     ap.add_argument("--n-chunks", type=int, default=100)
@@ -350,12 +363,15 @@ def main() -> None:
         metric_mode=args.metric_mode,
         tb_mode=args.tb_mode,
         tb_chunk=args.tb_chunk,
+        acs_radix=args.acs_radix,
     )
     engine = DecoderEngine(cfg)
     print(
         f"[serve_decoder] {spec.name}: K={spec.code.K}, rate={spec.rate:.3f}, "
         f"D={cfg.D}, L={cfg.L}, q={cfg.effective_q}, backend={cfg.backend}, "
-        f"metric_mode={cfg.metric_mode}, tb_mode={cfg.tb_mode}; "
+        f"metric_mode={cfg.metric_mode}, tb_mode={cfg.tb_mode} "
+        f"(→ {resolve_tb_mode(cfg.backend, cfg.tb_mode)}), "
+        f"acs_radix={cfg.acs_radix}; "
         f"{args.streams} stream(s) × {args.chunk_bits * args.n_chunks} payload bits "
         f"in {args.n_chunks} chunks at Eb/N0={args.ebn0} dB"
     )

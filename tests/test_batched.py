@@ -223,6 +223,38 @@ def test_session_pool_groups_compatible_sessions_into_one_launch():
     assert pool.launches == 3  # one for the D=64 group, one for D=128
 
 
+def test_session_pool_groups_on_resolved_tb_mode_and_radix():
+    """tb_mode="auto" coalesces with sessions that spell the backend's
+    preferred mode out; differing acs_radix splits the group (different
+    compiled launch)."""
+    from repro.kernels.ops import backend_preferred_tb_mode
+
+    base = dict(spec=get_code_spec("ccsds"), D=64, L=16, q=8, backend="ref")
+    eng_auto = DecoderEngine(PBVDConfig(**base, tb_mode="auto"))
+    eng_expl = DecoderEngine(
+        PBVDConfig(**base, tb_mode=backend_preferred_tb_mode("ref"))
+    )
+    eng_r4 = DecoderEngine(PBVDConfig(**base, tb_mode="auto", acs_radix=4))
+    _, _, y = _tx_stream("ccsds", 256, 5.0, 11)
+    ya = np.asarray(y)
+
+    pool = SessionPool()
+    h_auto, h_expl = pool.open(eng_auto), pool.open(eng_expl)
+    h_auto.feed(ya)
+    h_expl.feed(ya)
+    pool.step()
+    assert pool.launches == 1  # auto resolved == explicit → one group
+
+    h_auto2, h_r4 = pool.open(eng_auto), pool.open(eng_r4)
+    h_auto2.feed(ya)
+    h_r4.feed(ya)
+    pool.step()
+    assert pool.launches == 3  # radix-4 session launched separately
+    ref = np.asarray(eng_auto.decode(y, 256))
+    for h in (h_auto, h_expl, h_auto2, h_r4):
+        np.testing.assert_array_equal(np.concatenate([h.take(), h.finish(256)]), ref)
+
+
 def test_session_pool_int_and_float_sessions_do_not_mix():
     cfg = PBVDConfig(spec=get_code_spec("ccsds"), D=64, L=16, q=8, backend="ref")
     eng = DecoderEngine(cfg)

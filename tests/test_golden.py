@@ -8,11 +8,13 @@ moves any stage of the decode path — framing, depuncturing, quantization,
 folded branch metrics, ACS, traceback — fails here against a byte-stable
 reference instead of drifting silently.
 
-Every registered CodeSpec × backend × metric mode × traceback mode is
-replayed: ``bits_f32`` must be reproduced exactly by metric modes "f32" AND
-"i16" (the i16 contract is bit-exact hard decisions), ``bits_i8`` by "i8" —
-and the prefix traceback must reproduce the same vectors as the serial walk
-(the TB_MODES contract is bit-exactness, so the goldens need no new files).
+Every registered CodeSpec × backend × metric mode × traceback mode × ACS
+radix is replayed: ``bits_f32`` must be reproduced exactly by metric modes
+"f32" AND "i16" (the i16 contract is bit-exact hard decisions), ``bits_i8``
+by "i8" — and the prefix traceback and the stage-fused radix-4 forward pass
+must reproduce the same vectors as the serial walk / radix-2 butterfly (the
+TB_MODES and ACS_RADIX contracts are bit-exactness, so the goldens need no
+new files).
 """
 
 import json
@@ -59,7 +61,8 @@ def test_golden_covers_every_registered_spec():
 @pytest.mark.parametrize("name", available_code_specs())
 @pytest.mark.parametrize("metric_mode", ["f32", "i16", "i8"])
 @pytest.mark.parametrize("tb_mode", ["serial", "prefix"])
-def test_golden_decode(name, backend, metric_mode, tb_mode):
+@pytest.mark.parametrize("acs_radix", [2, 4])
+def test_golden_decode(name, backend, metric_mode, tb_mode, acs_radix):
     g = _load(name)
     meta = g["meta"]
     spec = get_code_spec(name)
@@ -72,6 +75,7 @@ def test_golden_decode(name, backend, metric_mode, tb_mode):
         metric_mode=metric_mode,
         tb_mode=tb_mode,
         tb_chunk=24,  # non-divisor of T at the golden geometry
+        acs_radix=acs_radix,
     )
     bits = np.asarray(
         DecoderEngine(cfg).decode(jnp.asarray(g["y"]), meta["n_bits"])
@@ -80,6 +84,6 @@ def test_golden_decode(name, backend, metric_mode, tb_mode):
     np.testing.assert_array_equal(
         bits,
         expected,
-        err_msg=f"{name}/{backend}/{metric_mode}/{tb_mode} drifted from the "
-        f"golden vector",
+        err_msg=f"{name}/{backend}/{metric_mode}/{tb_mode}/r{acs_radix} "
+        f"drifted from the golden vector",
     )

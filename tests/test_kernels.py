@@ -367,6 +367,216 @@ def test_narrow_pm_never_saturates_10k_stages(code, metric_mode, dtype_max):
     assert int(jnp.max(jnp.abs(pm_narrow))) <= budget
 
 
+# ---------------------------------------------------------------------------
+# Stage-fused radix-4 ACS (DESIGN.md §10, registry.ACS_RADIX)
+# ---------------------------------------------------------------------------
+def test_radix4_trellis_tables():
+    """Collapsed two-stage tables vs brute-force transition enumeration, and
+    the combined-label fold identity BM2(cc) = BM(c1) + BM(c2)."""
+    for code in (CCSDS_27, CODE_25, CODE_37):
+        N, half, Q, v = code.n_states, code.n_states // 2, code.n_states // 4, code.v
+        tabs = code.radix4_acs_tables
+        for n in range(N):
+            k, q = n // Q, n % Q
+            assert (k >> 1, k & 1) == (n >> (v - 1), (n >> (v - 2)) & 1)
+            for bm in (0, 1):
+                m = 2 * (n % half) + bm
+                assert ((n >> (v - 1)) << (v - 1)) | (m >> 1) == n  # m → n valid
+                assert tabs["c2"][k, bm, q] == code.output_int(m, n >> (v - 1))
+                for bp in (0, 1):
+                    p = 2 * (m % half) + bp
+                    assert p == code.radix4_preds[n, 2 * bm + bp]
+                    c1 = code.output_int(p, k & 1)
+                    assert tabs["c1"][k & 1, 2 * bm + bp, q] == c1
+                    cc = (c1 << code.R) | tabs["c2"][k, bm, q]
+                    assert tabs["cc"][k, 2 * bm + bp, q] == cc
+        # fold identity over random symbols
+        rng = np.random.default_rng(code.K)
+        y2 = rng.normal(size=2 * code.R).astype(np.float32)
+        bm2f = code.folded_radix4_codeword_signs @ y2
+        bm2 = code.fold_sign4 * bm2f[code.fold_index4]
+        bm_t = code.codeword_signs @ y2[: code.R]
+        bm_t1 = code.codeword_signs @ y2[code.R :]
+        assert code.n_folded4 == 1 << (2 * code.R - 1)
+        for cc in range(1 << (2 * code.R)):
+            np.testing.assert_allclose(
+                bm2[cc], bm_t[cc >> code.R] + bm_t1[cc & ((1 << code.R) - 1)],
+                rtol=1e-6, atol=1e-6,
+            )
+
+
+@pytest.mark.parametrize("code", [CCSDS_27, CODE_25, CODE_37], ids=["217", "215", "317"])
+@pytest.mark.parametrize("dtype,metric_mode", [(np.float32, "f32"), (np.int8, "f32"), (np.int8, "i16")], ids=["f32", "int", "i16"])
+@pytest.mark.parametrize("T", [96, 77], ids=["evenT", "oddT"])
+def test_acs_radix4_ref_matches_radix2(code, dtype, metric_mode, T):
+    """Survivor bit-planes are bit-identical between radixes; f32 path
+    metrics are bit-identical too (same IEEE op sequence); narrow-mode
+    metrics differ only by a per-lane uniform shift (argmin-invariant)."""
+    rng = np.random.default_rng(hash((code.K, T)) % 2**31)
+    y = _rand_y(rng, T, code.R, 8, dtype)
+    sp2, pm2 = acs_forward_ref(y, code, metric_mode=metric_mode, radix=2)
+    sp4, pm4 = acs_forward_ref(y, code, metric_mode=metric_mode, radix=4)
+    assert jnp.array_equal(sp2, sp4)
+    if metric_mode == "f32":
+        assert jnp.array_equal(pm2, pm4)
+    else:
+        shift = np.asarray(pm4 - pm2)
+        assert (shift == shift[0:1]).all()  # uniform per lane
+        assert (np.argmin(np.asarray(pm2), 0) == np.argmin(np.asarray(pm4), 0)).all()
+
+
+@pytest.mark.parametrize("code", [CCSDS_27, CODE_37], ids=["217", "317"])
+def test_acs_radix4_combined_formulation_exact(code):
+    """The combined 2^(2R-1)-folded-metric form of the fused step (integer
+    accumulators) is bit-identical to the staged form and to radix 2 — in
+    BOTH implementations: the jnp gather idiom (ref) and the Pallas
+    run-length-row idiom (radix4_stage_pair(combine=True))."""
+    from repro.kernels.acs import radix4_stage_pair
+
+    rng = np.random.default_rng(31)
+    y = _rand_y(rng, 64, code.R, 8, np.int8)
+    sp2, pm2 = acs_forward_ref(y, code, radix=2)
+    sp4s, pm4s = acs_forward_ref(y, code, radix=4, r4_combine=False)
+    sp4c, pm4c = acs_forward_ref(y, code, radix=4, r4_combine=True)
+    assert jnp.array_equal(sp2, sp4s) and jnp.array_equal(sp2, sp4c)
+    assert jnp.array_equal(pm2, pm4s) and jnp.array_equal(pm2, pm4c)
+
+    # the Pallas row idiom is a pure jnp function — drive both its forms
+    # step by step against the staged reference
+    B = 8
+    pm = jnp.zeros((code.n_states, B), jnp.int32)
+    for t in range(0, 8, 2):
+        y0 = y[t].astype(jnp.int32)
+        y1 = y[t + 1].astype(jnp.int32)
+        pm_s, d1_s, d2_s = radix4_stage_pair(pm, y0, y1, code, jnp.int32, B, combine=False)
+        pm_c, d1_c, d2_c = radix4_stage_pair(pm, y0, y1, code, jnp.int32, B, combine=True)
+        assert jnp.array_equal(pm_s, pm_c)
+        assert jnp.array_equal(d1_s, d1_c) and jnp.array_equal(d2_s, d2_c)
+        pm = pm_s
+
+
+@pytest.mark.parametrize("code", [CCSDS_27, CODE_37], ids=["217", "317"])
+@pytest.mark.parametrize("dtype,metric_mode", [(np.float32, "f32"), (np.int8, "i8")], ids=["f32", "i8"])
+def test_acs_pallas_radix4_matches_ref(code, dtype, metric_mode):
+    rng = np.random.default_rng(hash((code.K, 4)) % 2**31)
+    T, B, chunk = 96, 128, 32
+    y = _rand_y(rng, T, code.R, B, dtype)
+    sp_r, pm_r = acs_forward_ref(y, code, metric_mode=metric_mode, radix=4)
+    sp_p, pm_p = acs_forward_pallas(
+        y, code, stage_chunk=chunk, interpret=True, metric_mode=metric_mode, radix=4
+    )
+    assert jnp.array_equal(sp_r, sp_p)
+    if dtype == np.float32:
+        np.testing.assert_allclose(np.asarray(pm_r), np.asarray(pm_p), rtol=1e-6)
+    else:
+        assert jnp.array_equal(pm_r, pm_p)  # same global step cadence → exact
+
+
+def test_acs_radix4_eager_validation():
+    """Unsupported radixes and geometries fail pre-jit with clear errors."""
+    y = jnp.zeros((16, 2, 4), jnp.float32)
+    with pytest.raises(ValueError, match="acs_radix"):
+        pbvd_decode_blocks(y, CCSDS_27, decode_start=4, n_decode=8, backend="ref", acs_radix=3)
+    with pytest.raises(ValueError, match="even stage_chunk"):
+        acs_forward_pallas(
+            jnp.zeros((66, 2, 128), jnp.float32), CCSDS_27, stage_chunk=33, radix=4,
+            interpret=True,
+        )
+    tiny = ConvCode(polys=((1, 1), (1, 0)))  # K=2: no radix-4 trellis
+    with pytest.raises(ValueError, match="K >= 3"):
+        pbvd_decode_blocks(y, tiny, decode_start=4, n_decode=8, backend="ref", acs_radix=4)
+
+
+def test_norm_interval_radix_budget_validation():
+    """A code/mode pair whose budget cannot absorb two unnormalized stages
+    is rejected at config time (norm_interval ValueError), not saturated."""
+    from repro.core.quantize import norm_interval, pm_spread_bound, metric_mode_qmax
+    from repro.core.pbvd import PBVDConfig
+
+    # K=11, R=2: i8's widest q is 3 (qmax 3) and (2v+1)·R·qmax = 126 ≤ 127
+    # but (2v+2)·R·qmax = 132 > 127 — radix-2 legal, radix-4 impossible
+    k11 = ConvCode(polys=(tuple([1] * 11), tuple([1] + [0] * 9 + [1])))
+    qmax = metric_mode_qmax(k11, "i8")
+    assert pm_spread_bound(k11, qmax, 1) <= 127 < pm_spread_bound(k11, qmax, 2)
+    assert norm_interval(k11, "i8") == 1  # radix-2 cadence exists
+    with pytest.raises(ValueError, match="acs_radix=4"):
+        norm_interval(k11, "i8", 4)
+    with pytest.raises(ValueError, match="acs_radix=4"):
+        PBVDConfig(code=k11, metric_mode="i8", acs_radix=4)  # config time
+    with pytest.raises(ValueError, match="acs_radix=4"):
+        pbvd_decode_blocks(
+            jnp.zeros((16, 2, 4), jnp.int8), k11, decode_start=4, n_decode=8,
+            backend="ref", metric_mode="i8", acs_radix=4,
+        )
+    # the same code/mode at radix 2 passes every gate
+    PBVDConfig(code=k11, metric_mode="i8", acs_radix=2)
+
+
+@pytest.mark.parametrize(
+    "metric_mode,dtype_max", [("i16", 32767), ("i8", 127)], ids=["i16", "i8"]
+)
+@pytest.mark.parametrize("code", [CCSDS_27, CODE_37], ids=["217", "317"])
+def test_narrow_pm_never_saturates_radix4_cadence(code, metric_mode, dtype_max):
+    """10k adversarial stages at the RE-DERIVED radix-4 cadence: the doubled
+    per-step accumulation stays within the documented budget, and the narrow
+    radix-4 path's decisions stay bit-exact to unbounded accumulation."""
+    from repro.core.quantize import metric_mode_qmax, norm_interval, pm_spread_bound
+
+    qmax = metric_mode_qmax(code, metric_mode)
+    k_steps = norm_interval(code, metric_mode, 4)  # cadence in FUSED steps
+    budget = pm_spread_bound(code, qmax, 2 * k_steps)  # 2 stages per step
+    assert budget <= dtype_max  # the re-derived cadence satisfies the bound
+
+    rng = np.random.default_rng(43)
+    T, B = 10_000, 2
+    y = _adversarial_stream(rng, T, code.R, B, qmax)
+
+    # numpy shadow at the radix-4 normalization points (stage cadence 2k,
+    # firing after the second stage of every k-th fused step)
+    max_abs = _normalized_acs_max_transient(y, code, 2 * k_steps)
+    assert max_abs <= budget, f"transient {max_abs} exceeds budget {budget}"
+
+    yj = jnp.asarray(y.astype(np.int8 if qmax <= 127 else np.int16))
+    sp_narrow, pm_narrow = acs_forward_ref(yj, code, metric_mode=metric_mode, radix=4)
+    sp_wide, _ = acs_forward_ref(yj.astype(jnp.int32), code, metric_mode="f32", radix=2)
+    assert jnp.array_equal(sp_narrow, sp_wide)
+    assert int(jnp.max(jnp.abs(pm_narrow))) <= budget
+
+
+def test_tb_mode_auto_resolution():
+    """tb_mode="auto" resolves to each backend's declared fastest mode, the
+    resolved decode is bit-exact to spelling the mode out, and the registry
+    rejects a preferred mode outside tb_modes."""
+    from repro.kernels.ops import (
+        backend_preferred_tb_mode,
+        register_backend,
+        resolve_tb_mode,
+    )
+
+    for backend in ("ref", "pallas", "fused"):
+        preferred = backend_preferred_tb_mode(backend)
+        assert resolve_tb_mode(backend, "auto") == preferred
+        assert resolve_tb_mode(backend, "prefix") == "prefix"  # pass-through
+
+    rng = np.random.default_rng(53)
+    y = _rand_y(rng, 128, CCSDS_27.R, 40, np.float32)
+    for backend in ("ref", "pallas", "fused"):
+        auto = pbvd_decode_blocks(
+            y, CCSDS_27, decode_start=32, n_decode=64, backend=backend,
+            tb_mode="auto", interpret=True,
+        )
+        explicit = pbvd_decode_blocks(
+            y, CCSDS_27, decode_start=32, n_decode=64, backend=backend,
+            tb_mode=backend_preferred_tb_mode(backend), interpret=True,
+        )
+        assert jnp.array_equal(auto, explicit), backend
+
+    with pytest.raises(ValueError, match="preferred_tb_mode"):
+        register_backend("bogus-auto", tb_modes=("serial",), preferred_tb_mode="prefix")(
+            lambda *a, **k: None
+        )
+
+
 def test_narrow_pm_rejects_float_symbols():
     """i16/i8 need pre-quantized integers; float symbols fail loudly."""
     y = jnp.zeros((8, 2, 4), jnp.float32)

@@ -63,15 +63,16 @@ def _tx(spec, n_bits, ebn0_db, seed):
     st.sampled_from([8, None]),  # quantization
     st.sampled_from(["zero", "argmin"]),  # start policy
     st.sampled_from(["f32", "i16", "i8"]),  # metric mode
+    st.sampled_from([2, 4]),  # acs radix
 )
-def test_backend_parity_matrix(name, n_bits, seed, ebn0_db, q, policy, metric_mode):
+def test_backend_parity_matrix(name, n_bits, seed, ebn0_db, q, policy, metric_mode, acs_radix):
     spec = get_code_spec(name)
     y = _tx(spec, n_bits, ebn0_db, seed)
     outs = {}
     for backend in BACKENDS:
         cfg = PBVDConfig(
             spec=spec, D=32, L=12, q=q, backend=backend, start_policy=policy,
-            metric_mode=metric_mode,
+            metric_mode=metric_mode, acs_radix=acs_radix,
         )
         engine = DecoderEngine(cfg)
         if policy not in backend_start_policies(backend):
@@ -84,7 +85,41 @@ def test_backend_parity_matrix(name, n_bits, seed, ebn0_db, q, policy, metric_mo
         np.testing.assert_array_equal(
             bits,
             outs["ref"],
-            err_msg=f"{name}/{backend}/{policy}/{metric_mode} diverged",
+            err_msg=f"{name}/{backend}/{policy}/{metric_mode}/r{acs_radix} diverged",
+        )
+
+
+# ---------------------------------------------------------------------------
+# acs-radix parity: the stage-fused radix-4 forward pass is bit-exact to
+# radix-2 for every CodeSpec × backend × metric mode × tb mode — odd D makes
+# T = D + 2L odd, exercising the trailing radix-2 step in every backend
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", available_code_specs())
+@settings(**_COMMON)
+@given(
+    st.integers(24, 96),  # n_bits
+    st.integers(0, 2**16 - 1),  # seed
+    st.floats(3.0, 6.5),  # ebn0_db
+    st.sampled_from(["f32", "i16", "i8"]),  # metric mode
+    st.sampled_from([32, 31]),  # D (even/odd T)
+    st.sampled_from(["serial", "prefix", "auto"]),  # tb mode
+)
+def test_acs_radix_parity_matrix(name, n_bits, seed, ebn0_db, metric_mode, D, tb_mode):
+    spec = get_code_spec(name)
+    y = _tx(spec, n_bits, ebn0_db, seed)
+    for backend in BACKENDS:
+        def bits(radix):
+            cfg = PBVDConfig(
+                spec=spec, D=D, L=12, q=8, backend=backend,
+                metric_mode=metric_mode, tb_mode=tb_mode, acs_radix=radix,
+            )
+            return np.asarray(DecoderEngine(cfg).decode(y, n_bits))
+
+        np.testing.assert_array_equal(
+            bits(4),
+            bits(2),
+            err_msg=f"{name}/{backend}/{metric_mode}/D={D}/{tb_mode} "
+            f"radix-4 diverged from radix-2",
         )
 
 

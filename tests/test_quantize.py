@@ -103,3 +103,27 @@ def test_word_pack_roundtrip_non_multiple(seed, q):
     # the pad region decodes as zeros (unpack without trimming)
     full = np.asarray(unpack_words(w, q))
     assert np.all(full[n:] == 0)
+
+def test_norm_interval_radix_semantics():
+    """The radix argument converts the cadence to fused-step units without
+    changing the radix-2 stage cadence, and the total inter-normalization
+    stage gap always fits the budget."""
+    from repro.core.quantize import (
+        metric_dtype_max,
+        metric_mode_qmax,
+        norm_interval,
+        pm_spread_bound,
+    )
+    from repro.core.trellis import CCSDS_27
+
+    code = CCSDS_27
+    for mode in ("i16", "i8"):
+        k2 = norm_interval(code, mode)  # historical single-argument form
+        assert k2 == norm_interval(code, mode, 2)  # radix 2 is the default
+        k4 = norm_interval(code, mode, 4)
+        assert 1 <= k4 <= max(1, k2 // 2)  # two stages accumulate per step
+        qmax = metric_mode_qmax(code, mode)
+        for stages in (k2, 2 * k4):  # worst gap per radix, in stages
+            assert pm_spread_bound(code, qmax, stages) <= metric_dtype_max(mode)
+    assert norm_interval(code, "f32") == 0
+    assert norm_interval(code, "f32", 4) == 0
