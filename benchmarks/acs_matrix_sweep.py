@@ -1,0 +1,169 @@
+"""ACS-impl sweep: k-stage (min,+) matrix ACS vs the butterfly, + phase split.
+
+The matrix formulation collapses ``acs_k`` trellis stages into one batched
+tropical-matmul step: the 2^(kR-1) folded combined metrics assemble the
+(2^k, 2^k, N/2^k) transition matrix (on the Pallas paths via ONE dense MXU
+matmul against the signed one-hot expansion operand), a suffix-min
+tournament reduces the 2^k candidates per target, and every step still
+emits k standard radix-2 survivor bit-planes — bit-exact to the butterfly,
+with a k-fold shorter forward serial chain. This sweep runs at the paper's
+64-state Table III geometry (CCSDS (2,1,7), D=512, L=42, 8-bit symbols)
+and reports:
+
+  * ``acs_impl_sweep`` rows — end-to-end ``DecoderEngine.decode``
+    decoded-bits/s for butterfly radix-2/radix-4 vs matrix k=2/k=3 per
+    backend;
+  * ``acs_impl_phase_split`` rows — forward-pass wall time per formulation
+    on the jnp kernels vs the serial traceback, extending the PR 5 radix
+    split with the matrix dimension.
+
+``--out BENCH_pr.json`` MERGES the rows into an existing benchmark artifact
+(other benchmarks' rows are kept; stale acs-impl rows are replaced):
+
+    PYTHONPATH=src python benchmarks/acs_matrix_sweep.py \
+        [--n-blocks 64 256] [--backends ref pallas fused] [--ks 2 3] \
+        [--reps 5] [--out BENCH_pr.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from . import bench_json  # package mode (python -m benchmarks.…)
+except ImportError:
+    import bench_json  # script mode (benchmarks/ on sys.path)
+
+from repro.core.codespec import get_code_spec
+from repro.core.engine import DecoderEngine
+from repro.core.pbvd import PBVDConfig
+from repro.kernels.ref import acs_forward_ref, traceback_ref
+
+TABLE3 = bench_json.TABLE3  # paper Table III geometry
+MATRIX_KINDS = ("acs_impl_sweep", "acs_impl_phase_split")
+_time = bench_json.time_median
+
+
+def _phase_split_row(
+    code, code_name: str, n_blocks: int, ks: tuple[int, ...], reps: int, seed: int
+) -> dict:
+    """Forward-pass wall time per ACS formulation vs the serial traceback.
+
+    Integer symbols (the exact path): float inputs would lower the matrix
+    impl to the butterfly, timing the wrong formulation.
+    """
+    D, L = TABLE3["D"], TABLE3["L"]
+    T = D + 2 * L
+    rng = np.random.default_rng(seed)
+    y = jnp.asarray(
+        np.clip(np.round(rng.normal(size=(T, code.R, n_blocks)) * 31.75), -127, 127)
+        .astype(np.int8)
+    )
+    sp, _ = acs_forward_ref(y, code)
+    start = jnp.zeros((n_blocks,), jnp.int32)
+    row = dict(
+        kind="acs_impl_phase_split",
+        code=code_name,  # row identity for the bench_compare gate
+        backend="ref",  # the split always measures the jnp (ref) kernels
+        n_blocks=n_blocks,
+        bfly_r2_ms=round(_time(lambda: acs_forward_ref(y, code, radix=2), reps) * 1e3, 2),
+        bfly_r4_ms=round(_time(lambda: acs_forward_ref(y, code, radix=4), reps) * 1e3, 2),
+        tb_serial_ms=round(_time(lambda: traceback_ref(sp, code, L, D, start), reps) * 1e3, 2),
+    )
+    for k in ks:
+        ms = _time(
+            lambda: acs_forward_ref(y, code, impl="matrix", matrix_k=k), reps
+        ) * 1e3
+        row[f"mat_k{k}_ms"] = round(ms, 2)
+        # derived stat — outside bench_compare's identity
+        row[f"mat_k{k}_vs_r2"] = round(row["bfly_r2_ms"] / ms, 3)
+    return row
+
+
+def run(
+    n_blocks=(64, 256),
+    *,
+    code: str = "ccsds",
+    backends=("ref", "pallas", "fused"),
+    ks=(2, 3),
+    reps: int = 5,
+    seed: int = 7,
+) -> list[dict]:
+    spec = get_code_spec(code)
+    ks = tuple(k for k in ks if k * spec.code.R <= 8 and k <= spec.code.v)
+    D = TABLE3["D"]
+    rows = [_phase_split_row(spec.code, code, max(n_blocks), ks, reps, seed)]
+    for backend in backends:
+        for nb in n_blocks:
+            n_bits = D * nb
+            rng = np.random.default_rng(seed)
+            y = jnp.asarray(rng.normal(size=(n_bits, spec.code.R)).astype(np.float32))
+
+            def mbps(**knobs) -> float:
+                # i8 metric mode keeps the engine on integer symbols, so the
+                # matrix impl runs its real (non-lowered) kernel end-to-end
+                cfg = PBVDConfig(
+                    spec=spec, backend=backend, metric_mode="i8", **knobs, **TABLE3
+                )
+                engine = DecoderEngine(cfg)
+                return n_bits / _time(lambda: engine.decode(y, n_bits), reps) / 1e6
+
+            row = dict(
+                kind="acs_impl_sweep",
+                code=code,
+                backend=backend,
+                n_blocks=nb,
+                n_bits=n_bits,
+                bfly_r2_mbps=round(mbps(acs_radix=2), 2),
+                bfly_r4_mbps=round(mbps(acs_radix=4), 2),
+            )
+            for k in ks:
+                m = mbps(acs_impl="matrix", acs_k=k)
+                row[f"mat_k{k}_mbps"] = round(m, 2)
+                row[f"mat_k{k}_vs_bfly_r2"] = round(m / row["bfly_r2_mbps"], 3)
+            rows.append(row)
+    return rows
+
+
+def merge_bench_json(rows: list[dict], path: str, *, code: str = "ccsds") -> None:
+    """Merge the acs-impl rows into ``path`` (other sweeps' rows preserved)."""
+    bench_json.merge_rows(path, rows, MATRIX_KINDS, geometry=dict(code=code, **TABLE3))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-blocks", type=int, nargs="+", default=[64, 256])
+    ap.add_argument("--backends", nargs="+", default=["ref", "pallas", "fused"])
+    ap.add_argument("--ks", type=int, nargs="+", default=[2, 3])
+    ap.add_argument("--code", default="ccsds")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--out", default=None, help="merge rows into this BENCH_*.json")
+    args = ap.parse_args(argv if argv is not None else [])
+    rows = run(
+        tuple(args.n_blocks),
+        code=args.code,
+        backends=tuple(args.backends),
+        ks=tuple(args.ks),
+        reps=args.reps,
+    )
+    for r in rows:
+        print("acs_matrix_sweep," + ",".join(f"{k}={v}" for k, v in r.items()))
+    if args.out:
+        merge_bench_json(rows, args.out, code=args.code)
+        print(f"# merged into {args.out}")
+    print(
+        "\nmatrix ACS collapses k trellis stages into one (min,+) tropical "
+        "matmul step: the forward serial chain shrinks k-fold, the 2^(kR-1) "
+        "folded combined metrics assemble via one MXU-shaped matmul on the "
+        "Pallas paths, and every step still emits the standard radix-2 "
+        "survivor bit-planes — decoded bits stay bit-exact to the butterfly."
+    )
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

@@ -17,16 +17,21 @@ Prints ``name,us_per_call,derived`` CSV lines per the repo convention.
   acs_radix_sweep   — beyond-paper: stage-fused radix-4 vs radix-2 ACS
                        decoded-bits/s per backend + the per-radix ACS
                        phase split (merges into BENCH_*.json)
+  acs_matrix_sweep  — beyond-paper: k-stage (min,+) matrix ACS vs the
+                       butterfly decoded-bits/s per backend × fusion depth
+                       + the per-impl phase split (merges into BENCH_*.json)
 
 ``--metric-mode`` runs ONLY the metric sweep (the folded/quantized
 hot-path numbers); ``--tb-mode serial prefix`` runs ONLY the traceback
 sweep (``--tb-chunk`` sizes the prefix chunks); ``--acs-radix`` runs ONLY
-the radix sweep. The CI benchmark-smoke job runs all three into one
-artifact, then gates it with tools/bench_compare.py:
+the radix sweep; ``--acs-impl`` runs ONLY the matrix-vs-butterfly sweep
+(``--acs-k`` sets the fusion depths). The CI benchmark-smoke job runs all
+four into one artifact, then gates it with tools/bench_compare.py:
 
     python benchmarks/run.py --metric-mode --out BENCH_pr.json --smoke
     python benchmarks/run.py --tb-mode serial prefix --out BENCH_pr.json --smoke
     python benchmarks/run.py --acs-radix --out BENCH_pr.json --smoke
+    python benchmarks/run.py --acs-impl --out BENCH_pr.json --smoke
 
 Roofline tables (assignment §Roofline) are produced by
 ``python -m repro.launch.roofline`` from the dry-run reports.
@@ -60,6 +65,7 @@ def _run_all() -> None:
         _sibling("metric_sweep"),
         _sibling("traceback_sweep"),
         _sibling("acs_radix_sweep"),
+        _sibling("acs_matrix_sweep"),
     ):
         t0 = time.perf_counter()
         mod.main()
@@ -99,6 +105,19 @@ def main(argv=None) -> None:
         help="run only the ACS-radix sweep (stage-fused radix-4 vs radix-2)",
     )
     ap.add_argument(
+        "--acs-impl",
+        action="store_true",
+        help="run only the ACS-impl sweep (k-stage matrix vs butterfly)",
+    )
+    ap.add_argument(
+        "--acs-k",
+        type=int,
+        nargs="+",
+        default=None,
+        metavar="K",
+        help="matrix fusion depths for the ACS-impl sweep (default: 2 3)",
+    )
+    ap.add_argument(
         "--out", default=None, help="write/merge BENCH_*.json (sweep modes only)"
     )
     ap.add_argument(
@@ -108,14 +127,16 @@ def main(argv=None) -> None:
     )
     args = ap.parse_args(argv)
 
-    selected = args.metric_mode or args.tb_mode or args.acs_radix
+    selected = args.metric_mode or args.tb_mode or args.acs_radix or args.acs_impl
     if (args.out or args.smoke) and not selected:
         ap.error(
             "--out/--smoke only apply to the sweeps; add "
-            "--metric-mode/--tb-mode/--acs-radix"
+            "--metric-mode/--tb-mode/--acs-radix/--acs-impl"
         )
     if args.tb_chunk and not args.tb_mode:
         ap.error("--tb-chunk only applies to the traceback sweep; add --tb-mode")
+    if args.acs_k and not args.acs_impl:
+        ap.error("--acs-k only applies to the ACS-impl sweep; add --acs-impl")
     # ALL sweep runs (smoke and full) use reps>=5 medians: the smoke rows
     # feed the CI regression gate — one noisy sample on a shared runner must
     # not trip the 15% threshold — and the committed full-geometry artifact
@@ -156,6 +177,17 @@ def main(argv=None) -> None:
             print("acs_radix_sweep," + ",".join(f"{k}={v}" for k, v in r.items()))
         if args.out:
             acs_radix_sweep.merge_bench_json(rows, args.out)
+            print(f"# merged into {args.out}", file=sys.stderr)
+    if args.acs_impl:
+        acs_matrix_sweep = _sibling("acs_matrix_sweep")
+
+        n_blocks = (8,) if args.smoke else (64, 256)
+        ks = tuple(args.acs_k) if args.acs_k else (2, 3)
+        rows = acs_matrix_sweep.run(n_blocks, ks=ks, reps=reps)
+        for r in rows:
+            print("acs_matrix_sweep," + ",".join(f"{k}={v}" for k, v in r.items()))
+        if args.out:
+            acs_matrix_sweep.merge_bench_json(rows, args.out)
             print(f"# merged into {args.out}", file=sys.stderr)
     if not selected:
         _run_all()

@@ -1,0 +1,8 @@
+"""Quarantined seed model configs — not part of the decoder surface.
+
+These LM architecture cards shipped with the growth seed and are exercised
+only by the models smoke tests; nothing on the PBVD decode path imports
+them. They live under ``_unused/`` so the coverage/packaging surface of
+``repro.configs`` stays decoder-only while ``base.get_config``/``list_archs``
+keep resolving every registered arch.
+"""

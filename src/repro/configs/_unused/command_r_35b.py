@@ -5,7 +5,7 @@ tied embeddings, LayerNorm.
 40L, d_model 8192, 64 heads (GQA kv=8), d_ff 22528, vocab 256000.
 """
 
-from .base import LayerDesc, ModelConfig, register
+from ..base import LayerDesc, ModelConfig, register
 
 COMMAND_R_35B = register(
     ModelConfig(

@@ -6,7 +6,7 @@ qk_nope 128, v_head 128. MoE: 160 routed experts top-6 + 2 shared,
 expert d_ff 1536; layer 0 uses a dense 12288 FFN. vocab 102400.
 """
 
-from .base import LayerDesc, ModelConfig, register
+from ..base import LayerDesc, ModelConfig, register
 
 DEEPSEEK_V2_236B = register(
     ModelConfig(

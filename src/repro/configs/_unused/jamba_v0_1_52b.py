@@ -10,7 +10,7 @@ Mamba: d_state 16, d_conv 4, expand 2, dt_rank 256.
 use context-parallel KV.
 """
 
-from .base import LayerDesc, ModelConfig, register
+from ..base import LayerDesc, ModelConfig, register
 
 _PATTERN = tuple(
     LayerDesc(

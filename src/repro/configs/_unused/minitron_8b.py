@@ -4,7 +4,7 @@
 32L, d_model 4096, 48→32 heads (GQA kv=8), d_ff 16384, vocab 256000.
 """
 
-from .base import LayerDesc, ModelConfig, register
+from ..base import LayerDesc, ModelConfig, register
 
 MINITRON_8B = register(
     ModelConfig(

@@ -6,7 +6,7 @@ Sliding-window attention per the assignment spec — this makes ``long_500k``
 sub-quadratic (rolling KV cache bounded by the window).
 """
 
-from .base import LayerDesc, ModelConfig, register
+from ..base import LayerDesc, ModelConfig, register
 
 MIXTRAL_8X22B = register(
     ModelConfig(

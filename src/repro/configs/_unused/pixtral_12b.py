@@ -7,7 +7,7 @@ vocab 131072. The vision frontend is a stub per the assignment:
 first ``n_patches`` positions of the sequence.
 """
 
-from .base import LayerDesc, ModelConfig, register
+from ..base import LayerDesc, ModelConfig, register
 
 PIXTRAL_12B = register(
     ModelConfig(

@@ -4,7 +4,7 @@
 64L, d_model 5120, 40 heads (GQA kv=8), d_ff 27648, vocab 152064.
 """
 
-from .base import LayerDesc, ModelConfig, register
+from ..base import LayerDesc, ModelConfig, register
 
 QWEN2_5_32B = register(
     ModelConfig(

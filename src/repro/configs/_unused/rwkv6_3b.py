@@ -5,7 +5,7 @@
 ``long_500k`` runs: O(1) recurrent state per layer.
 """
 
-from .base import LayerDesc, ModelConfig, register
+from ..base import LayerDesc, ModelConfig, register
 
 RWKV6_3B = register(
     ModelConfig(

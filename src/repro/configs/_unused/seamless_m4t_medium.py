@@ -8,7 +8,7 @@ for the encoder. Decode shapes run the text decoder with a precomputed
 encoder context.
 """
 
-from .base import LayerDesc, ModelConfig, register
+from ..base import LayerDesc, ModelConfig, register
 
 SEAMLESS_M4T_MEDIUM = register(
     ModelConfig(

@@ -5,7 +5,7 @@ ungated GELU MLP, LayerNorm, bias terms.
 30L, d_model 3072, 24 heads (GQA kv=2), d_ff 12288, vocab 49152.
 """
 
-from .base import LayerDesc, ModelConfig, register
+from ..base import LayerDesc, ModelConfig, register
 
 STARCODER2_3B = register(
     ModelConfig(

@@ -237,17 +237,20 @@ SHAPES: dict[str, ShapeSpec] = {
 
 _REGISTRY: dict[str, ModelConfig] = {}
 
+# Seed LM architecture cards, quarantined under _unused/: nothing on the
+# decoder path imports them, but get_config/list_archs still resolve them
+# so the models smoke tests keep running against every registered arch.
 _ARCH_MODULES = [
-    "seamless_m4t_medium",
-    "qwen2_5_32b",
-    "minitron_8b",
-    "command_r_35b",
-    "starcoder2_3b",
-    "pixtral_12b",
-    "mixtral_8x22b",
-    "deepseek_v2_236b",
-    "jamba_v0_1_52b",
-    "rwkv6_3b",
+    "_unused.seamless_m4t_medium",
+    "_unused.qwen2_5_32b",
+    "_unused.minitron_8b",
+    "_unused.command_r_35b",
+    "_unused.starcoder2_3b",
+    "_unused.pixtral_12b",
+    "_unused.mixtral_8x22b",
+    "_unused.deepseek_v2_236b",
+    "_unused.jamba_v0_1_52b",
+    "_unused.rwkv6_3b",
 ]
 
 

@@ -227,6 +227,8 @@ class DecoderEngine:
             tb_mode=cfg.tb_mode,
             tb_chunk=cfg.tb_chunk,
             acs_radix=cfg.acs_radix,
+            acs_impl=cfg.acs_impl,
+            acs_k=cfg.acs_k,
         )
 
 

@@ -76,6 +76,17 @@ class PBVDConfig:
     stage-fused 4-way compare-select step — bit-exact decoded bits, half the
     forward serial chain, one normalization/survivor-emission round per two
     bits, and (fused backend) a double-buffered HBM→VMEM symbol pipeline.
+
+    ``acs_impl`` selects the forward-pass formulation (the
+    :data:`~repro.kernels.registry.ACS_IMPL` contract): ``"butterfly"`` is
+    the compare-select trellis at ``acs_radix``; ``"matrix"`` collapses
+    ``acs_k`` stages into one (min,+) tropical matmul step — bit-exact
+    decoded bits, a k-fold shorter forward serial chain, and (Pallas paths)
+    the 2^(kR-1) folded combined metrics assembled by one MXU-shaped
+    matmul. ``acs_k`` is validated here at config time: structural bounds
+    (1 ≤ k ≤ v, k·R ≤ 8) and, for narrow metric modes, the k-stage
+    saturation budget — over-deep fusion fails with a ``ValueError``, never
+    a silent in-kernel saturate.
     """
 
     code: ConvCode = CCSDS_27
@@ -89,6 +100,8 @@ class PBVDConfig:
     tb_mode: Literal["serial", "prefix", "auto"] = "auto"
     tb_chunk: int = DEFAULT_TB_CHUNK  # prefix traceback chunk size
     acs_radix: Literal[2, 4] = 2  # forward-ACS stages fused per step (radix/2)
+    acs_impl: Literal["butterfly", "matrix"] = "butterfly"
+    acs_k: int = 2  # matrix-ACS fusion depth (stages per tropical matmul)
 
     @property
     def T(self) -> int:  # stages per parallel block
@@ -135,20 +148,51 @@ class PBVDConfig:
         return quantize_soft(y, q, scale)
 
     def __post_init__(self):
+        # knob validation mirrors the dispatcher's eager checks and raises
+        # the SAME uniform error shape (repro.kernels.registry.knob_error:
+        # backend, knob, allowed values) — a bad knob fails identically
+        # whether it enters through the config or pbvd_decode_blocks, always
+        # before any jit trace
+        from repro.kernels.ops import (
+            backend_acs_impl,
+            backend_acs_radix,
+            backend_metric_modes,
+            backend_tb_modes,
+            knob_error,
+        )
+
         if self.D <= 0 or self.L < 0:
             raise ValueError("D must be positive, L non-negative")
-        if self.metric_mode not in ("f32", "i16", "i8"):
-            raise ValueError(f"unknown metric_mode {self.metric_mode!r}")
-        if self.tb_mode not in ("serial", "prefix", "auto"):
-            raise ValueError(f"unknown tb_mode {self.tb_mode!r}")
+        if self.metric_mode not in backend_metric_modes(self.backend):
+            raise knob_error(
+                self.backend, "metric_mode", self.metric_mode,
+                backend_metric_modes(self.backend),
+            )
+        tb_allowed = (*backend_tb_modes(self.backend), "auto")
+        if self.tb_mode not in tb_allowed:
+            raise knob_error(self.backend, "tb_mode", self.tb_mode, tb_allowed)
         if self.tb_chunk < 1:
             raise ValueError(f"tb_chunk must be >= 1, got {self.tb_chunk}")
-        if self.acs_radix not in (2, 4):
-            raise ValueError(f"acs_radix must be 2 or 4, got {self.acs_radix}")
+        if self.acs_impl not in backend_acs_impl(self.backend):
+            raise knob_error(
+                self.backend, "acs_impl", self.acs_impl,
+                backend_acs_impl(self.backend),
+            )
+        if self.acs_radix not in backend_acs_radix(self.backend):
+            raise knob_error(
+                self.backend, "acs_radix", self.acs_radix,
+                backend_acs_radix(self.backend),
+            )
         if self.spec is not None and self.spec.code is not self.code:
             # keep cfg.code authoritative for kernel callers
             object.__setattr__(self, "code", self.spec.code)
-        if self.acs_radix == 4:
+        if self.acs_impl == "matrix":
+            # structural bounds on the fusion depth, then the narrow-mode
+            # budget for k unnormalized stages per matrix step — fail at
+            # CONFIG time, not by silent saturation in-kernel
+            self.code.validate_matrix_k(self.acs_k)
+            norm_interval(self.code, self.metric_mode, stages_per_step=self.acs_k)
+        elif self.acs_radix == 4:
             if self.code.n_states < 4:
                 raise ValueError(f"acs_radix=4 needs K >= 3 (got K={self.code.K})")
             # narrow modes: the saturation budget must absorb the fused

@@ -189,7 +189,9 @@ def metric_mode_qmax(code, metric_mode: str) -> int:
     return (1 << (max_symbol_bits(code, metric_dtype_max(metric_mode)) - 1)) - 1
 
 
-def norm_interval(code, metric_mode: str, acs_radix: int = 2) -> int:
+def norm_interval(
+    code, metric_mode: str, acs_radix: int = 2, stages_per_step: int | None = None
+) -> int:
     """Static min-subtract cadence (ACS *steps*) of a narrow metric mode.
 
     Per-step normalization costs a sublane reduction every step; the
@@ -204,25 +206,34 @@ def norm_interval(code, metric_mode: str, acs_radix: int = 2) -> int:
     ``acs_radix`` fixes how many trellis stages one ACS step accumulates
     before the kernel can normalize: 1 stage for the radix-2 butterfly,
     2 for the stage-fused radix-4 step (so the radix-2 cadence, in stages,
-    is unchanged from the historical single-argument form). A configuration
-    whose budget cannot fit even the tightest cadence at this radix —
+    is unchanged from the historical single-argument form). The k-stage
+    (min,+) matrix path passes ``stages_per_step=k`` directly, overriding
+    the radix mapping — one collapsed matrix step accumulates k stages of
+    branch metric before it can min-subtract. A configuration whose budget
+    cannot fit even the tightest cadence at this step width —
     ``pm_spread_bound(code, qmax, stages_per_step) > dtype_max`` — raises
     ``ValueError`` here, at config time, instead of silently saturating
     inside a jitted kernel.
     """
     if metric_mode == "f32":
         return 0  # no normalization
-    if acs_radix not in (2, 4):
-        raise ValueError(f"acs_radix must be 2 or 4, got {acs_radix}")
-    stages_per_step = 1 if acs_radix == 2 else 2
+    origin = f"acs_k={stages_per_step}"
+    if stages_per_step is None:
+        if acs_radix not in (2, 4):
+            raise ValueError(f"acs_radix must be 2 or 4, got {acs_radix}")
+        origin = f"acs_radix={acs_radix}"
+        stages_per_step = 1 if acs_radix == 2 else 2
+    if not isinstance(stages_per_step, int) or stages_per_step < 1:
+        raise ValueError(f"stages_per_step must be a positive int, got {stages_per_step!r}")
     dtype_max = metric_dtype_max(metric_mode)
     qmax = metric_mode_qmax(code, metric_mode)
     if pm_spread_bound(code, qmax, stages_per_step) > dtype_max:
         raise ValueError(
-            f"metric_mode={metric_mode!r} cannot run at acs_radix={acs_radix} "
-            f"for K={code.K}, R={code.R}: even the tightest normalization "
-            f"cadence ({stages_per_step} stage(s) per step) has worst-case "
-            f"path metric {pm_spread_bound(code, qmax, stages_per_step)} "
+            f"metric_mode={metric_mode!r} cannot accumulate "
+            f"{stages_per_step} unnormalized trellis stage(s) per ACS step "
+            f"({origin}) for K={code.K}, R={code.R}: even the tightest "
+            f"normalization cadence has worst-case path metric "
+            f"{pm_spread_bound(code, qmax, stages_per_step)} "
             f"> dtype max {dtype_max}"
         )
     return max(1, (dtype_max // (code.R * qmax) - 2 * code.v) // stages_per_step)

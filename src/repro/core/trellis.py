@@ -24,12 +24,19 @@ at most ``2^R`` groups, hence only ``2^R`` distinct branch metrics per stage.
 from __future__ import annotations
 
 import dataclasses
-from functools import cached_property
+from functools import cached_property, lru_cache
 from typing import Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["ConvCode", "CCSDS_27", "parity"]
+__all__ = ["ConvCode", "CCSDS_27", "MATRIX_MAX_LABEL_BITS", "parity"]
+
+# Cap on k·R for the k-stage (min,+) matrix ACS: the folded combined-metric
+# table has 2^(kR-1) rows, each a static add/sub chain over k·R symbol rows,
+# and the kernels keep the whole table resident (as matmul operand columns or
+# unrolled register rows). 8 label bits → at most 128 folded metrics, the
+# same ceiling as one MXU/VPU lane tile.
+MATRIX_MAX_LABEL_BITS = 8
 
 
 def parity(x: np.ndarray | int) -> np.ndarray | int:
@@ -386,6 +393,124 @@ class ConvCode:
             out["fold_cw_" + key] = self.fold_index[labels].astype(np.int32)
             out["fold_sgn_" + key] = self.fold_sign[labels].astype(np.int32)
         return out
+
+    # ---- k-stage (min,+) matrix trellis tables -------------------------------------
+    # k consecutive trellis stages collapse into ONE transition of the
+    # (min,+) semiring: new_pm[n'] = min_n (A[n', n] + pm[n]) with
+    # A[n', n] = Σ_i BM_i over the unique k-stage path n → n' (+∞ when no
+    # path exists). Every target n' has exactly 2^k predecessors
+    # ``pred(n', j) = 2^k·u + j`` where ``u = n' mod N/2^k`` and j's bit i
+    # is the survivor bit of stage t+i; the k input bits are the top k bits
+    # of n', ``c = n' >> (v-k)``, with bit i of c = the stage-(t+i) input.
+    # The intermediate state after i stages is
+    #     s_i = ((c mod 2^i)·U + u) · 2^(k-i) + (j >> i),   U = N / 2^k,
+    # and the combined label is the k·R-bit concatenation of the per-stage
+    # labels, stage t in the MSBs. The correlation metric stays antipodal in
+    # the combined label (complementing all k·R bits flips every sign), so
+    # only 2^(kR-1) distinct combined metrics exist per collapsed step —
+    # the PR 3 fold composed over the whole k-stage window. k=2 reproduces
+    # ``radix4_acs_tables`` exactly (c ↔ target group, u ↔ quad).
+    def validate_matrix_k(self, k: int) -> None:
+        """Raise ValueError unless k is a usable matrix-ACS fusion depth."""
+        if not isinstance(k, int) or k < 1:
+            raise ValueError(f"acs_k must be a positive int, got {k!r}")
+        if k > self.v:
+            raise ValueError(
+                f"acs_k={k} exceeds the trellis memory v={self.v} (K={self.K}); "
+                f"a k-stage transition matrix needs 2^k <= N={self.n_states} "
+                f"predecessors per state"
+            )
+        if k * self.R > MATRIX_MAX_LABEL_BITS:
+            raise ValueError(
+                f"acs_k={k} needs 2^(kR-1)={1 << (k * self.R - 1)} folded "
+                f"combined metrics (k*R = {k * self.R} label bits > "
+                f"{MATRIX_MAX_LABEL_BITS}); reduce acs_k"
+            )
+
+    def n_folded_matrix(self, k: int) -> int:
+        """Distinct folded combined (k-stage) branch metrics: 2^(kR-1)."""
+        return 1 << (k * self.R - 1)
+
+    @lru_cache(maxsize=None)
+    def fold_index_matrix(self, k: int) -> np.ndarray:
+        """(2^(kR),) int32: folded-table row of each combined k-stage label."""
+        cc = np.arange(1 << (k * self.R))
+        mask = (1 << (k * self.R)) - 1
+        return np.where(cc < self.n_folded_matrix(k), cc, cc ^ mask).astype(np.int32)
+
+    @lru_cache(maxsize=None)
+    def fold_sign_matrix(self, k: int) -> np.ndarray:
+        """(2^(kR),) int32 ±1: BMk(cc) = sign[cc] · BMk_folded[index[cc]]."""
+        cc = np.arange(1 << (k * self.R))
+        return np.where(cc < self.n_folded_matrix(k), 1, -1).astype(np.int32)
+
+    @lru_cache(maxsize=None)
+    def folded_matrix_codeword_signs(self, k: int) -> np.ndarray:
+        """(2^(kR-1), kR) float32 sign rows of the combined-label fold reps.
+
+        ``BMk_folded = folded_matrix_codeword_signs @ [y_t; ...; y_{t+k-1}]``
+        — every representative has MSB 0, so each row is a static add/sub
+        chain over the k·R stacked symbol streams (stage t first).
+        """
+        nb = k * self.R
+        rows = []
+        for cc in range(self.n_folded_matrix(k)):
+            bits = [(cc >> (nb - 1 - r)) & 1 for r in range(nb)]
+            rows.append([2.0 * b - 1.0 for b in bits])
+        return np.array(rows, dtype=np.float32)
+
+    @lru_cache(maxsize=None)
+    def matrix_acs_tables(self, k: int) -> dict:
+        """Static label/fold tables of the k-stage (min,+) transition matrix.
+
+        Arrays of shape (2^k, 2^k, U) with U = N/2^k, indexed [c, j, u]
+        (c = target input-bit group = n' >> (v-k), j = predecessor survivor
+        bits, u = n' mod U):
+
+          ``cc``        combined k·R-bit label of the path
+                        pred(n', j) = 2^k·u + j  →  n' = c·U + u
+          ``fold_idx``  folded-table row of cc (2^(kR-1) rows)
+          ``fold_sgn``  ±1 expansion sign of cc
+
+        The finite entries of A are exactly ``BMk(cc[c, j, u])`` at
+        A[c·U + u, 2^k·u + j]; everything else is +∞ (never materialized —
+        the kernels contract only over the 2^k real predecessors).
+        """
+        self.validate_matrix_k(k)
+        U = self.n_states >> k
+        u = np.arange(U)
+        nk = 1 << k
+        cc = np.zeros((nk, nk, U), dtype=np.int64)
+        for c in range(nk):
+            for j in range(nk):
+                lab = np.zeros(U, dtype=np.int64)
+                for i in range(k):
+                    s_i = ((c & ((1 << i) - 1)) * U + u) * (1 << (k - i)) + (j >> i)
+                    lab = (lab << self.R) | self.output_int(s_i, (c >> i) & 1)
+                cc[c, j] = lab
+        return dict(
+            cc=cc.astype(np.int32),
+            fold_idx=self.fold_index_matrix(k)[cc].astype(np.int32),
+            fold_sgn=self.fold_sign_matrix(k)[cc].astype(np.int32),
+        )
+
+    @lru_cache(maxsize=None)
+    def matrix_expansion(self, k: int) -> np.ndarray:
+        """(2^k·N, 2^(kR-1)) float32 signed one-hot expansion matrix E.
+
+        Row (c, j, u) — flattened in that order — holds a single ±1 at the
+        fold row of ``cc[c, j, u]``, so ``E @ BMk_folded`` assembles every
+        finite entry of the k-stage transition matrix as ONE dense matmul
+        (MXU-shaped: 2^(kR-1) ≤ 128 contraction columns). Exact in float:
+        one nonzero per row means no accumulation, and |BMk| ≤ k·R·q_max is
+        far inside f32's integer range.
+        """
+        t = self.matrix_acs_tables(k)
+        idx = t["fold_idx"].reshape(-1)
+        sgn = t["fold_sgn"].reshape(-1)
+        E = np.zeros((idx.size, self.n_folded_matrix(k)), dtype=np.float32)
+        E[np.arange(idx.size), idx] = sgn
+        return E
 
 
 # The paper's reference code: CCSDS (2,1,7), g1 = 1111001, g2 = 1011011.

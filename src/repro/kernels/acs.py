@@ -51,7 +51,13 @@ from repro.core.quantize import metric_mode_qmax, norm_interval
 from repro.core.trellis import ConvCode
 from .ref import _acc_dtype_for
 
-__all__ = ["acs_forward_pallas", "LANE_TILE", "DEFAULT_STAGE_CHUNK"]
+__all__ = [
+    "acs_forward_pallas",
+    "folded_matrix_bm_rows",
+    "matrix_step",
+    "LANE_TILE",
+    "DEFAULT_STAGE_CHUNK",
+]
 
 LANE_TILE = 128
 DEFAULT_STAGE_CHUNK = 64
@@ -133,6 +139,102 @@ def folded_radix4_bm_rows(y0, y1, code: ConvCode, acc_dtype):
         pos.append(row)
         neg.append(-row)
     return pos, neg
+
+
+def folded_matrix_bm_rows(ys, code: ConvCode, k: int, acc_dtype):
+    """k stage symbol rows → 2^(kR-1) combined folded rows [+, −], (1, TILE) each.
+
+    The k-stage combined label stays antipodal (BM_k(~cc) = −BM_k(cc)), so
+    one static add/sub chain per fold representative covers all 2^(kR)
+    combined metrics — the PR 3 fold composed over the k-stage window
+    (radix-4's two-stage fold generalized). ``ys`` is a list of k (R, TILE)
+    stage rows, stage t first.
+    """
+    fsv = code.folded_matrix_codeword_signs(k)  # (2^(kR-1), kR) static ±1
+    R = code.R
+    pos, neg = [], []
+    for m in range(code.n_folded_matrix(k)):
+        acc = None
+        for r in range(k * R):
+            y_r = ys[r // R][r % R]
+            term = y_r if fsv[m, r] > 0 else -y_r
+            acc = term if acc is None else acc + term
+        row = acc.astype(acc_dtype)[None, :]
+        pos.append(row)
+        neg.append(-row)
+    return pos, neg
+
+
+def matrix_step(pm, ys, code: ConvCode, acc_dtype, tile: int, k: int, e=None):
+    """One k-stage (min,+) matrix ACS step on (N, TILE) operands.
+
+    Mirrors :func:`repro.kernels.ref._matrix_step` (integer accumulators
+    only — the wrappers lower float to the staged butterfly): the k-stage
+    transition metrics A[c, j, u] are assembled from the 2^(kR-1) folded
+    combined rows, then ceil-log2(2^k) suffix-min tournament rounds reduce
+    the 2^k candidates per target while emitting the k STANDARD radix-2
+    survivor bit-planes (round i's decisions, laid out over the canonical
+    covering c < 2^(i+1) — exact because later-round terms are common
+    additive offsets under integer min).
+
+    Two assembly modes:
+
+    * ``e=None`` — static (index, sign) run-length expansion over the ±folded
+      rows per (c, j) (the VPU form; no gathers, like the butterfly path).
+    * ``e`` given — the (2^k·N, 2^(kR-1)) signed one-hot expansion operand:
+      ONE dense matmul ``E @ folded`` produces every transition metric — the
+      MXU-shaped form. Exact: one ±1 per row, and |BM_k| ≤ kR·qmax ≪ 2^24 is
+      below f32's integer-exact range, so the f32 accumulate round-trips to
+      int losslessly.
+
+    Returns (new_pm, planes): time-(t+k) metrics plus k (N, TILE) decision
+    planes, stage t first.
+    """
+    N = code.n_states
+    U = N >> k
+    nk = 1 << k
+    pos, neg = folded_matrix_bm_rows(ys, code, k, acc_dtype)
+    if e is not None:
+        folded = jnp.concatenate(pos, axis=0).astype(jnp.float32)
+        a = jnp.dot(e, folded, preferred_element_type=jnp.float32)
+        a = a.astype(acc_dtype).reshape(nk, nk, U, tile)
+
+        def bm(c, j):
+            return a[c, j]
+
+    else:
+        tabs = code.matrix_acs_tables(k)
+
+        def bm(c, j):
+            return expand_run_rows(
+                pos, neg, tabs["fold_idx"][c, j], tabs["fold_sgn"][c, j], tile
+            )
+
+    pmk = pm.reshape(U, nk, tile)
+    levels = {c: [pmk[:, j] + bm(c, j) for j in range(nk)] for c in range(nk)}
+    planes = []
+    for i in range(k):
+        n_c = 1 << (i + 1)
+        parts, nxt = [], {}
+        for c in range(nk):
+            cur = levels[c]
+            d = [
+                (cur[2 * h + 1] < cur[2 * h]).astype(jnp.int32)
+                for h in range(len(cur) // 2)
+            ]
+            nxt[c] = [
+                jnp.minimum(cur[2 * h], cur[2 * h + 1]) for h in range(len(cur) // 2)
+            ]
+            if c < n_c:
+                parts.append(
+                    d[0]
+                    if len(d) == 1
+                    else jnp.stack(d, axis=1).reshape(len(d) * U, tile)
+                )
+        levels = nxt
+        planes.append(parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0))
+    new_pm = jnp.concatenate([levels[c][0] for c in range(nk)], axis=0)
+    return new_pm, planes
 
 
 def _pack_plane(dec, tile: int):
@@ -324,8 +426,66 @@ def _acs_kernel(
     pm_out_ref[...] = pm
 
 
+def _acs_matrix_kernel(
+    y_ref,  # (SC, R, TILE) soft symbols for this stage chunk
+    e_ref,  # (2^k·N, 2^(kR-1)) f32 expansion operand (whole array, all chunks)
+    sp_ref,  # (SC, W, TILE) int32 out: packed survivor words
+    pm_out_ref,  # (N, TILE) out: final path metrics (last chunk's write wins)
+    pm_ref,  # scratch (N, TILE) acc_dtype: path metrics, persists across chunks
+    *,
+    code: ConvCode,
+    stage_chunk: int,
+    acc_dtype,
+    norm_every: int,
+    k: int,
+):
+    """Matrix-ACS chunk body: ``stage_chunk // k`` tropical matmul steps.
+
+    The wrapper guarantees ``stage_chunk % k == 0``, so k-stage steps never
+    straddle a chunk boundary; each step emits its k standard radix-2
+    survivor planes contiguously (one lane-coalesced store). The expansion
+    operand E rides in as a real kernel input with a constant index map — it
+    is the matmul's left operand, resident for every grid instance.
+    """
+    tile = pm_ref.shape[-1]
+    chunk_base = pl.program_id(1) * stage_chunk
+    step_base = chunk_base // k
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        pm_ref[...] = jnp.zeros_like(pm_ref)
+
+    e = e_ref[...]
+
+    def maybe_norm(pm, step_idx):
+        if not norm_every:
+            return pm
+        # cadence counts GLOBAL k-stage steps (matching the ref scan), so
+        # chunking can't move the normalization points
+        return jax.lax.cond(
+            step_idx % norm_every == norm_every - 1, _min_subtract, lambda p: p, pm
+        )
+
+    def step_body(s, pm):
+        ys = y_ref[pl.ds(k * s, k)].astype(acc_dtype)  # (k, R, TILE)
+        new_pm, planes = matrix_step(
+            pm, [ys[i] for i in range(k)], code, acc_dtype, tile, k, e=e
+        )
+        new_pm = maybe_norm(new_pm, step_base + s)
+        sp_ref[pl.ds(k * s, k)] = jnp.stack([_pack_plane(d, tile) for d in planes])
+        return new_pm
+
+    pm = pm_ref[...]
+    pm = jax.lax.fori_loop(0, stage_chunk // k, step_body, pm, unroll=False)
+    pm_ref[...] = pm
+    pm_out_ref[...] = pm
+
+
 @functools.partial(
-    jax.jit, static_argnames=("code", "stage_chunk", "interpret", "metric_mode", "radix")
+    jax.jit,
+    static_argnames=(
+        "code", "stage_chunk", "interpret", "metric_mode", "radix", "impl", "k"
+    ),
 )
 def acs_forward_pallas(
     y: jnp.ndarray,
@@ -335,6 +495,8 @@ def acs_forward_pallas(
     interpret: bool = False,
     metric_mode: str = "f32",
     radix: int = 2,
+    impl: str = "butterfly",
+    k: int = 2,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Forward ACS over parallel blocks. y: (T, R, B) → (sp (T, W, B), pm (N, B)).
 
@@ -347,6 +509,12 @@ def acs_forward_pallas(
     ``radix=4`` runs the stage-fused two-stage ACS (stage_chunk must be
     even): half the serial chain, two radix-2 survivor bit-planes per step —
     ``sp`` is bit-identical to the radix-2 history.
+    ``impl="matrix"`` runs the k-stage (min,+) tropical-matmul ACS
+    (stage_chunk must be a k-multiple): the transition matrix is assembled
+    as ONE dense MXU matmul against the signed one-hot expansion operand,
+    and each step emits k standard radix-2 bit-planes — ``sp`` stays
+    bit-identical. Float symbols lower to the staged butterfly (the flat
+    k-stage contraction is not IEEE-associative; integers are exact).
     """
     T, R, B = y.shape
     if R != code.R:
@@ -355,17 +523,35 @@ def acs_forward_pallas(
         raise ValueError(f"T={T} not a multiple of stage_chunk={stage_chunk}")
     if B % LANE_TILE:
         raise ValueError(f"B={B} not a multiple of {LANE_TILE}")
+    if impl not in ("butterfly", "matrix"):
+        raise ValueError(f"impl must be 'butterfly' or 'matrix', got {impl!r}")
     if radix not in (2, 4):
         raise ValueError(f"radix must be 2 or 4, got {radix}")
-    if radix == 4 and stage_chunk % 2:
-        raise ValueError(f"radix-4 needs an even stage_chunk, got {stage_chunk}")
-    if radix == 4 and code.n_states < 4:
-        raise ValueError(f"radix-4 ACS needs K >= 3 (got K={code.K})")
+    if impl == "matrix":
+        code.validate_matrix_k(k)
+    else:
+        if radix == 4 and stage_chunk % 2:
+            raise ValueError(f"radix-4 needs an even stage_chunk, got {stage_chunk}")
+        if radix == 4 and code.n_states < 4:
+            raise ValueError(f"radix-4 ACS needs K >= 3 (got K={code.K})")
     # semantic dtype check (raises for float symbols with i16/i8); registers
     # stay 32-bit wide on the VPU
     semantic = _acc_dtype_for(y.dtype, metric_mode)
     acc_dtype = jnp.float32 if semantic == jnp.float32 else jnp.int32
-    norm_every = norm_interval(code, metric_mode, radix)
+    if impl == "matrix" and acc_dtype == jnp.float32:
+        # IEEE float + is not associative: the flat k-stage contraction would
+        # drift from the staged butterfly. Lower to the butterfly radix-2
+        # body — the identical op sequence, so still bit-exact to "matrix"
+        # semantics (which only promise butterfly-equal decisions).
+        impl, radix = "butterfly", 2
+    if impl == "matrix":
+        if stage_chunk % k:
+            raise ValueError(
+                f"matrix ACS needs stage_chunk divisible by k={k}, got {stage_chunk}"
+            )
+        norm_every = norm_interval(code, metric_mode, stages_per_step=k)
+    else:
+        norm_every = norm_interval(code, metric_mode, radix)
     y = y.astype(acc_dtype)
     if norm_every:
         # saturate out-of-budget pre-quantized symbols (see acs_forward_ref)
@@ -377,20 +563,41 @@ def acs_forward_pallas(
     n_bt = B // LANE_TILE
     n_sc = T // stage_chunk
 
-    kernel = functools.partial(
-        _acs_kernel,
-        code=code,
-        stage_chunk=stage_chunk,
-        acc_dtype=acc_dtype,
-        norm_every=norm_every,
-        radix=radix,
-    )
+    if impl == "matrix":
+        kernel = functools.partial(
+            _acs_matrix_kernel,
+            code=code,
+            stage_chunk=stage_chunk,
+            acc_dtype=acc_dtype,
+            norm_every=norm_every,
+            k=k,
+        )
+        # the expansion matrix is a REAL kernel operand (no captured
+        # constants): whole-array block, constant index map — every grid
+        # instance sees the same resident E
+        e = jnp.asarray(code.matrix_expansion(k), jnp.float32)
+        in_specs = [
+            pl.BlockSpec((stage_chunk, R, LANE_TILE), lambda bt, sc: (sc, 0, bt)),
+            pl.BlockSpec(e.shape, lambda bt, sc: (0, 0)),
+        ]
+        operands = (y, e)
+    else:
+        kernel = functools.partial(
+            _acs_kernel,
+            code=code,
+            stage_chunk=stage_chunk,
+            acc_dtype=acc_dtype,
+            norm_every=norm_every,
+            radix=radix,
+        )
+        in_specs = [
+            pl.BlockSpec((stage_chunk, R, LANE_TILE), lambda bt, sc: (sc, 0, bt)),
+        ]
+        operands = (y,)
     sp, pm = pl.pallas_call(
         kernel,
         grid=(n_bt, n_sc),
-        in_specs=[
-            pl.BlockSpec((stage_chunk, R, LANE_TILE), lambda bt, sc: (sc, 0, bt)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((stage_chunk, W, LANE_TILE), lambda bt, sc: (sc, 0, bt)),
             # PM written out on every chunk; only the last chunk's value is
@@ -403,5 +610,5 @@ def acs_forward_pallas(
         ],
         scratch_shapes=[pltpu.VMEM((N, LANE_TILE), acc_dtype)],
         interpret=interpret,
-    )(y)
+    )(*operands)
     return sp, pm

@@ -42,6 +42,7 @@ from .acs import (
     _pack_plane,
     butterfly_bm_row,
     folded_bm_rows,
+    matrix_step,
     radix2_stage,
     radix4_stage_pair,
 )
@@ -173,11 +174,91 @@ def _acs_phase_r4_dbuf(
     pm_ref[...] = pm
 
 
+def _acs_phase_mat_dbuf(
+    y_hbm,  # (T_pad, R, B) symbols, HBM/ANY — in their ORIGINAL dtype
+    bt,  # lane-tile index of this program instance
+    pm_ref,  # VMEM scratch (N, TILE)
+    sp_write,  # per-stage survivor-word writer (trailing T mod k stages)
+    sp_write_multi,  # per-step writer: (flat stage, [k packed planes])
+    sym_ref,  # VMEM scratch (2, SYM, R, TILE), y dtype — the double buffer
+    sem_ref,  # DMA semaphores (2,)
+    *,
+    code: ConvCode,
+    n_stages: int,
+    acc_dtype,
+    norm_every: int,
+    clip_qmax: int | None,
+    sym_chunk: int,
+    k: int,
+):
+    """Phase 1 (matrix): k-stage tropical-matmul ACS on the double-buffered
+    symbol pipeline of :func:`_acs_phase_r4_dbuf` — the DMA prefetch of
+    symbol tile c+1 overlaps tile c's matrix steps. The wrapper rounds
+    ``sym_chunk`` to a k-multiple, so steps never straddle tiles and the
+    T mod k trailing stages (radix-2, unconditional min-subtract in narrow
+    modes — a uniform budget-safe shift) fall in the last tile only,
+    matching the ref scan's step/trailing split exactly.
+    """
+    tile = pm_ref.shape[-1]
+    T = n_stages
+    n_chunks = -(-T // sym_chunk)
+
+    def dma(c, slot):
+        return pltpu.make_async_copy(
+            y_hbm.at[pl.ds(c * sym_chunk, sym_chunk), :, pl.ds(bt * tile, tile)],
+            sym_ref.at[slot],
+            sem_ref.at[slot],
+        )
+
+    pm_ref[...] = jnp.zeros_like(pm_ref)
+    pm = pm_ref[...]
+    dma(0, 0).start()
+    for c in range(n_chunks):  # static chunk count: python-level pipeline
+        slot = c % 2
+        if c + 1 < n_chunks:
+            dma(c + 1, (c + 1) % 2).start()  # prefetch overlaps this chunk
+        dma(c, slot).wait()
+        lo = c * sym_chunk
+        hi = min(lo + sym_chunk, T)
+        step_base = lo // k  # sym_chunk is a k-multiple
+
+        def load(row, n_rows, slot=slot):
+            # widen (and clip, narrow modes) at the VMEM read, as in the
+            # radix-4 pipeline — the HBM copy keeps the wire dtype
+            y_t = sym_ref[slot, pl.ds(row, n_rows)].astype(acc_dtype)
+            if clip_qmax is not None:
+                y_t = jnp.clip(y_t, -clip_qmax, clip_qmax)
+            return y_t
+
+        def step_body(s, pm, step_base=step_base, lo=lo):
+            ys = load(k * s, k)  # (k, R, TILE)
+            new_pm, planes = matrix_step(
+                pm, [ys[i] for i in range(k)], code, acc_dtype, tile, k
+            )
+            if norm_every:  # cadence counts GLOBAL k-stage steps
+                new_pm = jax.lax.cond(
+                    (step_base + s) % norm_every == norm_every - 1,
+                    _min_subtract,
+                    lambda p: p,
+                    new_pm,
+                )
+            sp_write_multi(lo + k * s, [_pack_plane(d, tile) for d in planes])
+            return new_pm
+
+        pm = jax.lax.fori_loop(0, (hi - lo) // k, step_body, pm, unroll=False)
+        for t in range(hi - lo - (hi - lo) % k, hi - lo):
+            pm, dec = radix2_stage(pm, load(t, 1)[0], code, acc_dtype, tile)
+            if norm_every:
+                pm = _min_subtract(pm)
+            sp_write(lo + t, _pack_plane(dec, tile))
+    pm_ref[...] = pm
+
+
 def _run_acs_phase(
     y_ref,
     pm_ref,
     sp_write,
-    sp_write_pair,
+    sp_write_multi,
     extra_scratch,
     *,
     code: ConvCode,
@@ -185,11 +266,32 @@ def _run_acs_phase(
     acc_dtype,
     norm_every: int,
     radix: int,
+    impl: str,
+    k: int,
     clip_qmax: int | None,
     sym_chunk: int,
 ):
-    """Dispatch phase 1: VMEM-resident radix-2, or double-buffered radix-4."""
-    if radix == 2:
+    """Dispatch phase 1: VMEM-resident radix-2, or a double-buffered fused
+    path (stage-fused radix-4 butterflies, or k-stage matrix steps)."""
+    if impl == "matrix":
+        sym_ref, sem_ref = extra_scratch
+        _acs_phase_mat_dbuf(
+            y_ref,
+            pl.program_id(0),
+            pm_ref,
+            sp_write,
+            sp_write_multi,
+            sym_ref,
+            sem_ref,
+            code=code,
+            n_stages=n_stages,
+            acc_dtype=acc_dtype,
+            norm_every=norm_every,
+            clip_qmax=clip_qmax,
+            sym_chunk=sym_chunk,
+            k=k,
+        )
+    elif radix == 2:
         _acs_phase(
             y_ref,
             pm_ref,
@@ -201,6 +303,10 @@ def _run_acs_phase(
         )
     else:
         sym_ref, sem_ref = extra_scratch
+
+        def sp_write_pair(s, words1, words2):
+            sp_write_multi(s, [words1, words2])
+
         _acs_phase_r4_dbuf(
             y_ref,
             pl.program_id(0),
@@ -232,6 +338,8 @@ def _fused_kernel(
     acc_dtype,
     norm_every: int,
     radix: int,
+    impl: str,
+    k: int,
     clip_qmax: int | None,
     sym_chunk: int,
 ):
@@ -244,22 +352,24 @@ def _fused_kernel(
     def sp_write(s, words):
         sp_ref[pl.ds(s, 1)] = words[None]
 
-    def sp_write_pair(s, words1, words2):
-        # stage-major scratch: both of a radix-4 step's bit-planes land in
-        # one contiguous store
-        sp_ref[pl.ds(s, 2)] = jnp.stack([words1, words2])
+    def sp_write_multi(s, words):
+        # stage-major scratch: all of a fused step's bit-planes land in one
+        # contiguous store
+        sp_ref[pl.ds(s, len(words))] = jnp.stack(words)
 
     _run_acs_phase(
         y_ref,
         pm_ref,
         sp_write,
-        sp_write_pair,
+        sp_write_multi,
         extra_scratch,
         code=code,
         n_stages=n_stages,
         acc_dtype=acc_dtype,
         norm_every=norm_every,
         radix=radix,
+        impl=impl,
+        k=k,
         clip_qmax=clip_qmax,
         sym_chunk=sym_chunk,
     )
@@ -318,6 +428,8 @@ def _fused_prefix_kernel(
     acc_dtype,
     norm_every: int,
     radix: int,
+    impl: str,
+    k: int,
     clip_qmax: int | None,
     sym_chunk: int,
     C: int,
@@ -336,23 +448,25 @@ def _fused_prefix_kernel(
         flat = s + P
         sp_ref[pl.ds(flat // C, 1), pl.ds(flat % C, 1)] = words[None, None]
 
-    def sp_write_pair(s, words1, words2):
-        # chunk-major scratch: a stage pair may straddle a traceback-chunk
-        # boundary (odd C), so the planes store individually
-        sp_write(s, words1)
-        sp_write(s + 1, words2)
+    def sp_write_multi(s, words):
+        # chunk-major scratch: a fused step may straddle a traceback-chunk
+        # boundary (C not a step multiple), so the planes store individually
+        for i, w in enumerate(words):
+            sp_write(s + i, w)
 
     _run_acs_phase(
         y_ref,
         pm_ref,
         sp_write,
-        sp_write_pair,
+        sp_write_multi,
         extra_scratch,
         code=code,
         n_stages=n_stages,
         acc_dtype=acc_dtype,
         norm_every=norm_every,
         radix=radix,
+        impl=impl,
+        k=k,
         clip_qmax=clip_qmax,
         sym_chunk=sym_chunk,
     )
@@ -403,6 +517,8 @@ def _fused_prefix_kernel(
         "tb_mode",
         "tb_chunk",
         "acs_radix",
+        "acs_impl",
+        "acs_k",
         "sym_chunk",
     ),
 )
@@ -418,6 +534,8 @@ def pbvd_fused_pallas(
     tb_mode: str = "serial",
     tb_chunk: int = DEFAULT_TB_CHUNK,
     acs_radix: int = 2,
+    acs_impl: str = "butterfly",
+    acs_k: int = 2,
     sym_chunk: int = DEFAULT_SYM_CHUNK,
 ) -> jnp.ndarray:
     """One-kernel PBVD decode. y (T, R, B) → packed bits (n_decode/32, B) int32.
@@ -432,6 +550,11 @@ def pbvd_fused_pallas(
     the symbols stay in their wire dtype in HBM and the next ``sym_chunk``
     stages prefetch while the current ones compute (odd T runs one trailing
     radix-2 step; decoded bits stay bit-identical to radix 2).
+    ``acs_impl="matrix"`` runs the k-stage (min,+) tropical-matmul ACS on
+    the same double-buffered pipeline (``sym_chunk`` rounds down to a
+    k-multiple; T mod k trailing stages run radix-2; float symbols lower to
+    the staged butterfly — see ``acs_forward_pallas``). Decoded bits stay
+    bit-identical for every impl/radix/k.
     """
     T, R, B = y.shape
     if n_decode % 32:
@@ -440,17 +563,33 @@ def pbvd_fused_pallas(
         raise ValueError(f"B={B} not a multiple of {LANE_TILE}")
     if tb_mode not in ("serial", "prefix"):
         raise ValueError(f"unknown tb_mode {tb_mode!r}")
+    if acs_impl not in ("butterfly", "matrix"):
+        raise ValueError(f"acs_impl must be 'butterfly' or 'matrix', got {acs_impl!r}")
     if acs_radix not in (2, 4):
         raise ValueError(f"acs_radix must be 2 or 4, got {acs_radix}")
-    if acs_radix == 4 and sym_chunk % 2:
-        raise ValueError(f"sym_chunk must be even, got {sym_chunk}")
-    if acs_radix == 4 and code.n_states < 4:
-        raise ValueError(f"radix-4 ACS needs K >= 3 (got K={code.K})")
+    if acs_impl == "matrix":
+        code.validate_matrix_k(acs_k)
+    else:
+        if acs_radix == 4 and sym_chunk % 2:
+            raise ValueError(f"sym_chunk must be even, got {sym_chunk}")
+        if acs_radix == 4 and code.n_states < 4:
+            raise ValueError(f"radix-4 ACS needs K >= 3 (got K={code.K})")
     semantic = _acc_dtype_for(y.dtype, metric_mode)
     acc_dtype = jnp.float32 if semantic == jnp.float32 else jnp.int32
-    norm_every = norm_interval(code, metric_mode, acs_radix)
+    if acs_impl == "matrix" and acc_dtype == jnp.float32:
+        # float lowering, as in acs_forward_pallas: the flat k-stage
+        # contraction is not IEEE-associative — run the butterfly body
+        acs_impl, acs_radix = "butterfly", 2
+    if acs_impl == "matrix":
+        # steps must not straddle symbol tiles: round the double-buffer
+        # chunk down to a k-multiple (64 → 63 for k=3)
+        sym_chunk = max(acs_k, sym_chunk - sym_chunk % acs_k)
+        norm_every = norm_interval(code, metric_mode, stages_per_step=acs_k)
+    else:
+        norm_every = norm_interval(code, metric_mode, acs_radix)
     clip_qmax = metric_mode_qmax(code, metric_mode) if norm_every else None
-    if acs_radix == 2:
+    dbuf = acs_impl == "matrix" or acs_radix == 4
+    if not dbuf:
         # symbols ride the pallas pipeline into VMEM, widened to the
         # register dtype up front
         y = y.astype(acc_dtype)
@@ -483,6 +622,8 @@ def pbvd_fused_pallas(
         acc_dtype=acc_dtype,
         norm_every=norm_every,
         radix=acs_radix,
+        impl=acs_impl,
+        k=acs_k,
         clip_qmax=clip_qmax,
         sym_chunk=sym_chunk,
     )
@@ -515,7 +656,7 @@ def pbvd_fused_pallas(
             pltpu.VMEM((c_hi - c_lo + 1, LANE_TILE), jnp.int32),
             pltpu.VMEM((c_hi - c_lo + 1, C, LANE_TILE), jnp.int32),
         ]
-    if acs_radix == 4:
+    if dbuf:
         scratch = scratch + [
             pltpu.VMEM((2, sym_chunk, R, LANE_TILE), y.dtype),  # double buffer
             pltpu.SemaphoreType.DMA((2,)),

@@ -34,11 +34,13 @@ from repro.core.trellis import ConvCode
 from . import ref as _ref
 from .acs import LANE_TILE, DEFAULT_STAGE_CHUNK, acs_forward_pallas
 from .registry import (
+    ACS_IMPL,
     ACS_RADIX,
     METRIC_MODES,
     TB_MODES,
     FramedBlocks,
     available_backends,
+    backend_acs_impl,
     backend_acs_radix,
     backend_metric_modes,
     backend_preferred_tb_mode,
@@ -46,6 +48,7 @@ from .registry import (
     backend_tb_chunk_sensitive,
     backend_tb_modes,
     get_backend,
+    knob_error,
     register_backend,
     resolve_tb_mode,
 )
@@ -58,7 +61,9 @@ __all__ = [
     "METRIC_MODES",
     "TB_MODES",
     "ACS_RADIX",
+    "ACS_IMPL",
     "DEFAULT_TB_CHUNK",
+    "DEFAULT_ACS_K",
     "register_backend",
     "get_backend",
     "available_backends",
@@ -67,9 +72,16 @@ __all__ = [
     "backend_tb_modes",
     "backend_tb_chunk_sensitive",
     "backend_acs_radix",
+    "backend_acs_impl",
     "backend_preferred_tb_mode",
     "resolve_tb_mode",
+    "knob_error",
 ]
+
+# Default matrix-ACS fusion depth; also what ``acs_k`` normalizes to when
+# ``acs_impl="butterfly"`` leaves it inert (cache-key hygiene, like tb_chunk
+# under serial traceback).
+DEFAULT_ACS_K = 2
 
 
 def default_interpret() -> bool:
@@ -96,6 +108,7 @@ def _pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
     tb_chunk_sensitive=False,  # full-depth associative scan — no chunks
     preferred_tb_mode="serial",  # BENCH_pr.json: prefix 0.14-0.39× serial here
     acs_radix=(2, 4),
+    acs_impl=("butterfly", "matrix"),
 )
 def _decode_ref(
     blocks: FramedBlocks,
@@ -108,6 +121,8 @@ def _decode_ref(
     tb_mode: str = "serial",
     tb_chunk: int = DEFAULT_TB_CHUNK,
     acs_radix: int = 2,
+    acs_impl: str = "butterfly",
+    acs_k: int = DEFAULT_ACS_K,
 ) -> jnp.ndarray:
     """Pure-jnp oracle path (also the XLA-fused fast path on CPU).
 
@@ -118,7 +133,8 @@ def _decode_ref(
     """
     B = blocks.y.shape[2]
     sp, pm = _ref.acs_forward_ref(
-        blocks.y, code, metric_mode=metric_mode, radix=acs_radix
+        blocks.y, code, metric_mode=metric_mode, radix=acs_radix,
+        impl=acs_impl, matrix_k=acs_k,
     )
     if start_policy == "argmin":
         start = jnp.argmin(pm, axis=0).astype(jnp.int32)
@@ -139,6 +155,7 @@ def _decode_ref(
     # the declaration IS the auto-resolution, one line per backend.
     preferred_tb_mode="serial",
     acs_radix=(2, 4),
+    acs_impl=("butterfly", "matrix"),
 )
 def _decode_pallas(
     blocks: FramedBlocks,
@@ -151,9 +168,16 @@ def _decode_pallas(
     tb_mode: str = "serial",
     tb_chunk: int = DEFAULT_TB_CHUNK,
     acs_radix: int = 2,
+    acs_impl: str = "butterfly",
+    acs_k: int = DEFAULT_ACS_K,
 ) -> jnp.ndarray:
     """Two-kernel path (paper K1 ACS + K2 traceback, serial or prefix)."""
     T = blocks.y.shape[0]
+    if acs_impl == "matrix":
+        # the matrix kernel consumes whole k-stage steps per chunk: round
+        # the chunk down to a k-multiple (64 → 63 for k=3); stage padding
+        # below then keeps T a chunk multiple as before
+        stage_chunk = max(acs_k, stage_chunk - stage_chunk % acs_k)
     y = _pad_axis(blocks.y, 2, LANE_TILE)  # lane padding
     y = _pad_axis(y, 0, stage_chunk)  # stage padding (end; BM-neutral zeros)
     Bp = y.shape[2]
@@ -165,6 +189,8 @@ def _decode_pallas(
         interpret=interpret,
         metric_mode=metric_mode,
         radix=acs_radix,
+        impl=acs_impl,
+        k=acs_k,
     )
     if start_policy == "argmin":
         # argmin over the padded-final metrics: the zero-BM pad stages only
@@ -207,6 +233,7 @@ def _decode_pallas(
     preferred_tb_mode="serial",  # measured-fastest on the committed bench
     # (see the pallas registration note; same TPU re-measure applies here)
     acs_radix=(2, 4),
+    acs_impl=("butterfly", "matrix"),
 )
 def _decode_fused(
     blocks: FramedBlocks,
@@ -219,6 +246,8 @@ def _decode_fused(
     tb_mode: str = "serial",
     tb_chunk: int = DEFAULT_TB_CHUNK,
     acs_radix: int = 2,
+    acs_impl: str = "butterfly",
+    acs_k: int = DEFAULT_ACS_K,
 ) -> jnp.ndarray:
     """Single-kernel path (ACS + in-VMEM traceback, bit-packed output) —
     see kernels/fused.py; unpacked here for API compatibility."""
@@ -242,6 +271,8 @@ def _decode_fused(
         tb_mode=tb_mode,
         tb_chunk=tb_chunk,
         acs_radix=acs_radix,
+        acs_impl=acs_impl,
+        acs_k=acs_k,
     )
     # unpack only what is kept: trim pad lanes BEFORE the 32× shift-expand
     # and expand the ragged last word to just its live rows, so the
@@ -279,6 +310,8 @@ def _decode_fused(
         "tb_mode",
         "tb_chunk",
         "acs_radix",
+        "acs_impl",
+        "acs_k",
     ),
 )
 def _decode_blocks_jit(
@@ -296,6 +329,8 @@ def _decode_blocks_jit(
     tb_mode: str,
     tb_chunk: int,
     acs_radix: int,
+    acs_impl: str,
+    acs_k: int,
 ) -> jnp.ndarray:
     fn = get_backend(backend)
     return fn(
@@ -313,6 +348,8 @@ def _decode_blocks_jit(
         tb_mode=tb_mode,
         tb_chunk=tb_chunk,
         acs_radix=acs_radix,
+        acs_impl=acs_impl,
+        acs_k=acs_k,
     )
 
 
@@ -331,6 +368,8 @@ def pbvd_decode_blocks(
     tb_mode: Literal["serial", "prefix", "auto"] = "serial",
     tb_chunk: int = DEFAULT_TB_CHUNK,
     acs_radix: int = 2,
+    acs_impl: Literal["butterfly", "matrix"] = "butterfly",
+    acs_k: int = DEFAULT_ACS_K,
 ) -> jnp.ndarray:
     """Decode framed parallel blocks via the named backend.
 
@@ -351,14 +390,23 @@ def pbvd_decode_blocks(
     ``acs_radix`` selects the forward-ACS step (:data:`ACS_RADIX`): 2 is the
         paper's butterfly, 4 the stage-fused two-stage step (bit-exact; odd
         T runs one trailing radix-2 step).
+    ``acs_impl`` selects the forward-pass formulation (:data:`ACS_IMPL`):
+        "butterfly" is the compare-select trellis at ``acs_radix``,
+        "matrix" the k-stage (min,+) tropical-matmul path with fusion depth
+        ``acs_k`` (bit-exact; T mod k trailing stages run radix-2). Each
+        impl's inert knob (``acs_k`` under butterfly, ``acs_radix`` under
+        matrix) is normalized out of the jit cache key.
     Returns (n_decode, n_real_blocks) int32 decoded bits.
 
-    Backend, start-policy, metric-mode, tb-mode and acs-radix are validated
-    *before* jit: an unknown backend raises ``KeyError``; an unsupported
-    start policy, metric mode, tb mode or radix — including a narrow metric
-    mode whose saturation budget cannot absorb the radix-4 double-stage
-    accumulation for this code — raises ``ValueError`` eagerly (never a
-    trace-time error from inside the kernel adapter).
+    Backend, start-policy, metric-mode, tb-mode, acs-radix and acs-impl are
+    validated *before* jit: an unknown backend raises ``KeyError``; an
+    unsupported start policy, metric mode, tb mode, radix or impl —
+    including a narrow metric mode whose saturation budget cannot absorb
+    the radix-4 double-stage (or matrix k-stage) accumulation for this
+    code, and an ``acs_k`` outside the structural bounds — raises
+    ``ValueError`` eagerly via :func:`repro.kernels.registry.knob_error`'s
+    uniform shape (never a trace-time error from inside the kernel
+    adapter).
 
     Only the TOTAL real-lane count enters the jit cache key: lanes are
     mutually independent and per-frame unpacking happens host-side, so the
@@ -370,37 +418,39 @@ def pbvd_decode_blocks(
         interpret = default_interpret()
     supported = backend_start_policies(backend)  # KeyError for unknown backend
     if start_policy not in supported:
-        raise ValueError(
-            f"backend {backend!r} does not support start_policy={start_policy!r}; "
-            f"supported: {supported}"
-        )
+        raise knob_error(backend, "start_policy", start_policy, supported)
     supported_modes = backend_metric_modes(backend)
     if metric_mode not in supported_modes:
-        raise ValueError(
-            f"backend {backend!r} does not support metric_mode={metric_mode!r}; "
-            f"supported: {supported_modes}"
-        )
+        raise knob_error(backend, "metric_mode", metric_mode, supported_modes)
     tb_mode = resolve_tb_mode(backend, tb_mode)  # "auto" → declared fastest
     supported_tb = backend_tb_modes(backend)
     if tb_mode not in supported_tb:
-        raise ValueError(
-            f"backend {backend!r} does not support tb_mode={tb_mode!r}; "
-            f"supported: {supported_tb}"
-        )
+        raise knob_error(backend, "tb_mode", tb_mode, supported_tb)
     if tb_chunk < 1:
         raise ValueError(f"tb_chunk must be >= 1, got {tb_chunk}")
-    supported_radix = backend_acs_radix(backend)
-    if acs_radix not in supported_radix:
-        raise ValueError(
-            f"backend {backend!r} does not support acs_radix={acs_radix}; "
-            f"supported: {supported_radix}"
-        )
-    if acs_radix == 4 and code.n_states < 4:
-        raise ValueError(f"acs_radix=4 needs K >= 3 (got K={code.K})")
-    # narrow modes: the re-derived normalization cadence must exist at this
-    # radix — norm_interval raises a clear ValueError here, pre-jit, when
-    # the budget cannot absorb the fused step's double-stage accumulation
-    norm_interval(code, metric_mode, acs_radix)
+    supported_impl = backend_acs_impl(backend)
+    if acs_impl not in supported_impl:
+        raise knob_error(backend, "acs_impl", acs_impl, supported_impl)
+    if acs_impl == "matrix":
+        # structural bounds on the fusion depth, then the narrow-mode budget
+        # for k unnormalized stages per step — both eager, pre-jit
+        code.validate_matrix_k(acs_k)
+        norm_interval(code, metric_mode, stages_per_step=acs_k)
+        # the butterfly radix is inert under the matrix impl: normalize it
+        # out of the jit cache key (and skip its K>=3 check — a K=2 code
+        # can run matrix k=1 regardless of the radix default)
+        acs_radix = 2
+    else:
+        supported_radix = backend_acs_radix(backend)
+        if acs_radix not in supported_radix:
+            raise knob_error(backend, "acs_radix", acs_radix, supported_radix)
+        if acs_radix == 4 and code.n_states < 4:
+            raise ValueError(f"acs_radix=4 needs K >= 3 (got K={code.K})")
+        # narrow modes: the re-derived normalization cadence must exist at
+        # this radix — norm_interval raises a clear ValueError here, pre-jit,
+        # when the budget cannot absorb the fused double-stage accumulation
+        norm_interval(code, metric_mode, acs_radix)
+        acs_k = DEFAULT_ACS_K  # inert under butterfly: one cache key
     if tb_mode == "serial" or not backend_tb_chunk_sensitive(backend):
         # the launch ignores tb_chunk (serial walk, or a chunk-free prefix
         # implementation): normalize it out of the jit cache key so callers
@@ -420,4 +470,6 @@ def pbvd_decode_blocks(
         tb_mode=tb_mode,
         tb_chunk=tb_chunk,
         acs_radix=acs_radix,
+        acs_impl=acs_impl,
+        acs_k=acs_k,
     )

@@ -38,6 +38,8 @@ __all__ = [
     "expand_folded_bm",
     "folded_radix4_bm_table",
     "expand_folded_radix4_bm",
+    "folded_matrix_bm_table",
+    "expand_folded_matrix_bm",
     "acs_forward_ref",
     "traceback_ref",
     "traceback_prefix_ref",
@@ -160,6 +162,34 @@ def expand_folded_radix4_bm(bm2_folded: jnp.ndarray, code: ConvCode) -> jnp.ndar
     """(..., 2^(2R-1)) combined folded table → (..., 2^(2R)) full table."""
     gathered = bm2_folded[..., code.fold_index4]  # static gather
     neg = jnp.asarray(code.fold_sign4 < 0)
+    return jnp.where(neg, -gathered, gathered)
+
+
+def folded_matrix_bm_table(yk: jnp.ndarray, code: ConvCode, k: int) -> jnp.ndarray:
+    """Combined k-stage folded BM table. yk: (..., kR) → (..., 2^(kR-1)).
+
+    ``yk`` is the stage window ``[y_t; ...; y_{t+k-1}]`` concatenated
+    channel-last. The combined label stays antipodal (BMk(~cc) = −BMk(cc)),
+    so only the 2^(kR-1) fold representatives need computing — static
+    add/sub chains over :meth:`ConvCode.folded_matrix_codeword_signs`.
+    These are the distinct finite values of the k-stage (min,+) transition
+    matrix, up to sign.
+    """
+    rows = []
+    svals = code.folded_matrix_codeword_signs(k)  # (2^(kR-1), kR) static ±1
+    for f in range(code.n_folded_matrix(k)):
+        acc = None
+        for r in range(k * code.R):
+            term = yk[..., r] if svals[f, r] > 0 else -yk[..., r]
+            acc = term if acc is None else acc + term
+        rows.append(acc)
+    return jnp.stack(rows, axis=-1)
+
+
+def expand_folded_matrix_bm(bmk_folded: jnp.ndarray, code: ConvCode, k: int) -> jnp.ndarray:
+    """(..., 2^(kR-1)) combined folded table → (..., 2^(kR)) full table."""
+    gathered = bmk_folded[..., code.fold_index_matrix(k)]  # static gather
+    neg = jnp.asarray(code.fold_sign_matrix(k) < 0)
     return jnp.where(neg, -gathered, gathered)
 
 
@@ -287,7 +317,66 @@ def _radix4_step(
     return new_pm, dec1, dec2
 
 
-@partial(jax.jit, static_argnames=("code", "metric_mode", "fold", "radix", "r4_combine"))
+def _matrix_step(pm: jnp.ndarray, ys: jnp.ndarray, code: ConvCode, acc_dtype, k: int):
+    """One k-stage (min,+) matrix ACS step (integer accumulators only).
+
+    pm (N, B) at time t; ys (k, R, B) symbols of stages t..t+k-1 (already in
+    ``acc_dtype``). Returns (new_pm (N, B) at time t+k, [dec_0 .. dec_{k-1}])
+    where dec_i is the STANDARD radix-2 survivor bit-plane of stage t+i —
+    the collapsed step emits exactly what k radix-2 steps would, so the
+    traceback (serial or prefix) and the packed SP layout are untouched.
+
+    The forward update is the tropical matrix-vector product
+    ``new_pm[n'] = min_j pm[pred(n', j)] + A[n', j]`` with A assembled from
+    the 2^(kR-1) folded combined metrics (one add per candidate instead of
+    k dependent adds). The min over the 2^k predecessors runs as a
+    suffix-min tournament from j's LSB; round i's compare bits ARE the
+    stage-(t+i) decisions of every intermediate state, read off the
+    canonical covering c < 2^(i+1) (groups with equal low input bits share
+    intermediates). Exactness relies on integer addition being associative
+    and on later-stage label terms being a COMMON offset to both compared
+    candidates within a fixed (n', high bits of j) — so each round
+    reproduces the staged butterfly's comparison verbatim, strict ``<``
+    tie-breaks (even predecessor wins) included. IEEE float addition is not
+    associative, so float accumulators never reach here: the caller lowers
+    the float matrix path to the staged radix-2 sequence instead.
+    """
+    if not jnp.issubdtype(acc_dtype, jnp.integer):
+        raise ValueError("_matrix_step is integer-exact only; float lowers to radix-2")
+    N = code.n_states
+    B = pm.shape[-1]
+    U = N >> k
+    nk = 1 << k
+    tabs = code.matrix_acs_tables(k)
+    yk = ys.reshape(k * code.R, B)  # stage-major channel stack [y_t; ...]
+    bmk = expand_folded_matrix_bm(folded_matrix_bm_table(yk.T, code, k), code, k).T
+    pmk = pm.reshape(U, nk, B)  # pmk[u, j] = pm[pred] = pm[2^k·u + j]
+    levels = {
+        c: [pmk[:, j] + bmk[jnp.asarray(tabs["cc"][c, j])] for j in range(nk)]
+        for c in range(nk)
+    }
+    planes = []
+    for i in range(k):
+        n_c = 1 << (i + 1)  # canonical target groups covering all intermediates
+        parts, nxt = [], {}
+        for c in range(nk):
+            cur = levels[c]
+            d = [(cur[2 * h + 1] < cur[2 * h]).astype(jnp.int32) for h in range(len(cur) // 2)]
+            m = [jnp.minimum(cur[2 * h], cur[2 * h + 1]) for h in range(len(cur) // 2)]
+            nxt[c] = m
+            if c < n_c:
+                # intermediate state at t+i+1: c·N/2^(i+1) + u·2^(k-1-i) + h
+                parts.append(d[0] if len(d) == 1 else jnp.stack(d, axis=1).reshape(len(d) * U, B))
+        levels = nxt
+        planes.append(jnp.concatenate(parts, axis=0))
+    new_pm = jnp.concatenate([levels[c][0] for c in range(nk)], axis=0)
+    return new_pm, planes
+
+
+@partial(
+    jax.jit,
+    static_argnames=("code", "metric_mode", "fold", "radix", "r4_combine", "impl", "matrix_k"),
+)
 def acs_forward_ref(
     y: jnp.ndarray,
     code: ConvCode,
@@ -295,6 +384,8 @@ def acs_forward_ref(
     fold: bool = True,
     radix: int = 2,
     r4_combine: bool = False,
+    impl: str = "butterfly",
+    matrix_k: int = 2,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Forward ACS over a batch of parallel blocks (paper K1).
 
@@ -314,23 +405,43 @@ def acs_forward_ref(
     ``r4_combine=True`` (integer accumulators only) selects the combined
     2^(2R-1)-folded metric formulation of the fused step (see
     :func:`_radix4_step`; exact, kept as the measured alternative).
+    ``impl="matrix"`` runs the forward pass as ceil(T/matrix_k) k-stage
+    (min,+) matrix steps (:func:`_matrix_step`; trailing T mod k stages run
+    radix-2) — integer accumulators take the flat tropical contraction,
+    float accumulators lower to the staged radix-2 sequence (IEEE float
+    addition is not associative, so re-associating the per-stage sums could
+    not be bit-exact; the staged form is, by construction). Either way the
+    emitted survivor history is bit-identical to the butterfly path.
     Returns (sp, pm_final):
       sp: (T, ceil(N/32), B) int32 bit-packed survivor decisions
       pm_final: (N, B) final path metrics (normalized for i16/i8; under
-      radix 4 the narrow-mode normalization points differ from radix 2 by a
-      per-lane uniform shift only — decisions and argmin are invariant).
+      radix 4 or matrix the narrow-mode normalization points differ from
+      radix 2 by a per-lane uniform shift only — decisions and argmin are
+      invariant).
     """
     T, R, B = y.shape
     N = code.n_states
+    if impl not in ("butterfly", "matrix"):
+        raise ValueError(f"impl must be 'butterfly' or 'matrix', got {impl!r}")
     if radix not in (2, 4):
         raise ValueError(f"radix must be 2 or 4, got {radix}")
     if radix == 4 and not fold:
         raise ValueError("the unfolded (fold=False) reference exists only for radix 2")
-    if radix == 4 and N < 4:
+    if impl == "butterfly" and radix == 4 and N < 4:
         raise ValueError(f"radix-4 ACS needs K >= 3 (got K={code.K})")
 
     acc_dtype = _acc_dtype_for(y.dtype, metric_mode)
-    norm_every = norm_interval(code, metric_mode, radix)  # 0 → never (f32)
+    if impl == "matrix":
+        code.validate_matrix_k(matrix_k)
+        if not jnp.issubdtype(acc_dtype, jnp.integer):
+            # float matrix path lowers to the staged radix-2 butterfly (see
+            # the docstring); decisions, sp and pm are identical
+            impl, radix = "butterfly", 2
+
+    if impl == "matrix":
+        norm_every = norm_interval(code, metric_mode, stages_per_step=matrix_k)
+    else:
+        norm_every = norm_interval(code, metric_mode, radix)  # 0 → never (f32)
     if norm_every:
         # saturate out-of-budget pre-quantized symbols on ingestion: the
         # no-saturation guarantee assumes |y| ≤ metric_mode_qmax, and symbol
@@ -351,6 +462,34 @@ def acs_forward_ref(
         )
 
     pm0 = jnp.zeros((N, B), dtype=acc_dtype)
+
+    if impl == "matrix":
+        # ---- k-stage (min,+) matrix steps + trailing radix-2 stages ----
+        k = matrix_k
+        W = -(-N // 32)
+        Tk = T // k
+        y_steps = y[: k * Tk].reshape(Tk, k, R, B)
+
+        def stepk(pm, xs):
+            y_step, r = xs
+            new_pm, planes = _matrix_step(pm, y_step.astype(acc_dtype), code, acc_dtype, k)
+            if norm_every:
+                new_pm = norm_cond(new_pm, r)
+            return new_pm, jnp.stack([_pack_decisions(d) for d in planes])
+
+        pm_final, spk = jax.lax.scan(stepk, pm0, (y_steps, jnp.arange(Tk, dtype=jnp.int32)))
+        sp = spk.reshape(k * Tk, W, B)
+        for t in range(k * Tk, T):
+            # trailing radix-2 stages (T mod k); narrow modes normalize here
+            # unconditionally — a uniform shift, decision- and argmin-
+            # invariant, that keeps the gap within the k-stage budget
+            y_t = y[t].astype(acc_dtype)
+            bm = expand_folded_bm(folded_branch_metric_table(y_t.T, code), code).T
+            pm_final, dec = _radix2_stage(pm_final, bm, code)
+            if norm_every:
+                pm_final = pm_final - jnp.min(pm_final, axis=0, keepdims=True)
+            sp = jnp.concatenate([sp, _pack_decisions(dec)[None]], axis=0)
+        return sp, pm_final
 
     if radix == 2:
         signs = jnp.asarray(code.codeword_signs, dtype=acc_dtype)  # (2^R, R)

@@ -44,6 +44,7 @@ __all__ = [
     "METRIC_MODES",
     "TB_MODES",
     "ACS_RADIX",
+    "ACS_IMPL",
     "register_backend",
     "get_backend",
     "available_backends",
@@ -52,8 +53,10 @@ __all__ = [
     "backend_tb_modes",
     "backend_tb_chunk_sensitive",
     "backend_acs_radix",
+    "backend_acs_impl",
     "backend_preferred_tb_mode",
     "resolve_tb_mode",
+    "knob_error",
 ]
 
 
@@ -200,6 +203,68 @@ ACS_RADIX: dict[int, dict[str, Any]] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# The ACS-implementation contract (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+# ``acs_impl`` fixes the *formulation* of the forward-ACS step. Both are
+# bit-exact for every input — the matrix path emits the STANDARD radix-2
+# survivor bit-planes per collapsed stage (recovered from its compare
+# tournament), so traceback, SP layout and golden vectors are untouched —
+# and the choice is a pure compute-unit/arithmetic-intensity trade:
+#
+# * ``"butterfly"`` — the paper's compare-select butterflies (radix 2, or
+#   the PR 5 stage-fused radix 4 under ``acs_radix``), element-wise VPU
+#   work throughout.
+# * ``"matrix"`` — the tensor-core formulation (arXiv:2011.13579): ``acs_k``
+#   consecutive stages collapse into ONE (min,+) matrix-vector product
+#   ``new_pm[n'] = min_n (A[n', n] + pm[n])``, ceil(T/acs_k) steps. The
+#   k-stage matrix A is assembled from only 2^(kR-1) folded combined
+#   metrics (the PR 3 antipodal fold composed over the stage window) — on
+#   the Pallas path as ONE dense signed one-hot matmul shaped for the MXU
+#   (``ConvCode.matrix_expansion``), with the min-tournament contraction
+#   (and per-stage survivor-plane recovery) on the VPU. Integer
+#   accumulators take the flat contraction (exact by associativity); f32
+#   accumulators lower to the staged radix-2 sequence, because IEEE float
+#   addition is not associative and the contract is bit-exactness, not
+#   approximate parity. ``acs_k`` is validated eagerly: 1 ≤ k ≤ v,
+#   k·R ≤ MATRIX_MAX_LABEL_BITS, and narrow metric modes must absorb k
+#   unnormalized stages per step (``quantize.norm_interval(code, mode,
+#   stages_per_step=k)`` — config-time rejection, never a silent saturate).
+#   When ``acs_impl="matrix"``, ``acs_radix`` is inert and normalized out
+#   of the jit cache key (and ``acs_k`` likewise under ``"butterfly"``).
+ACS_IMPL: dict[str, dict[str, Any]] = {
+    "butterfly": dict(
+        serial_steps="T (radix 2) or ceil(T/2) (radix 4) compare-select steps",
+        metrics_per_step="2^(R-1) or 2^(2R-1) folded branch metrics",
+        when="the default: VPU-bound element-wise ACS, the paper's "
+        "formulation, and the measured winner under XLA CPU SIMD",
+    ),
+    "matrix": dict(
+        serial_steps="ceil(T/acs_k) tropical matmul steps "
+        "(+ T mod acs_k trailing radix-2 stages)",
+        metrics_per_step="2^(acs_k·R-1) folded combined metrics, assembled "
+        "by one signed one-hot (2^k·N, 2^(kR-1)) MXU matmul",
+        when="MXU-rich hardware where the k-fold shorter serial chain and "
+        "the matmul-shaped metric assembly beat the VPU butterflies "
+        "(BENCH_pr.json acs_impl_sweep)",
+    ),
+}
+
+
+def knob_error(backend: str, knob: str, value: Any, allowed) -> ValueError:
+    """The uniform eager knob-validation error.
+
+    Both validation layers — the dispatcher (``pbvd_decode_blocks``) and the
+    config (``PBVDConfig``) — raise exactly this shape, naming the backend,
+    the offending knob and the allowed values, so a bad knob fails the same
+    way no matter which door it came through, always before any jit trace.
+    """
+    return ValueError(
+        f"backend {backend!r} does not support {knob}={value!r}; "
+        f"supported {knob} values: {tuple(allowed)}"
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class FramedBlocks:
     """The framed parallel-block batch every backend consumes.
@@ -269,6 +334,8 @@ class DecodeBackend(Protocol):
         tb_mode: str,
         tb_chunk: int,
         acs_radix: int,
+        acs_impl: str,
+        acs_k: int,
     ) -> Any: ...
 
 
@@ -284,6 +351,7 @@ def register_backend(
     tb_chunk_sensitive: bool = True,
     preferred_tb_mode: str = "serial",
     acs_radix: tuple[int, ...] = (2,),
+    acs_impl: tuple[str, ...] = ("butterfly",),
 ) -> Callable[[DecodeBackend], DecodeBackend]:
     """Decorator: register a decode backend under ``name``.
 
@@ -291,12 +359,13 @@ def register_backend(
     implements; ``metric_modes`` declares which :data:`METRIC_MODES` entries
     it implements; ``tb_modes`` declares which :data:`TB_MODES` traceback
     algorithms it implements; ``acs_radix`` declares which :data:`ACS_RADIX`
-    forward-ACS radixes it implements. The dispatcher rejects others eagerly
-    (pre-jit). The defaults are the conservative
-    ``("f32",)``/``("serial",)``/``(2,)`` — a backend must OPT INTO the
-    narrow pipeline, the prefix traceback and the stage-fused ACS
-    explicitly, otherwise the eager check would wave through modes it never
-    implemented.
+    forward-ACS radixes it implements; ``acs_impl`` declares which
+    :data:`ACS_IMPL` forward-pass formulations it implements. The dispatcher
+    rejects others eagerly (pre-jit). The defaults are the conservative
+    ``("f32",)``/``("serial",)``/``(2,)``/``("butterfly",)`` — a backend
+    must OPT INTO the narrow pipeline, the prefix traceback, the
+    stage-fused ACS and the (min,+) matrix ACS explicitly, otherwise the
+    eager check would wave through modes it never implemented.
 
     ``preferred_tb_mode`` declares the backend's measured-fastest traceback
     mode — what ``tb_mode="auto"`` resolves to (must be in ``tb_modes``).
@@ -315,6 +384,9 @@ def register_backend(
     unknown_radix = set(acs_radix) - ACS_RADIX.keys()
     if unknown_radix:
         raise ValueError(f"unknown acs radixes {sorted(unknown_radix)}")
+    unknown_impl = set(acs_impl) - ACS_IMPL.keys()
+    if unknown_impl:
+        raise ValueError(f"unknown acs impls {sorted(unknown_impl)}")
     if preferred_tb_mode not in tb_modes:
         raise ValueError(
             f"preferred_tb_mode {preferred_tb_mode!r} not in tb_modes {tb_modes}"
@@ -331,6 +403,7 @@ def register_backend(
         fn.tb_chunk_sensitive = bool(tb_chunk_sensitive)  # type: ignore[attr-defined]
         fn.preferred_tb_mode = str(preferred_tb_mode)  # type: ignore[attr-defined]
         fn.acs_radix = tuple(acs_radix)  # type: ignore[attr-defined]
+        fn.acs_impl = tuple(acs_impl)  # type: ignore[attr-defined]
         return fn
 
     return deco
@@ -368,6 +441,11 @@ def backend_tb_chunk_sensitive(name: str) -> bool:
 def backend_acs_radix(name: str) -> tuple[int, ...]:
     """Forward-ACS radixes the named backend supports (see :data:`ACS_RADIX`)."""
     return getattr(get_backend(name), "acs_radix", (2,))
+
+
+def backend_acs_impl(name: str) -> tuple[str, ...]:
+    """Forward-ACS formulations the named backend supports (see :data:`ACS_IMPL`)."""
+    return getattr(get_backend(name), "acs_impl", ("butterfly",))
 
 
 def backend_preferred_tb_mode(name: str) -> str:

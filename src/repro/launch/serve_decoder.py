@@ -185,7 +185,12 @@ class SessionPool:
             cfg.backend,
             cfg.start_policy,
             cfg.metric_mode,
-            cfg.acs_radix,
+            # each acs_impl's inert knob is dropped from the key (mirrors
+            # the dispatcher's cache-key normalization), so e.g. matrix
+            # sessions coalesce regardless of their butterfly radix
+            cfg.acs_impl,
+            cfg.acs_radix if cfg.acs_impl == "butterfly" else None,
+            cfg.acs_k if cfg.acs_impl == "matrix" else None,
             tb_mode,
             # tb_chunk only parameterizes chunk-sensitive prefix launches
             # (the dispatcher normalizes it out otherwise); keying on it
@@ -341,6 +346,19 @@ def main() -> None:
         choices=[2, 4],
         help="forward-ACS radix (4 = stage-fused two-stage steps, bit-exact)",
     )
+    ap.add_argument(
+        "--acs-impl",
+        default="butterfly",
+        choices=["butterfly", "matrix"],
+        help="forward-pass formulation (matrix = k-stage (min,+) tropical "
+        "matmul steps, bit-exact)",
+    )
+    ap.add_argument(
+        "--acs-k",
+        type=int,
+        default=2,
+        help="matrix-ACS fusion depth k (stages per tropical matmul step)",
+    )
     ap.add_argument("--chunk-bits", type=int, default=4096, help="payload bits per chunk")
     ap.add_argument("--n-chunks", type=int, default=100)
     ap.add_argument(
@@ -364,6 +382,8 @@ def main() -> None:
         tb_mode=args.tb_mode,
         tb_chunk=args.tb_chunk,
         acs_radix=args.acs_radix,
+        acs_impl=args.acs_impl,
+        acs_k=args.acs_k,
     )
     engine = DecoderEngine(cfg)
     print(
@@ -371,7 +391,8 @@ def main() -> None:
         f"D={cfg.D}, L={cfg.L}, q={cfg.effective_q}, backend={cfg.backend}, "
         f"metric_mode={cfg.metric_mode}, tb_mode={cfg.tb_mode} "
         f"(→ {resolve_tb_mode(cfg.backend, cfg.tb_mode)}), "
-        f"acs_radix={cfg.acs_radix}; "
+        f"acs_impl={cfg.acs_impl}"
+        f"{f' (k={cfg.acs_k})' if cfg.acs_impl == 'matrix' else f', acs_radix={cfg.acs_radix}'}; "
         f"{args.streams} stream(s) × {args.chunk_bits * args.n_chunks} payload bits "
         f"in {args.n_chunks} chunks at Eb/N0={args.ebn0} dB"
     )

@@ -155,3 +155,25 @@ except ImportError:
 
     sys.modules["hypothesis"] = _hyp_mod
     sys.modules["hypothesis.strategies"] = _st_mod
+
+
+# ---------------------------------------------------------------------------
+# XLA executable-map hygiene
+# ---------------------------------------------------------------------------
+# Every jit compilation mmaps its executable (~80-180 mappings per decoder
+# config on XLA CPU) and the process-wide ``vm.max_map_count`` ceiling is
+# ~65k: a full tier-1 run accumulates enough compiled configs that LLVM's
+# next mmap fails mid-suite and the compiler segfaults. Dropping the jit
+# caches at module boundaries keeps the map count bounded — later modules
+# recompile what they actually use, which is cheap next to a compiler crash.
+import gc as _gc
+
+import jax as _jax
+import pytest as _pytest
+
+
+@_pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    _jax.clear_caches()
+    _gc.collect()

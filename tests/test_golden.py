@@ -9,12 +9,14 @@ folded branch metrics, ACS, traceback — fails here against a byte-stable
 reference instead of drifting silently.
 
 Every registered CodeSpec × backend × metric mode × traceback mode × ACS
-radix is replayed: ``bits_f32`` must be reproduced exactly by metric modes
-"f32" AND "i16" (the i16 contract is bit-exact hard decisions), ``bits_i8``
-by "i8" — and the prefix traceback and the stage-fused radix-4 forward pass
-must reproduce the same vectors as the serial walk / radix-2 butterfly (the
-TB_MODES and ACS_RADIX contracts are bit-exactness, so the goldens need no
-new files).
+formulation is replayed: ``bits_f32`` must be reproduced exactly by metric
+modes "f32" AND "i16" (the i16 contract is bit-exact hard decisions),
+``bits_i8`` by "i8" — and the prefix traceback, the stage-fused radix-4
+forward pass AND the k-stage (min,+) matrix forward pass must reproduce the
+same vectors as the serial walk / radix-2 butterfly (the TB_MODES,
+ACS_RADIX and ACS_IMPL contracts are bit-exactness, so the goldens need no
+new files). Matrix k=3 is skipped where the structural bound k·R ≤ 8
+forbids it (rate-1/3 codes).
 """
 
 import json
@@ -61,11 +63,18 @@ def test_golden_covers_every_registered_spec():
 @pytest.mark.parametrize("name", available_code_specs())
 @pytest.mark.parametrize("metric_mode", ["f32", "i16", "i8"])
 @pytest.mark.parametrize("tb_mode", ["serial", "prefix"])
-@pytest.mark.parametrize("acs_radix", [2, 4])
-def test_golden_decode(name, backend, metric_mode, tb_mode, acs_radix):
+@pytest.mark.parametrize(
+    "acs",  # (acs_impl, acs_radix-or-k)
+    [("butterfly", 2), ("butterfly", 4), ("matrix", 2), ("matrix", 3)],
+    ids=["bfly-r2", "bfly-r4", "mat-k2", "mat-k3"],
+)
+def test_golden_decode(name, backend, metric_mode, tb_mode, acs):
     g = _load(name)
     meta = g["meta"]
     spec = get_code_spec(name)
+    acs_impl, depth = acs
+    if acs_impl == "matrix" and depth * spec.code.R > 8:
+        pytest.skip(f"k·R = {depth * spec.code.R} > 8 (structural bound)")
     cfg = PBVDConfig(
         spec=spec,
         D=meta["D"],
@@ -75,7 +84,9 @@ def test_golden_decode(name, backend, metric_mode, tb_mode, acs_radix):
         metric_mode=metric_mode,
         tb_mode=tb_mode,
         tb_chunk=24,  # non-divisor of T at the golden geometry
-        acs_radix=acs_radix,
+        acs_radix=depth if acs_impl == "butterfly" else 2,
+        acs_impl=acs_impl,
+        acs_k=depth if acs_impl == "matrix" else 2,
     )
     bits = np.asarray(
         DecoderEngine(cfg).decode(jnp.asarray(g["y"]), meta["n_bits"])
@@ -84,6 +95,6 @@ def test_golden_decode(name, backend, metric_mode, tb_mode, acs_radix):
     np.testing.assert_array_equal(
         bits,
         expected,
-        err_msg=f"{name}/{backend}/{metric_mode}/{tb_mode}/r{acs_radix} "
+        err_msg=f"{name}/{backend}/{metric_mode}/{tb_mode}/{acs_impl}-{depth} "
         f"drifted from the golden vector",
     )

@@ -1,0 +1,221 @@
+"""Unit suite for the k-stage (min,+) matrix-ACS layer (tier-1).
+
+Covers the trellis-side construction (PR 6) from first principles:
+
+  * the combined k·R-bit labels of ``matrix_acs_tables(k)`` equal a
+    brute-force walk of the canonical transition ``s' = (x << (v-1)) | (s >> 1)``
+    along every k-stage path, i.e. the (min,+) matrix entries are exactly the
+    summed per-stage butterfly branch metrics;
+  * k=2 reproduces ``radix4_acs_tables`` (the matrix layer generalizes the
+    PR 5 radix-4 tables);
+  * the antipodal fold round-trips: sign·folded == direct correlation, and
+    the signed one-hot expansion matrix ``E @ BMk_folded`` assembles the
+    same values as the (index, sign) gather;
+  * ``acs_forward_ref(impl="matrix")`` is bit-exact to the butterfly on the
+    survivor planes (pm differs by a uniform per-lane shift only);
+  * the config-time guard rails: structural ``acs_k`` bounds, the
+    narrow-mode saturation budget counterexample, and the uniform
+    ``knob_error`` shape raised by BOTH ``PBVDConfig`` and
+    ``pbvd_decode_blocks`` before any jit trace.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.codespec import LTE_37, _from_octal
+from repro.core.pbvd import PBVDConfig
+from repro.core.quantize import norm_interval
+from repro.core.trellis import CCSDS_27, ConvCode
+from repro.kernels.ops import pbvd_decode_blocks
+from repro.kernels.ref import (
+    acs_forward_ref,
+    expand_folded_matrix_bm,
+    folded_matrix_bm_table,
+)
+
+CODES = {"ccsds": CCSDS_27, "lte13": LTE_37, "k3": _from_octal(3, 0o7, 0o5)}
+
+
+def _valid_ks(code, ks=(1, 2, 3)):
+    return [k for k in ks if k <= code.v and k * code.R <= 8]
+
+
+def _bm_of_label(y_stages, lab, k, R):
+    """Direct correlation metric of a k·R-bit combined label (stage t = MSBs)."""
+    bm = np.zeros(y_stages.shape[-1])
+    for r in range(k * R):
+        bit = (lab >> (k * R - 1 - r)) & 1
+        bm = bm + y_stages[r // R, r % R] * (2.0 * bit - 1.0)
+    return bm
+
+
+# ---------------------------------------------------------------------------
+# table construction
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+@pytest.mark.parametrize("name", sorted(CODES))
+def test_matrix_tables_match_transition_walk(name):
+    code = CODES[name]
+    v, R, N = code.v, code.R, code.n_states
+    for k in _valid_ks(code):
+        U = N >> k
+        tabs = code.matrix_acs_tables(k)
+        for n_prime in range(N):
+            c = n_prime >> (v - k)
+            u = n_prime % U
+            for j in range(1 << k):
+                s = (1 << k) * u + j  # pred(n', j)
+                lab = 0
+                for i in range(k):
+                    x = (c >> i) & 1
+                    lab = (lab << R) | int(code.output_int(s, x))
+                    s = (x << (v - 1)) | (s >> 1)  # canonical transition
+                assert s == n_prime, f"{name} k={k}: path does not land on n'"
+                assert tabs["cc"][c, j, u] == lab, (name, k, n_prime, j)
+
+
+@pytest.mark.tier1
+def test_matrix_k2_reproduces_radix4_tables():
+    for name, code in CODES.items():
+        if code.v < 2:
+            continue
+        np.testing.assert_array_equal(
+            code.matrix_acs_tables(2)["cc"],
+            code.radix4_acs_tables["cc"],
+            err_msg=f"{name}: matrix k=2 labels != radix-4 labels",
+        )
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("name", sorted(CODES))
+def test_matrix_fold_and_expansion_are_exact(name):
+    code = CODES[name]
+    R = code.R
+    rng = np.random.default_rng(7)
+    for k in _valid_ks(code):
+        y = rng.integers(-31, 32, size=(k, R, 5)).astype(np.int32)
+        # fold: sign[cc]·folded[idx[cc]] == direct correlation, every label
+        yk = jnp.asarray(np.moveaxis(y.reshape(k * R, 5), 0, -1))  # (5, kR)
+        folded = np.asarray(folded_matrix_bm_table(yk, code, k))  # (5, 2^(kR-1))
+        full = np.asarray(expand_folded_matrix_bm(jnp.asarray(folded), code, k))
+        for lab in range(1 << (k * R)):
+            np.testing.assert_array_equal(
+                full[:, lab], _bm_of_label(y, lab, k, R).astype(np.int32),
+                err_msg=f"{name} k={k} label {lab}: fold expansion diverged",
+            )
+        # expansion operand: E @ folded == the (index, sign) gather
+        tabs = code.matrix_acs_tables(k)
+        e = code.matrix_expansion(k)
+        assembled = (e @ folded.T.astype(np.float32)).astype(np.int64)
+        gathered = (
+            tabs["fold_sgn"].reshape(-1)[:, None]
+            * folded.T[tabs["fold_idx"].reshape(-1)]
+        )
+        np.testing.assert_array_equal(
+            assembled, gathered, err_msg=f"{name} k={k}: E-matmul diverged"
+        )
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+@pytest.mark.parametrize("name", sorted(CODES))
+@pytest.mark.parametrize("metric_mode", ["f32", "i16"])
+def test_ref_matrix_forward_bit_exact(name, metric_mode):
+    code = CODES[name]
+    rng = np.random.default_rng(11)
+    T, B = 29, 4  # T mod k != 0 for every k: trailing radix-2 stages run
+    y = jnp.asarray(
+        np.clip(np.round(rng.normal(size=(T, code.R, B)) * 15), -127, 127)
+        .astype(np.int16)
+    )
+    sp_b, pm_b = acs_forward_ref(y, code, metric_mode=metric_mode)
+    for k in _valid_ks(code):
+        sp_m, pm_m = acs_forward_ref(
+            y, code, metric_mode=metric_mode, impl="matrix", matrix_k=k
+        )
+        np.testing.assert_array_equal(
+            np.asarray(sp_m), np.asarray(sp_b),
+            err_msg=f"{name}/{metric_mode}/k={k}: survivor planes diverged",
+        )
+        # pm may differ from the butterfly only by a uniform per-lane shift
+        # (the matrix cadence normalizes per k-stage step)
+        d = np.asarray(pm_m, np.int64) - np.asarray(pm_b, np.int64)
+        assert np.all(d == d[0:1]), f"{name}/{metric_mode}/k={k}: pm not a shift"
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+def test_structural_k_bounds_rejected():
+    code = CCSDS_27  # v=6, R=2
+    with pytest.raises(ValueError, match="positive int"):
+        code.validate_matrix_k(0)
+    with pytest.raises(ValueError, match="exceeds the trellis memory"):
+        code.validate_matrix_k(7)
+    with pytest.raises(ValueError, match="label bits"):
+        code.validate_matrix_k(5)  # k·R = 10 > 8
+    with pytest.raises(ValueError, match="label bits"):
+        LTE_37.validate_matrix_k(3)  # k·R = 9 > 8
+    for cfg_kwargs in (dict(acs_k=0), dict(acs_k=7), dict(acs_k=5)):
+        with pytest.raises(ValueError):
+            PBVDConfig(backend="ref", acs_impl="matrix", **cfg_kwargs)
+
+
+@pytest.mark.tier1
+def test_matrix_k_budget_counterexample_rejected():
+    """A deep-memory code where a VALID structural k blows the i8 budget.
+
+    K=31, R=2 → v=30: the i8 budget forces qmax=1 and
+    pm_spread_bound = (2·30 + k)·2·1, so k ≤ 3 fits 127 but k=4 gives
+    128 > 127. The rejection must fire at CONFIG time from both entry
+    points — cheap, because the check runs before any 2^30-state table
+    materializes.
+    """
+    code = ConvCode(polys=((1,) + (0,) * 29 + (1,), (1,) * 31))
+    code.validate_matrix_k(4)  # structurally fine: 4 ≤ v, k·R = 8
+    assert norm_interval(code, "i8", stages_per_step=3) >= 1
+    with pytest.raises(ValueError, match="cannot accumulate 4 unnormalized"):
+        norm_interval(code, "i8", stages_per_step=4)
+    with pytest.raises(ValueError, match="cannot accumulate 4 unnormalized"):
+        PBVDConfig(code=code, backend="ref", metric_mode="i8",
+                   acs_impl="matrix", acs_k=4)
+    with pytest.raises(ValueError, match="cannot accumulate 4 unnormalized"):
+        pbvd_decode_blocks(
+            jnp.zeros((8, 2, 1), jnp.int8), code, decode_start=0, n_decode=4,
+            backend="ref", metric_mode="i8", acs_impl="matrix", acs_k=4,
+        )
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize(
+    "knob,value",
+    [
+        ("acs_impl", "systolic"),
+        ("acs_radix", 3),
+        ("tb_mode", "zigzag"),
+        ("metric_mode", "i4"),
+    ],
+)
+def test_uniform_knob_errors_pre_jit(knob, value):
+    """Bad knobs fail identically — backend, knob name, allowed values in the
+    message — whether they enter through PBVDConfig or pbvd_decode_blocks,
+    always eagerly (no jit trace, no kernel-internal error)."""
+    for entry in ("config", "dispatch"):
+        if entry == "config":
+            ctx = pytest.raises(ValueError, match=rf"backend 'ref'.*{knob}")
+            with ctx as ei:
+                PBVDConfig(backend="ref", **{knob: value})
+        else:
+            ctx = pytest.raises(ValueError, match=rf"backend 'ref'.*{knob}")
+            with ctx as ei:
+                pbvd_decode_blocks(
+                    jnp.zeros((8, 2, 1), jnp.float32), CCSDS_27,
+                    decode_start=0, n_decode=4, backend="ref", **{knob: value},
+                )
+        msg = str(ei.value)
+        assert "supported" in msg and repr(value) in msg, msg

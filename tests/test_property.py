@@ -64,15 +64,18 @@ def _tx(spec, n_bits, ebn0_db, seed):
     st.sampled_from(["zero", "argmin"]),  # start policy
     st.sampled_from(["f32", "i16", "i8"]),  # metric mode
     st.sampled_from([2, 4]),  # acs radix
+    st.sampled_from(["butterfly", "matrix"]),  # acs impl
 )
-def test_backend_parity_matrix(name, n_bits, seed, ebn0_db, q, policy, metric_mode, acs_radix):
+def test_backend_parity_matrix(
+    name, n_bits, seed, ebn0_db, q, policy, metric_mode, acs_radix, acs_impl
+):
     spec = get_code_spec(name)
     y = _tx(spec, n_bits, ebn0_db, seed)
     outs = {}
     for backend in BACKENDS:
         cfg = PBVDConfig(
             spec=spec, D=32, L=12, q=q, backend=backend, start_policy=policy,
-            metric_mode=metric_mode, acs_radix=acs_radix,
+            metric_mode=metric_mode, acs_radix=acs_radix, acs_impl=acs_impl,
         )
         engine = DecoderEngine(cfg)
         if policy not in backend_start_policies(backend):
@@ -85,7 +88,8 @@ def test_backend_parity_matrix(name, n_bits, seed, ebn0_db, q, policy, metric_mo
         np.testing.assert_array_equal(
             bits,
             outs["ref"],
-            err_msg=f"{name}/{backend}/{policy}/{metric_mode}/r{acs_radix} diverged",
+            err_msg=f"{name}/{backend}/{policy}/{metric_mode}/r{acs_radix}"
+            f"/{acs_impl} diverged",
         )
 
 
@@ -120,6 +124,45 @@ def test_acs_radix_parity_matrix(name, n_bits, seed, ebn0_db, metric_mode, D, tb
             bits(2),
             err_msg=f"{name}/{backend}/{metric_mode}/D={D}/{tb_mode} "
             f"radix-4 diverged from radix-2",
+        )
+
+
+# ---------------------------------------------------------------------------
+# acs-impl parity: the k-stage (min,+) tropical-matmul forward pass is
+# bit-exact to the butterfly for every CodeSpec × backend × metric mode ×
+# tb mode × fusion depth — D=31 makes T = D + 2L odd, exercising the
+# trailing radix-2 stages (T mod k) in every backend; k is clamped to the
+# structural bound k·R ≤ 8 (rate-1/3 codes cap at k=2)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", available_code_specs())
+@settings(**_COMMON)
+@given(
+    st.integers(24, 96),  # n_bits
+    st.integers(0, 2**16 - 1),  # seed
+    st.floats(3.0, 6.5),  # ebn0_db
+    st.sampled_from(["f32", "i16", "i8"]),  # metric mode
+    st.sampled_from([32, 31]),  # D (even/odd T)
+    st.sampled_from(["serial", "prefix", "auto"]),  # tb mode
+    st.sampled_from([1, 2, 3]),  # matrix fusion depth k (pre-clamp)
+)
+def test_acs_impl_parity_matrix(name, n_bits, seed, ebn0_db, metric_mode, D, tb_mode, k):
+    spec = get_code_spec(name)
+    k = min(k, 8 // spec.code.R, spec.code.v)
+    y = _tx(spec, n_bits, ebn0_db, seed)
+    for backend in BACKENDS:
+        def bits(impl):
+            cfg = PBVDConfig(
+                spec=spec, D=D, L=12, q=8, backend=backend,
+                metric_mode=metric_mode, tb_mode=tb_mode,
+                acs_impl=impl, acs_k=k,
+            )
+            return np.asarray(DecoderEngine(cfg).decode(y, n_bits))
+
+        np.testing.assert_array_equal(
+            bits("matrix"),
+            bits("butterfly"),
+            err_msg=f"{name}/{backend}/{metric_mode}/D={D}/{tb_mode} "
+            f"matrix k={k} diverged from butterfly",
         )
 
 
