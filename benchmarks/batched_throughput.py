@@ -17,6 +17,18 @@ and reports aggregate payload Mb/s plus the batched/sequential speedup.
 
     PYTHONPATH=src python benchmarks/batched_throughput.py \
         [--streams 1 4 16 64] [--frame-bits 256 1024 4096] [--reps 5]
+
+``--devices 1 2 4 8`` runs the weak-scaling sweep instead: the stream
+fleet grows proportionally to the device count and each cell decodes on a
+``data=N`` sub-mesh of the visible devices (CPU rehearsal:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``). Rows land in
+BENCH_*.json as ``kind="batched_devices"`` — ``agg_mbps`` is gated by
+tools/bench_compare.py, ``weak_eff_share`` (mbps ÷ devices × 1-device
+mbps) is reported alongside:
+
+    PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python benchmarks/batched_throughput.py --devices 1 2 4 8 \
+        --smoke --out BENCH_pr.json
 """
 
 from __future__ import annotations
@@ -121,6 +133,63 @@ def run(
     return rows
 
 
+def run_devices(
+    devices=(1, 2, 4, 8),
+    *,
+    code: str = "ccsds",
+    backend: str = "ref",
+    frame_bits: int = 1024,
+    streams_per_device: int = 2,
+    reps: int = 5,
+    ebn0: float = 4.0,
+    smoke: bool = False,
+) -> list[dict]:
+    """Weak-scaling sweep: fleet grows with the device count, each cell one
+    ``decode_batch`` launch on a ``data=N`` sub-mesh. Perfect scaling keeps
+    ``agg_mbps / devices`` flat (``weak_eff_share`` = 1.0); the decode is
+    collective-free, so efficiency measures pure partitioning overhead."""
+    import jax
+
+    from repro.launch.mesh import make_decode_mesh
+
+    spec = get_code_spec(code)
+    geom = dict(D=64, L=16, q=8) if smoke else TABLE3
+    cfg = PBVDConfig(spec=spec, backend=backend, **geom)
+    n_dev = len(jax.devices())
+    rows = []
+    base_mbps = None
+    for d in devices:
+        if d > n_dev:
+            print(f"# skipping devices={d}: only {n_dev} device(s) visible")
+            continue
+        mesh = make_decode_mesh(f"data={d}")
+        engine = DecoderEngine(cfg, mesh=mesh)
+        ns = streams_per_device * d
+        data = _streams(spec, ns, frame_bits, ebn0, seed=7)
+        ys = [y for _, y in data]
+        n_bits = [frame_bits] * ns
+        dt = _time(lambda: engine.decode_batch(ys, n_bits), reps)
+        mbps = frame_bits * ns / dt / 1e6
+        if base_mbps is None:
+            base_mbps = mbps / d  # normalize even if the sweep skips d=1
+        rows.append(
+            dict(
+                kind="batched_devices",
+                backend=backend,
+                devices=d,
+                n_streams=ns,
+                frame_bits=frame_bits,
+                agg_mbps=round(mbps, 2),
+                weak_eff_share=round(mbps / (d * base_mbps), 3),
+            )
+        )
+    return rows
+
+
+def merge_bench_json(rows: list[dict], path: str) -> None:
+    bench_json.merge_rows(path, rows, ("batched_devices",), geometry=TABLE3)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--streams", type=int, nargs="+", default=[1, 4, 16, 64])
@@ -131,7 +200,38 @@ def main(argv=None):
         "--metric-mode", default="f32", choices=["f32", "i16", "i8"],
         help="path-metric pipeline for every launch in the sweep",
     )
+    ap.add_argument(
+        "--devices", type=int, nargs="+", default=None, metavar="N",
+        help="run the weak-scaling devices sweep instead (data=N sub-meshes)",
+    )
+    ap.add_argument(
+        "--out", default=None,
+        help="merge devices rows into this BENCH_*.json (devices sweep only)",
+    )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="tiny geometry for CI: short blocks, same code paths",
+    )
     args = ap.parse_args(argv if argv is not None else [])
+    if args.out and not args.devices:
+        ap.error("--out only applies to the devices sweep; add --devices")
+    if args.devices:
+        fb = args.frame_bits[0] if args.frame_bits else 1024
+        if args.smoke:
+            fb = min(fb, 512)
+        rows = run_devices(
+            tuple(args.devices),
+            backend=args.backend,
+            frame_bits=fb,
+            reps=args.reps,
+            smoke=args.smoke,
+        )
+        for r in rows:
+            print("batched_devices," + ",".join(f"{k}={v}" for k, v in r.items()))
+        if args.out:
+            merge_bench_json(rows, args.out)
+            print(f"# merged into {args.out}")
+        return
     rows = run(
         tuple(args.streams),
         tuple(args.frame_bits),

@@ -30,12 +30,14 @@ See DESIGN.md §1/§3 for the architecture and the streaming invariants.
 
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ops import pbvd_decode_blocks
+from repro.kernels.ops import check_mesh_launch, pbvd_decode_blocks
 from .codespec import CodeSpec
 
 __all__ = ["DecoderEngine", "DecoderSession"]
@@ -54,16 +56,50 @@ class DecoderEngine:
     cfg: PBVDConfig — decode geometry (D, L), quantization, backend, code/spec.
     mesh: optional ``jax.sharding.Mesh``; when given, the parallel-block axis
         of every decode is sharded over ``block_axes`` (e.g. ``("pod","data")``
-        on the production mesh).
+        on the production mesh). Blocks never interact, so the sharded launch
+        is collective-free — fleet throughput is N chips of lane throughput.
+    block_axes: mesh axes carrying the lane (flattened frames × blocks) axis.
+        ``None`` resolves the ``"blocks"`` logical-axis rule of
+        :mod:`repro.sharding.rules` against the mesh (``("pod", "data")``
+        on a multi-pod mesh, ``("data",)`` otherwise).
+    shard_dispatch: how a mesh-bound launch is driven —
+        ``"constraint"`` (default) places the packed lanes with a
+        ``NamedSharding`` and lets pjit partition the launch;
+        ``"shard_map"`` wraps it in :func:`repro.sharding.smap.shard_map`,
+        each shard decoding its local lanes explicitly. Both are bit-exact
+        to the unsharded decode; validated eagerly at construction
+        (:func:`repro.kernels.ops.check_mesh_launch`).
     """
 
-    def __init__(self, cfg=None, *, mesh=None, block_axes: tuple[str, ...] = ("data",)):
+    def __init__(
+        self,
+        cfg=None,
+        *,
+        mesh=None,
+        block_axes: tuple[str, ...] | None = ("data",),
+        shard_dispatch: str = "constraint",
+    ):
         from .pbvd import PBVDConfig  # local import: pbvd re-exports the engine
 
         self.cfg = cfg if cfg is not None else PBVDConfig()
         self.spec: CodeSpec = self.cfg.codespec
         self.mesh = mesh
+        if block_axes is None:
+            if mesh is None:
+                block_axes = ("data",)
+            else:
+                from repro.sharding.rules import block_mesh_axes
+
+                block_axes = block_mesh_axes(mesh)
         self.block_axes = tuple(block_axes)
+        self.shard_dispatch = shard_dispatch
+        # eager: a bad mesh binding fails when the engine is BUILT, with a
+        # clear error naming the axis/backend — never inside a pooled launch
+        self.n_shards = (
+            check_mesh_launch(mesh, self.block_axes, self.cfg.backend, dispatch=shard_dispatch)
+            if mesh is not None
+            else 1
+        )
 
     # ------------------------------------------------------------------ one-shot
     def decode(self, y, n_bits: int | None = None, *, interpret: bool | None = None):
@@ -75,6 +111,10 @@ class DecoderEngine:
         number of full-rate stages in the stream.
         """
         blocks, n_blocks, n_bits = self._frame_one(y, n_bits)
+        if self.mesh is not None:
+            # mesh launches round lanes to the shard-aware budget once, here;
+            # pad lanes are zero-symbol blocks beyond frame_counts, trimmed
+            blocks = self._pad_lanes(blocks)
         bits = self._decode_blocks(blocks, (n_blocks,), interpret)  # (D, n_blocks)
         return jnp.transpose(bits).reshape(-1)[:n_bits]
 
@@ -118,10 +158,7 @@ class DecoderEngine:
             frame_counts = tuple(k for _, k, _ in framed)
             bit_counts = tuple(nb for _, _, nb in framed)
             packed = jnp.concatenate([b for b, _, _ in framed], axis=2)
-        total = packed.shape[2]
-        budget = _pow2_at_least(total)
-        if budget > total:
-            packed = jnp.pad(packed, ((0, 0), (0, 0), (0, budget - total)))
+        packed = self._pad_lanes(packed)
         bits = self._decode_blocks(packed, frame_counts, interpret)  # (D, total)
         if uniform is not None:  # equal frames: one reshape, not S slices
             S, k, n_bits = len(ys), frame_counts[0], bit_counts[0]
@@ -139,6 +176,29 @@ class DecoderEngine:
         return DecoderSession(self, interpret=interpret)
 
     # ------------------------------------------------------------------ internals
+    def _lane_budget(self, n: int) -> int:
+        """Shared jit lane-shape budget for ``n`` real lanes.
+
+        The power-of-two budget rounded ONCE to the shard count —
+        ``lcm(pow2_at_least(n), n_shards)`` — so a mesh-bound launch is both
+        evenly shardable over ``block_axes`` and drawn from the same bounded
+        shape set as the unsharded path (a post-hoc "pad to a multiple of
+        n_shards" after the pow2 pad would mint a fresh shape per fleet size
+        for any non-power-of-two shard count and recompile unboundedly under
+        streaming). Without a mesh this IS ``_pow2_at_least``.
+        """
+        budget = _pow2_at_least(n)
+        s = self.n_shards
+        return budget * s // math.gcd(budget, s)
+
+    def _pad_lanes(self, blocks):
+        """Pad the lane axis to :meth:`_lane_budget` with zero-symbol blocks."""
+        total = blocks.shape[2]
+        budget = self._lane_budget(total)
+        if budget > total:
+            blocks = jnp.pad(blocks, ((0, 0), (0, 0), (0, budget - total)))
+        return blocks
+
     def _frame_one(self, y, n_bits: int | None):
         """Depuncture, quantize and frame one stream → (blocks, n_blocks, n_bits)."""
         from .pbvd import frame_stream
@@ -202,33 +262,63 @@ class DecoderEngine:
 
         ``frame_counts`` is the per-frame real-block layout along the lane
         axis (one entry for plain decodes); lanes beyond the real blocks are
-        padding the backend trims. Optionally shards the lane axis.
+        padding the backend trims. With a mesh bound, the lane axis arrives
+        pre-padded to :meth:`_lane_budget` (every caller rounds once, before
+        launch) and is sharded over ``block_axes`` by the configured
+        dispatch — collective-free either way, since blocks never interact.
         """
         cfg = self.cfg
-        if self.mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec as P
-
-            n_shards = int(np.prod([self.mesh.shape[a] for a in self.block_axes]))
-            pad = (-blocks.shape[2]) % n_shards
-            if pad:
-                blocks = jnp.pad(blocks, ((0, 0), (0, 0), (0, pad)))
-            sharding = NamedSharding(self.mesh, P(None, None, self.block_axes))
-            blocks = jax.lax.with_sharding_constraint(blocks, sharding)
-        return pbvd_decode_blocks(
-            blocks,
-            self.spec.code,
+        launch_kwargs = dict(
             decode_start=cfg.L,
             n_decode=cfg.D,
             start_policy=cfg.start_policy,
             backend=cfg.backend,
             interpret=interpret,
-            frame_counts=frame_counts,
             metric_mode=cfg.metric_mode,
             tb_mode=cfg.tb_mode,
             tb_chunk=cfg.tb_chunk,
             acs_radix=cfg.acs_radix,
             acs_impl=cfg.acs_impl,
             acs_k=cfg.acs_k,
+        )
+        if self.mesh is None:
+            return pbvd_decode_blocks(
+                blocks, self.spec.code, frame_counts=frame_counts, **launch_kwargs
+            )
+
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        B = blocks.shape[2]
+        if B % self.n_shards:
+            # internal invariant, not a user error: decode/decode_batch/
+            # sessions/SessionPool all round lanes via _lane_budget first
+            raise ValueError(
+                f"lane axis {B} not divisible into {self.n_shards} shards; "
+                f"callers must pad to _lane_budget before launch"
+            )
+        if self.shard_dispatch == "shard_map":
+            from repro.sharding.smap import lane_shard_map
+
+            # each shard decodes its B/n_shards local lanes independently;
+            # per-shard outputs must be uniform in shape, so the pad-lane
+            # trim happens ONCE on the stitched result (frame_counts stays a
+            # host-side concept — the mapped body decodes every local lane)
+            code = self.spec.code
+
+            def _local(y_local):
+                return pbvd_decode_blocks(y_local, code, **launch_kwargs)
+
+            bits = lane_shard_map(
+                _local, mesh=self.mesh, axes=self.block_axes, in_rank=3, out_rank=2
+            )(blocks)
+            return bits[:, : sum(frame_counts)]
+        # "constraint": commit the packed lanes to the mesh placement and let
+        # pjit partition the launch; the backend's n_real trim runs inside jit
+        blocks = jax.lax.with_sharding_constraint(
+            blocks, NamedSharding(self.mesh, P(None, None, self.block_axes))
+        )
+        return pbvd_decode_blocks(
+            blocks, self.spec.code, frame_counts=frame_counts, **launch_kwargs
         )
 
 
@@ -413,9 +503,10 @@ class DecoderSession:
         k = b1 - b0
         if k <= 0:
             return np.zeros((0,), np.int32)
-        # pad the block count to a power of two so chunked streams hit a
+        # pad the block count to the engine's lane budget (power of two,
+        # rounded once to the mesh shard count) so chunked streams hit a
         # bounded set of jit shapes; pad-lane bits are trimmed by the backend
-        blocks = self._frame_ready(b1, k_lanes=_pow2_at_least(k))
+        blocks = self._frame_ready(b1, k_lanes=self.engine._lane_budget(k))
         bits = self.engine._decode_blocks(blocks, (k,), self._interpret)  # (D, k)
         out = np.asarray(jnp.transpose(bits), dtype=np.int32).reshape(-1)
         self._commit(b1)

@@ -241,13 +241,21 @@ def decode_stream_sharded(
     cfg: PBVDConfig,
     mesh: jax.sharding.Mesh,
     *,
-    block_axes: tuple[str, ...] = ("data",),
+    block_axes: tuple[str, ...] | None = ("data",),
+    shard_dispatch: str = "constraint",
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Distributed stream decode: thin wrapper over a mesh-bound engine."""
+    """Distributed stream decode: thin wrapper over a mesh-bound engine.
+
+    ``block_axes=None`` resolves the ``"blocks"`` logical-axis rule against
+    the mesh; ``shard_dispatch`` picks the lane dispatch path (see
+    :class:`~repro.core.engine.DecoderEngine`).
+    """
     from .engine import DecoderEngine
 
-    engine = DecoderEngine(cfg, mesh=mesh, block_axes=block_axes)
+    engine = DecoderEngine(
+        cfg, mesh=mesh, block_axes=block_axes, shard_dispatch=shard_dispatch
+    )
     return engine.decode(y, n_bits, interpret=interpret)
 
 

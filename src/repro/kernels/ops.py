@@ -56,6 +56,7 @@ from .traceback import DEFAULT_TB_CHUNK, traceback_pallas, traceback_prefix_pall
 
 __all__ = [
     "pbvd_decode_blocks",
+    "check_mesh_launch",
     "default_interpret",
     "FramedBlocks",
     "METRIC_MODES",
@@ -86,6 +87,49 @@ DEFAULT_ACS_K = 2
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+#: Lane-axis dispatch strategies for a mesh-bound engine (DESIGN.md §12):
+#: ``"constraint"`` places the packed lanes with a NamedSharding and lets
+#: pjit partition the (collective-free) launch; ``"shard_map"`` wraps the
+#: launch in a per-shard :func:`repro.sharding.smap.shard_map` call, each
+#: shard decoding only its local lanes (pad-lane trimming then happens once,
+#: globally, after the shards are stitched — per-shard output shapes must be
+#: uniform, so the trim cannot live inside the mapped body).
+SHARD_DISPATCH = ("constraint", "shard_map")
+
+
+def check_mesh_launch(mesh, block_axes, backend: str, *, dispatch: str = "constraint") -> int:
+    """Eagerly validate a mesh × backend decode combination; return n_shards.
+
+    Every failure here is a clear pre-trace ``ValueError`` (or ``KeyError``
+    for an unknown backend) instead of a downstream pjit/shard_map shape
+    error: unknown dispatch mode, empty/duplicate ``block_axes``, axes the
+    mesh does not have, and a backend name the registry does not know.
+    Called by ``DecoderEngine`` at construction, so a bad mesh binding fails
+    when the engine is built — never inside a batched launch mid-stream.
+    """
+    get_backend(backend)  # KeyError names the unknown backend
+    if dispatch not in SHARD_DISPATCH:
+        raise ValueError(
+            f"unknown shard dispatch {dispatch!r}; supported: {SHARD_DISPATCH}"
+        )
+    axes = tuple(block_axes)
+    if not axes:
+        raise ValueError("block_axes must name at least one mesh axis")
+    if len(set(axes)) != len(axes):
+        raise ValueError(f"block_axes {axes} repeats a mesh axis")
+    missing = [a for a in axes if a not in mesh.axis_names]
+    if missing:
+        raise ValueError(
+            f"block_axes {missing} not in mesh axes {tuple(mesh.axis_names)}"
+        )
+    n_shards = 1
+    for a in axes:
+        n_shards *= int(mesh.shape[a])
+    if n_shards < 1:
+        raise ValueError(f"mesh shards the lane axis {n_shards} ways: empty mesh?")
+    return n_shards
 
 
 def _pad_axis(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:

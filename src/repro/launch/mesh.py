@@ -1,14 +1,44 @@
-"""Production meshes (assignment §MULTI-POD DRY-RUN).
+"""Device meshes: production shapes, local test meshes, and the decode-fleet
+launch recipe.
 
 ``make_production_mesh`` is a function (not a module-level constant) so that
 importing this module never touches JAX device state.
+
+Multi-process launch recipe (one process per host, à la the MaxText XPK
+multi-slice scripts — SNIPPETS.md #2/#3):
+
+    # per host i of N (same command everywhere, only PROCESS_ID varies):
+    JAX_COORDINATOR_ADDRESS=host0:8476 JAX_NUM_PROCESSES=N JAX_PROCESS_ID=i \\
+        python -m repro.launch.serve_decoder --mesh data=<total chips> \\
+        --streams 64 --backend fused
+
+    # single-host CI / laptop rehearsal of the SAME path on CPU, no TPU:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        python -m repro.launch.serve_decoder --mesh data=8
+
+:func:`maybe_init_distributed` reads the ``JAX_COORDINATOR_ADDRESS`` /
+``JAX_NUM_PROCESSES`` / ``JAX_PROCESS_ID`` triplet and calls
+``jax.distributed.initialize`` when (and only when) all three are present,
+so the same entry point serves single-process runs untouched. The decoder's
+mesh path is collective-free (parallel blocks never interact), so the
+multi-process fleet needs no cross-host traffic beyond the jit partitioning
+handshake.
 """
 
 from __future__ import annotations
 
-import jax
+import os
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+import jax
+import numpy as np
+
+__all__ = [
+    "make_production_mesh",
+    "make_local_mesh",
+    "parse_mesh_spec",
+    "make_decode_mesh",
+    "maybe_init_distributed",
+]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,8 +48,98 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_local_mesh(data: int | None = None, model: int = 1):
-    """Small mesh over whatever devices exist (tests / examples)."""
+    """Small mesh over whatever devices exist (tests / examples).
+
+    Every invalid shape fails HERE with a clear ``ValueError`` — notably
+    ``model`` not dividing the device count, which used to flow a zero or
+    short mesh shape into ``jax.make_mesh`` (silently building a mesh over
+    a device subset, or failing with an opaque downstream error).
+    """
     n = len(jax.devices())
+    if model < 1:
+        raise ValueError(f"model axis size must be >= 1, got {model}")
     if data is None:
+        if n % model:
+            raise ValueError(
+                f"model={model} does not divide the {n} available device(s); "
+                f"pick a divisor of {n} or pass data= explicitly"
+            )
         data = n // model
+    if data < 1:
+        raise ValueError(f"data axis size must be >= 1, got {data}")
+    if data * model > n:
+        raise ValueError(
+            f"mesh shape ({data}, {model}) needs {data * model} devices, "
+            f"only {n} available"
+        )
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def parse_mesh_spec(spec: str) -> tuple[tuple[str, ...], tuple[int, ...]]:
+    """Parse ``"data=8"`` / ``"pod=2,data=4"`` → (axis names, axis sizes)."""
+    names, sizes = [], []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, eq, size = part.partition("=")
+        name = name.strip()
+        try:
+            n = int(size) if eq else -1
+        except ValueError:
+            n = -1
+        if not name or n < 1:
+            raise ValueError(
+                f"bad mesh spec {spec!r}: expected AXIS=N[,AXIS=N...] with "
+                f"positive integer sizes, got segment {part!r}"
+            )
+        if name in names:
+            raise ValueError(f"bad mesh spec {spec!r}: axis {name!r} repeated")
+        names.append(name)
+        sizes.append(n)
+    if not names:
+        raise ValueError(f"bad mesh spec {spec!r}: no axes")
+    return tuple(names), tuple(sizes)
+
+
+def make_decode_mesh(spec: str, *, devices=None):
+    """Build the decode-fleet mesh from a ``--mesh`` spec string.
+
+    ``spec`` is ``"data=N"`` (or multi-axis ``"pod=2,data=8"``); the mesh is
+    laid over the first ``prod(sizes)`` devices, so a sub-mesh of the
+    available fleet is legal (the devices-sweep benchmark relies on it).
+    """
+    from jax.sharding import Mesh
+
+    names, sizes = parse_mesh_spec(spec)
+    devs = list(jax.devices()) if devices is None else list(devices)
+    need = 1
+    for s in sizes:
+        need *= s
+    if need > len(devs):
+        raise ValueError(
+            f"mesh spec {spec!r} needs {need} devices, only {len(devs)} "
+            f"available (CPU rehearsal: set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need})"
+        )
+    return Mesh(np.asarray(devs[:need]).reshape(sizes), names)
+
+
+def maybe_init_distributed() -> bool:
+    """Initialize multi-process JAX from the launch env, if configured.
+
+    Returns True when ``jax.distributed.initialize`` was called (all of
+    ``JAX_COORDINATOR_ADDRESS``/``JAX_NUM_PROCESSES``/``JAX_PROCESS_ID``
+    present in the environment), False for single-process runs. Call BEFORE
+    any other JAX API (device queries included) — the recipe at the top of
+    this module.
+    """
+    addr = os.environ.get("JAX_COORDINATOR_ADDRESS")
+    num = os.environ.get("JAX_NUM_PROCESSES")
+    pid = os.environ.get("JAX_PROCESS_ID")
+    if not (addr and num and pid):
+        return False
+    jax.distributed.initialize(
+        coordinator_address=addr, num_processes=int(num), process_id=int(pid)
+    )
+    return True

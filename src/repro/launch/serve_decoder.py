@@ -35,7 +35,7 @@ import numpy as np
 from repro.core.channel import transmit
 from repro.core.codespec import available_code_specs, get_code_spec
 from repro.core.encoder import encode_jax, terminate
-from repro.core.engine import DecoderEngine, DecoderSession, _pow2_at_least
+from repro.core.engine import DecoderEngine, DecoderSession
 from repro.core.pbvd import PBVDConfig
 from repro.kernels.ops import (
     DEFAULT_TB_CHUNK,
@@ -103,8 +103,10 @@ class SessionPool:
 
     Sessions are grouped by *launch compatibility* — the key is
     ``(mother code, D, L, backend, start_policy, metric_mode, tb_mode,
-    tb_chunk, window dtype, interpret, mesh)``: everything that shapes or
-    parameterizes the kernel launch.
+    tb_chunk, window dtype, interpret, mesh identity)``: everything that
+    shapes or parameterizes the kernel launch. The mesh identity is
+    content-based — axis names, shape, device ids, the engine's
+    ``block_axes`` and shard dispatch — never ``id(mesh)``.
     Code specs that share a mother code but differ in puncturing land in the
     same group (puncturing only affects ingest, never the launch), as do
     sessions with different payload lengths or chunk cadences.
@@ -119,6 +121,12 @@ class SessionPool:
 
     def __init__(self):
         self._members: list[PooledSession] = []
+        # strong refs to each pooled engine's mesh for the membership's
+        # lifetime: the group key describes the mesh by CONTENT (axis names,
+        # shape, device ids — never ``id()``, whose reuse after GC could
+        # falsely coalesce sessions on different meshes), and pinning the
+        # object here guarantees no two live members' meshes can alias
+        self._mesh_refs: dict[int, object] = {}
         self.launches = 0  # batched launches issued (for reporting/tests)
 
     # ---- membership ----------------------------------------------------------------
@@ -126,11 +134,14 @@ class SessionPool:
         """Open a pooled streaming session on ``engine``."""
         ps = PooledSession(self, engine.session(interpret=interpret))
         self._members.append(ps)
+        if engine.mesh is not None:
+            self._mesh_refs[id(ps)] = engine.mesh
         return ps
 
     def close(self, ps: PooledSession) -> None:
         """Remove a session from the pool (it keeps its buffered state)."""
         self._members.remove(ps)
+        self._mesh_refs.pop(id(ps), None)
 
     def __len__(self) -> int:
         return len(self._members)
@@ -174,7 +185,24 @@ class SessionPool:
             dt = "int8" if q <= 8 else "int16"
         else:
             dt = "float32"
-        mesh = s.engine.mesh
+        # the mesh enters the key by CONTENT plus the engine's lane-axis
+        # binding: two engines on the same mesh but different block_axes (or
+        # dispatch) compile DIFFERENT launches and must not coalesce, and a
+        # content key — unlike the old ``id(mesh)`` — can neither split
+        # equal meshes built twice nor falsely merge distinct meshes whose
+        # ids collide after GC (the pool additionally pins every pooled
+        # mesh in ``_mesh_refs``)
+        eng = s.engine
+        if eng.mesh is None:
+            mesh_key = None
+        else:
+            mesh_key = (
+                tuple(eng.mesh.axis_names),
+                tuple((a, int(n)) for a, n in eng.mesh.shape.items()),
+                tuple(int(d.id) for d in eng.mesh.devices.flat),
+                eng.block_axes,
+                eng.shard_dispatch,
+            )
         # key on the RESOLVED tb mode so an "auto" session coalesces with
         # one that spelled the backend's preferred mode out explicitly
         tb_mode = resolve_tb_mode(cfg.backend, cfg.tb_mode)
@@ -200,7 +228,7 @@ class SessionPool:
             else None,
             dt,
             s._interpret,
-            id(mesh) if mesh is not None else None,
+            mesh_key,
         )
 
     def _launch(self, entries: list[tuple[PooledSession, int]]) -> list[np.ndarray]:
@@ -215,11 +243,11 @@ class SessionPool:
             frames.append(s._frame_ready(b1))
             counts.append(b1 - s._blocks_done)
         packed = jnp.concatenate(frames, axis=2) if len(frames) > 1 else frames[0]
-        total = packed.shape[2]
-        budget = _pow2_at_least(total)
-        if budget > total:
-            packed = jnp.pad(packed, ((0, 0), (0, 0), (0, budget - total)))
         lead = entries[0][0]._session
+        # the lead engine's shard-aware budget (pow2 rounded once to the
+        # mesh shard count) — identical for every member, since the group
+        # key includes the full mesh identity + block_axes
+        packed = lead.engine._pad_lanes(packed)
         bits = lead.engine._decode_blocks(packed, tuple(counts), lead._interpret)
         self.launches += 1
         outs, lo = [], 0
@@ -359,6 +387,22 @@ def main() -> None:
         default=2,
         help="matrix-ACS fusion depth k (stages per tropical matmul step)",
     )
+    ap.add_argument(
+        "--mesh",
+        default=None,
+        metavar="AXIS=N[,AXIS=N]",
+        help="shard the lane (parallel-block) axis over a device mesh, e.g. "
+        "data=8 (CPU rehearsal: XLA_FLAGS=--xla_force_host_platform_"
+        "device_count=8; multi-host: the JAX_COORDINATOR_ADDRESS/"
+        "JAX_NUM_PROCESSES/JAX_PROCESS_ID env triplet, see repro.launch.mesh)",
+    )
+    ap.add_argument(
+        "--shard-dispatch",
+        default="constraint",
+        choices=["constraint", "shard_map"],
+        help="mesh dispatch path: NamedSharding placement vs explicit "
+        "per-shard shard_map (bit-identical; see DESIGN.md §12)",
+    )
     ap.add_argument("--chunk-bits", type=int, default=4096, help="payload bits per chunk")
     ap.add_argument("--n-chunks", type=int, default=100)
     ap.add_argument(
@@ -370,6 +414,13 @@ def main() -> None:
     ap.add_argument("--ebn0", type=float, default=4.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    from repro.launch.mesh import make_decode_mesh, maybe_init_distributed
+
+    mesh = None
+    if args.mesh:
+        maybe_init_distributed()  # no-op unless the multi-host env triplet is set
+        mesh = make_decode_mesh(args.mesh)
 
     spec = get_code_spec(args.code)
     cfg = PBVDConfig(
@@ -385,7 +436,18 @@ def main() -> None:
         acs_impl=args.acs_impl,
         acs_k=args.acs_k,
     )
-    engine = DecoderEngine(cfg)
+    engine = DecoderEngine(
+        cfg,
+        mesh=mesh,
+        block_axes=None if mesh is not None else ("data",),
+        shard_dispatch=args.shard_dispatch,
+    )
+    if mesh is not None:
+        print(
+            f"[serve_decoder] mesh {dict(mesh.shape)} over {mesh.devices.size} "
+            f"device(s); lane axis on {engine.block_axes} "
+            f"({engine.n_shards} shards, dispatch={engine.shard_dispatch})"
+        )
     print(
         f"[serve_decoder] {spec.name}: K={spec.code.K}, rate={spec.rate:.3f}, "
         f"D={cfg.D}, L={cfg.L}, q={cfg.effective_q}, backend={cfg.backend}, "

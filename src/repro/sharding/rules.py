@@ -29,6 +29,7 @@ __all__ = [
     "shard",
     "logical_to_spec",
     "named_sharding",
+    "block_mesh_axes",
     "DEFAULT_RULES",
     "SINGLE_POD_RULES",
 ]
@@ -158,6 +159,26 @@ def named_sharding(logical_axes: Sequence[str | None]) -> NamedSharding | None:
     if r is None:
         return None
     return NamedSharding(r.mesh, r.spec(logical_axes))
+
+
+def block_mesh_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes the PBVD ``blocks`` logical axis maps to on ``mesh``.
+
+    Resolves the ``"blocks"`` rule (``("pod", "data")`` multi-pod,
+    ``"data"`` single-pod) and drops axes the mesh does not have — the
+    engine's default ``block_axes`` when bound to a mesh without an explicit
+    override (``DecoderEngine(cfg, mesh=m, block_axes=None)``).
+    """
+    rules = DEFAULT_RULES if "pod" in mesh.axis_names else SINGLE_POD_RULES
+    m = rules["blocks"]
+    axes = (m,) if isinstance(m, str) else tuple(m or ())
+    resolved = tuple(a for a in axes if a in mesh.axis_names)
+    if not resolved:
+        raise ValueError(
+            f"no 'blocks' rule axis {axes} exists on mesh axes "
+            f"{tuple(mesh.axis_names)}; pass block_axes explicitly"
+        )
+    return resolved
 
 
 def shard(x: jax.Array, logical_axes: Sequence[str | None]) -> jax.Array:

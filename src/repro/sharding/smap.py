@@ -1,8 +1,9 @@
-"""shard_map compatibility shim (API moved between JAX versions)."""
+"""shard_map compatibility shim (API moved between JAX versions), plus the
+lane-axis dispatch helper the mesh-bound decode path uses."""
 
 from __future__ import annotations
 
-__all__ = ["shard_map"]
+__all__ = ["shard_map", "lane_shard_map"]
 
 try:  # jax >= 0.6: top-level, check_vma kwarg
     from jax import shard_map as _sm  # type: ignore[attr-defined]
@@ -15,3 +16,19 @@ except ImportError:  # pragma: no cover
 
     def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
         return _sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check)
+
+
+def lane_shard_map(f, *, mesh, axes, in_rank: int, out_rank: int):
+    """shard_map ``f`` over ONLY the trailing (lane) axis of its operand.
+
+    The PBVD decode contract shards nothing but the last axis — parallel
+    blocks never interact, so ``f`` runs per-shard on its local lanes with
+    zero collectives. ``axes`` is the tuple of mesh axis names carrying the
+    lane axis; ``in_rank``/``out_rank`` are the operand/result ranks (the
+    leading axes are replicated).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    in_specs = P(*([None] * (in_rank - 1) + [tuple(axes)]))
+    out_specs = P(*([None] * (out_rank - 1) + [tuple(axes)]))
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
