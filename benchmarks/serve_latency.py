@@ -1,0 +1,217 @@
+"""Serving latency under a Poisson arrival trace: sustained Mb/s + p50/p99.
+
+The kernel sweeps measure what a saturated launch can do; this sweep
+measures what the serving layer DELIVERS when traffic arrives with jitter —
+the piece that turns kernel throughput into servable traffic (ROADMAP item
+2). ``n_streams`` concurrent streams push chunks through
+:class:`repro.launch.serve_async.AsyncDecodeService` (paged session slabs,
+deadline-or-size dispatch, bounded admission) with i.i.d. exponential
+inter-arrival gaps; every stream's decoded bits are asserted bit-exact to
+its one-shot ``engine.decode`` before any number is reported.
+
+Rows land in BENCH_*.json as ``kind="serve_latency"``:
+
+* ``sustained_mbps`` — delivered payload bits over the admit→last-delivery
+  span (GATED by tools/bench_compare.py like every ``*_mbps`` field);
+* ``p50_ms`` / ``p99_ms`` — per-chunk latency, admission to the dispatch
+  that decoded the chunk's last symbol (REPORTED, not gated: they overlap
+  the mbps signal and tail percentiles are noisy at smoke sample counts);
+* ``dispatch_steps`` — coalesced pool steps the trace needed (reported).
+
+Per the repo-wide sweep policy the trace runs ``reps`` times after a
+warm-up pass (compile time is not serving latency) and each field is the
+median across runs.
+
+    PYTHONPATH=src python benchmarks/serve_latency.py \
+        [--streams 64] [--backend ref] [--reps 5] [--out BENCH_pr.json]
+
+``--smoke`` shrinks to CI geometry (16 streams, short payloads, tiny
+blocks) but keeps every code path — admission, slab paging, deadline
+dispatch, backpressure accounting — identical.
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from . import bench_json  # package mode (python -m benchmarks.…)
+except ImportError:
+    import bench_json  # script mode (benchmarks/ on sys.path)
+
+from repro.core.channel import transmit
+from repro.core.codespec import get_code_spec
+from repro.core.encoder import encode_jax, terminate
+from repro.core.engine import DecoderEngine
+from repro.core.pbvd import PBVDConfig
+from repro.launch.serve_async import run_poisson_trace
+from repro.launch.slab import SymbolSlab
+
+TABLE3 = bench_json.TABLE3
+
+
+def _streams(spec, n_streams: int, payload_bits: int, ebn0: float, seed: int):
+    payloads, ys = [], []
+    for i in range(n_streams):
+        rng = np.random.default_rng(seed + i)
+        payload = rng.integers(0, 2, payload_bits)
+        coded = encode_jax(jnp.asarray(terminate(payload, spec.code)), spec.code)
+        tx = spec.puncture_stream(coded) if spec.is_punctured else coded
+        y = transmit(jax.random.PRNGKey(seed + i), tx, ebn0, spec.rate)
+        payloads.append(payload)
+        ys.append(np.asarray(y))
+    return payloads, ys
+
+
+def run(
+    *,
+    code: str = "ccsds",
+    backend: str = "ref",
+    n_streams: int = 64,
+    payload_bits: int = 16384,
+    chunk_bits: int = 2048,
+    deadline_ms: float = 5.0,
+    max_batch_blocks: int = 64,
+    rate_chunks_per_s: float = 2000.0,
+    reps: int = 5,
+    ebn0: float = 4.0,
+    smoke: bool = False,
+) -> list[dict]:
+    spec = get_code_spec(code)
+    geom = dict(D=64, L=16, q=8) if smoke else TABLE3
+    cfg = PBVDConfig(spec=spec, backend=backend, **geom)
+    engine = DecoderEngine(cfg)
+    payloads, ys = _streams(spec, n_streams, payload_bits, ebn0, seed=7)
+    n_bits = [payload_bits] * n_streams
+    # received symbols per payload chunk (1-D wire symbols for punctured
+    # specs, full-rate stages otherwise)
+    chunk_symbols = max(1, int(round(len(ys[0]) * chunk_bits / payload_bits)))
+    # slab sized to the worst case — every stream holding a full decode
+    # window plus one chunk of arrival jitter — so the trace measures
+    # dispatch behaviour, not allocator starvation
+    page_stages = geom["D"] + 2 * geom["L"]
+    pages_per_stream = 2 + -(-chunk_symbols // page_stages) * 2
+    refs = [np.asarray(engine.decode(jnp.asarray(y), payload_bits)) for y in ys]
+
+    def trace():
+        slab = SymbolSlab(
+            n_pages=pages_per_stream * n_streams,
+            page_stages=page_stages,
+            R=spec.code.R,
+        )
+        bits, report = asyncio.run(
+            run_poisson_trace(
+                engine,
+                ys,
+                n_bits,
+                chunk_symbols=chunk_symbols,
+                rate_chunks_per_s=rate_chunks_per_s,
+                seed=11,
+                slab=slab,
+                service_kwargs=dict(
+                    max_batch_blocks=max_batch_blocks,
+                    deadline_ms=deadline_ms,
+                ),
+            )
+        )
+        return bits, report
+
+    # warm-up pass compiles every launch shape the trace will hit (step
+    # coalescing shapes + per-stream flush shapes); compile time must not
+    # masquerade as serving latency
+    bits, _ = trace()
+    for b, r in zip(bits, refs):
+        np.testing.assert_array_equal(np.asarray(b), r)
+
+    reports = []
+    for _ in range(max(1, reps)):
+        bits, report = trace()
+        for b, r in zip(bits, refs):
+            np.testing.assert_array_equal(np.asarray(b), r)
+        reports.append(report)
+
+    med = lambda k: float(np.median([r[k] for r in reports]))
+    return [
+        dict(
+            kind="serve_latency",
+            code=code,
+            backend=backend,
+            n_streams=n_streams,
+            payload_bits=payload_bits,
+            chunk_bits=chunk_bits,
+            deadline_cfg_us=int(deadline_ms * 1e3),  # identity (not a *_ms metric)
+            max_batch_blocks=max_batch_blocks,
+            sustained_mbps=round(med("sustained_mbps"), 3),
+            p50_ms=round(med("p50_ms"), 2),
+            p99_ms=round(med("p99_ms"), 2),
+            dispatch_steps=int(med("dispatches")),
+        )
+    ]
+
+
+def merge_bench_json(rows: list[dict], path: str) -> None:
+    bench_json.merge_rows(path, rows, ("serve_latency",), geometry=TABLE3)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--code", default="ccsds")
+    ap.add_argument("--backend", default="ref")
+    ap.add_argument("--streams", type=int, default=64)
+    ap.add_argument("--payload-bits", type=int, default=16384)
+    ap.add_argument("--chunk-bits", type=int, default=2048)
+    ap.add_argument("--deadline-ms", type=float, default=5.0)
+    ap.add_argument("--max-batch-blocks", type=int, default=64)
+    ap.add_argument("--rate", type=float, default=2000.0, metavar="CHUNKS_PER_S")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny CI geometry: 16 streams × 2048-bit payloads, D=64 blocks",
+    )
+    ap.add_argument("--out", default=None, help="merge rows into this BENCH_*.json")
+    args = ap.parse_args(argv if argv is not None else [])
+
+    kw = dict(
+        code=args.code,
+        backend=args.backend,
+        n_streams=args.streams,
+        payload_bits=args.payload_bits,
+        chunk_bits=args.chunk_bits,
+        deadline_ms=args.deadline_ms,
+        max_batch_blocks=args.max_batch_blocks,
+        rate_chunks_per_s=args.rate,
+        reps=args.reps,
+        smoke=args.smoke,
+    )
+    if args.smoke:
+        kw.update(
+            n_streams=min(args.streams, 16),
+            payload_bits=min(args.payload_bits, 2048),
+            chunk_bits=min(args.chunk_bits, 512),
+            max_batch_blocks=min(args.max_batch_blocks, 32),
+            rate_chunks_per_s=max(args.rate, 4000.0),
+            reps=min(args.reps, 3),
+        )
+    rows = run(**kw)
+    for r in rows:
+        print("serve_latency," + ",".join(f"{k}={v}" for k, v in r.items()))
+    if args.out:
+        merge_bench_json(rows, args.out)
+        print(f"# merged into {args.out}")
+    print(
+        "\nevery stream asserted bit-exact to one-shot decode before "
+        "reporting; sustained_mbps is gated by tools/bench_compare.py, "
+        "latency is reported but not gated."
+    )
+
+
+if __name__ == "__main__":
+    import sys
+
+    main(sys.argv[1:])

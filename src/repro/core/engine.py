@@ -40,7 +40,58 @@ import jax.numpy as jnp
 from repro.kernels.ops import check_mesh_launch, pbvd_decode_blocks
 from .codespec import CodeSpec
 
-__all__ = ["DecoderEngine", "DecoderSession"]
+__all__ = ["ArraySessionStore", "DecoderEngine", "DecoderSession"]
+
+
+class ArraySessionStore:
+    """Default storage for a session's buffered soft symbols: one contiguous
+    per-session ndarray.
+
+    A *session store* is the seam that lets a serving layer swap the
+    per-session Python buffer for shared, slab-allocated pages
+    (:class:`repro.launch.slab.PagedSessionStore`) without the session
+    noticing — :class:`DecoderSession` only ever touches its buffer through
+    this interface. The contract (all stage indices are LOCAL, i.e. relative
+    to the store's first held stage):
+
+    * ``len(store)`` — stages currently held;
+    * ``append(rows)`` — append ``(n, R)`` float-convertible symbol rows;
+    * ``grow(n)`` — append ``n`` all-zero stages (punctured ingest scatters
+      into them afterwards);
+    * ``scatter(stage_idx, sym_idx, values)`` — elementwise write;
+    * ``read(lo, n)`` — up to ``n`` rows from ``lo`` (short at the tail,
+      never padded: framing owns the zero-padding);
+    * ``drop_prefix(n)`` — discard the first ``n`` stages (committed blocks);
+    * ``close()`` — release backing storage (idempotent).
+    """
+
+    def __init__(self, R: int):
+        self._a = np.zeros((0, R), np.float32)
+
+    def __len__(self) -> int:
+        return len(self._a)
+
+    def append(self, rows: np.ndarray) -> None:
+        self._a = np.concatenate([self._a, rows.astype(np.float32)])
+
+    def grow(self, n: int) -> None:
+        if n > 0:
+            self._a = np.concatenate(
+                [self._a, np.zeros((n, self._a.shape[1]), np.float32)]
+            )
+
+    def scatter(self, stage_idx, sym_idx, values) -> None:
+        self._a[stage_idx, sym_idx] = values
+
+    def read(self, lo: int, n: int) -> np.ndarray:
+        return self._a[lo : lo + n]
+
+    def drop_prefix(self, n: int) -> None:
+        if n > 0:
+            self._a = self._a[n:]
+
+    def close(self) -> None:
+        self._a = np.zeros((0, self._a.shape[1]), np.float32)
 
 
 def _pow2_at_least(n: int) -> int:
@@ -171,9 +222,18 @@ class DecoderEngine:
         return out
 
     # ------------------------------------------------------------------ streaming
-    def session(self, *, interpret: bool | None = None) -> "DecoderSession":
-        """Open a stateful streaming session (see :class:`DecoderSession`)."""
-        return DecoderSession(self, interpret=interpret)
+    def session(
+        self, *, interpret: bool | None = None, store=None
+    ) -> "DecoderSession":
+        """Open a stateful streaming session (see :class:`DecoderSession`).
+
+        ``store`` swaps the session's symbol buffer for an alternative
+        :class:`ArraySessionStore`-shaped backend — e.g. a paged slab view
+        (:class:`repro.launch.slab.PagedSessionStore`) so millions of
+        short-lived streams share one allocation instead of churning
+        per-session ndarrays.
+        """
+        return DecoderSession(self, interpret=interpret, store=store)
 
     # ------------------------------------------------------------------ internals
     def _lane_budget(self, n: int) -> int:
@@ -342,13 +402,21 @@ class DecoderSession:
     buffer). ``decode()``/``finish()`` compose them with a solo launch.
     """
 
-    def __init__(self, engine: DecoderEngine, *, interpret: bool | None = None):
+    def __init__(
+        self,
+        engine: DecoderEngine,
+        *,
+        interpret: bool | None = None,
+        store=None,
+    ):
         self.engine = engine
         self.cfg = engine.cfg
         self.spec = engine.spec
         self._interpret = interpret
-        self._buf = np.zeros((0, self.spec.code.R), np.float32)
-        self._base = 0  # global stage index of _buf[0]
+        # the buffered-symbol storage backend (see ArraySessionStore for the
+        # contract); a serving layer passes a slab-paged store instead
+        self._store = store if store is not None else ArraySessionStore(self.spec.code.R)
+        self._base = 0  # global stage index of the store's first held stage
         self._blocks_done = 0
         self._kept_seen = 0  # punctured symbols consumed (puncture phase)
         self._int_dtype = None  # set when chunks arrive pre-quantized (integer)
@@ -379,15 +447,19 @@ class DecoderSession:
         number of full-rate stages received); the returned tail makes the
         session's concatenated output equal ``engine.decode(y, n_bits)``.
         """
-        D = self.cfg.D
-        if n_bits is None:
-            n_bits = self._base + len(self._buf)
-        n_blocks = -(-n_bits // D)
-        prior = self._blocks_done * D
+        n_bits, n_blocks, prior = self._finish_plan(n_bits)
         out = self._decode_upto(n_blocks)
         out = out[: max(0, n_bits - prior)]
         self.bits_emitted += len(out)
         return out
+
+    def close(self) -> None:
+        """Release the session's buffered-symbol storage (idempotent).
+
+        Required for slab-backed stores, whose pages return to the shared
+        free-list here; a no-op-ish convenience for the default store.
+        """
+        self._store.close()
 
     def ingest(self, chunk) -> None:
         """Buffer a chunk without decoding (used by pooled sessions)."""
@@ -399,10 +471,25 @@ class DecoderSession:
         return max(self._blocks_done, (self._stages_complete() - L) // D)
 
     # ---- internals -----------------------------------------------------------------
+    def _finish_plan(self, n_bits: int | None) -> tuple[int, int, int]:
+        """The flush arithmetic shared by every finish path.
+
+        Returns ``(n_bits, n_blocks, prior)``: the resolved payload length,
+        the total block count to decode, and the bits already covered by
+        committed blocks. :meth:`finish` and ``PooledSession.finish`` both
+        trim their flush launch with exactly this plan, which is what keeps
+        the solo and pooled tails bit-identical by construction for every
+        non-block-aligned ``n_bits``.
+        """
+        D = self.cfg.D
+        if n_bits is None:
+            n_bits = self._base + len(self._store)
+        return n_bits, -(-n_bits // D), self._blocks_done * D
+
     def _stages_complete(self) -> int:
         """Stages for which every (unpunctured) symbol has been received."""
         if not self.spec.is_punctured:
-            return self._base + len(self._buf)
+            return self._base + len(self._store)
         next_slot = int(self.spec.kept_slot_indices(self._kept_seen, 1)[0])
         return next_slot // self.spec.code.R
 
@@ -433,42 +520,40 @@ class DecoderSession:
                 return
             slots = self.spec.kept_slot_indices(self._kept_seen, n)
             need_stages = int(slots[-1]) // R + 1
-            grow = need_stages - (self._base + len(self._buf))
+            grow = need_stages - (self._base + len(self._store))
             if grow > 0:
-                self._buf = np.concatenate(
-                    [self._buf, np.zeros((grow, R), np.float32)]
-                )
+                self._store.grow(grow)
             local = slots - self._base * R
-            self._buf[local // R, local % R] = chunk
+            self._store.scatter(local // R, local % R, chunk)
             self._kept_seen += n
         elif chunk.ndim == 2 and chunk.shape[1] == R:
-            self._buf = np.concatenate([self._buf, chunk.astype(np.float32)])
+            self._store.append(chunk)
         else:
             raise ValueError(
                 f"chunk shape {chunk.shape} invalid for code R={R} "
                 f"(punctured={self.spec.is_punctured})"
             )
 
-    def _frame_ready(self, b1: int, k_lanes: int | None = None) -> jnp.ndarray:
-        """Frame blocks [blocks_done, b1) → (T, R, k_lanes) quantized symbols.
+    def _frame_ready(self, b1: int) -> jnp.ndarray:
+        """Frame blocks [blocks_done, b1) → (T, R, b1 - blocks_done) quantized
+        symbols, zero-padding the partial last block past the buffered tail.
 
-        Does NOT advance the session (see :meth:`_commit`). ``k_lanes`` pads
-        the lane axis (extra lanes are zero-symbol blocks); default is the
-        real count ``b1 - blocks_done``.
+        Does NOT advance the session (see :meth:`_commit`). Lane-axis padding
+        to the jit shape budget is the caller's job (``engine._pad_lanes``) —
+        solo and pooled launches share that mechanism, so pad lanes are
+        identical zero-symbol blocks on both paths.
         """
         b0 = self._blocks_done
         k = b1 - b0
-        if k_lanes is None:
-            k_lanes = k
         cfg = self.cfg
         D, L, R = cfg.D, cfg.L, self.spec.code.R
         T = D + 2 * L
         lo = b0 * D - L  # global first stage of the combined window
-        hi_pad = (b0 + k_lanes) * D + L  # exclusive global end incl. padding
+        hi_pad = (b0 + k) * D + L  # exclusive global end incl. padding
         left_pad = max(0, -lo)  # only the very first block reaches stage -L
         s0 = max(lo, 0) - self._base
         need = hi_pad - max(lo, 0)
-        window = self._buf[s0 : s0 + need]
+        window = self._store.read(s0, need)
         parts = []
         if left_pad:
             parts.append(np.zeros((left_pad, R), np.float32))
@@ -484,8 +569,8 @@ class DecoderSession:
             y = jnp.asarray(w)
             if cfg.effective_q is not None:
                 y = cfg.quantize(y)
-        idx = np.arange(T)[:, None] + np.arange(k_lanes)[None, :] * D
-        return jnp.transpose(y[idx], (0, 2, 1))  # (T, R, k_lanes)
+        idx = np.arange(T)[:, None] + np.arange(k)[None, :] * D
+        return jnp.transpose(y[idx], (0, 2, 1))  # (T, R, k)
 
     def _commit(self, b1: int) -> None:
         """Advance past blocks [blocks_done, b1); trim the consumed buffer."""
@@ -494,7 +579,7 @@ class DecoderSession:
         new_base = max(0, b1 * D - L)
         drop = new_base - self._base
         if drop > 0:
-            self._buf = self._buf[drop:]
+            self._store.drop_prefix(min(drop, len(self._store)))
             self._base = new_base
 
     def _decode_upto(self, b1: int) -> np.ndarray:
@@ -505,8 +590,10 @@ class DecoderSession:
             return np.zeros((0,), np.int32)
         # pad the block count to the engine's lane budget (power of two,
         # rounded once to the mesh shard count) so chunked streams hit a
-        # bounded set of jit shapes; pad-lane bits are trimmed by the backend
-        blocks = self._frame_ready(b1, k_lanes=self.engine._lane_budget(k))
+        # bounded set of jit shapes; pad-lane bits are trimmed by the backend.
+        # _pad_lanes is the SAME mechanism the pooled launch uses, so a solo
+        # flush and a pooled flush build identical launches lane for lane
+        blocks = self.engine._pad_lanes(self._frame_ready(b1))
         bits = self.engine._decode_blocks(blocks, (k,), self._interpret)  # (D, k)
         out = np.asarray(jnp.transpose(bits), dtype=np.int32).reshape(-1)
         self._commit(b1)

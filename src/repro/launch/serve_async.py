@@ -1,0 +1,432 @@
+"""Async decode serving: admission → paged slabs → deadline dispatch → delivery.
+
+The kernels already turn coalesced blocks into Gb/s (decode_batch, radix-4 /
+matrix ACS, mesh sharding); what they cannot do is absorb the arrival
+jitter of real traffic — a synchronous serve loop either launches tiny
+batches (latency-bound chunks arrive alone) or stalls streams (waiting for
+a full batch). This module is the missing layer, four stages deep:
+
+* **admission** — :meth:`AsyncStream.send` buffers a chunk into the
+  stream's session state. Admission is bounded two ways: a cap on pool-wide
+  ready-but-undecoded blocks (``max_pending_blocks``) and the symbol slab's
+  fixed page budget (:class:`~repro.launch.slab.SymbolSlab`). Hitting
+  either APPLIES BACKPRESSURE — the send awaits the next dispatch instead
+  of growing a queue — or raises :class:`Backpressure` when the service is
+  configured non-blocking.
+* **paging** — per-stream symbol state (the overlap tail + puncture phase)
+  lives in slab pages drawn from a shared free-list, so millions of
+  short-lived streams reuse a constant pool of pages instead of churning
+  per-session allocations (DESIGN.md §13).
+* **deadline dispatch** — a :class:`DeadlineBatcher` fires
+  ``SessionPool.step()`` when the pool has ``max_batch_blocks`` ready
+  blocks (throughput trigger) OR the oldest undispatched chunk has waited
+  ``deadline_ms`` (latency trigger), whichever comes first. The batcher is
+  a pure function of an injectable clock, so trigger behaviour is testable
+  under a fake clock with no sleeps.
+* **delivery** — decoded bits land per stream (:meth:`AsyncStream.take` /
+  the tail from :meth:`AsyncStream.finish`), and every admitted chunk's
+  latency (admission → the step that decoded its last symbol) feeds the
+  p50/p99 + sustained-Mb/s accounting in :meth:`AsyncDecodeService.metrics`.
+
+Every decode goes through the same ``SessionPool`` launches as the
+synchronous driver, so service output is bit-exact to per-stream one-shot
+``engine.decode`` by the pool's existing invariant — the async layer only
+decides WHEN ``step()`` runs, never what a launch contains.
+
+    async with AsyncDecodeService(slab=SymbolSlab(256, 96, 2)) as svc:
+        stream = svc.open(engine)
+        await stream.send(chunk)           # backpressure-aware
+        ...
+        bits = await stream.finish(n_bits)  # take() fold + flushed tail
+"""
+
+from __future__ import annotations
+
+import asyncio
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.launch.serve_decoder import SessionPool
+from repro.launch.slab import SlabExhausted, SymbolSlab
+
+__all__ = [
+    "Backpressure",
+    "DeadlineBatcher",
+    "AsyncStream",
+    "AsyncDecodeService",
+    "run_poisson_trace",
+]
+
+
+class Backpressure(RuntimeError):
+    """Admission refused: the service is at capacity (non-blocking mode)."""
+
+
+class DeadlineBatcher:
+    """The deadline-or-batch-size dispatch trigger, as a pure clocked object.
+
+    ``note_feed()`` marks the arrival of the oldest currently-undispatched
+    chunk; ``due(pending_blocks)`` answers "fire now?"; ``fired()`` resets
+    the deadline arm after a dispatch. All time comes from the injected
+    ``clock``, so a fake clock makes every trigger decision deterministic.
+
+    Semantics (DESIGN.md §13): fire iff at least one block is ready AND
+    (ready blocks ≥ ``max_batch_blocks`` OR the oldest undispatched chunk
+    is ≥ ``deadline_s`` old). A dispatch clears the arm; chunks that were
+    buffered but did not complete a block re-arm it on their stream's next
+    feed.
+    """
+
+    def __init__(
+        self,
+        max_batch_blocks: int,
+        deadline_s: float,
+        *,
+        clock=time.monotonic,
+    ):
+        if max_batch_blocks < 1:
+            raise ValueError(f"max_batch_blocks must be ≥ 1, got {max_batch_blocks}")
+        if deadline_s < 0:
+            raise ValueError(f"deadline_s must be ≥ 0, got {deadline_s}")
+        self.max_batch_blocks = max_batch_blocks
+        self.deadline_s = deadline_s
+        self._clock = clock
+        self._oldest: float | None = None
+
+    def note_feed(self) -> None:
+        if self._oldest is None:
+            self._oldest = self._clock()
+
+    def due(self, pending_blocks: int) -> bool:
+        if pending_blocks <= 0:
+            return False
+        if pending_blocks >= self.max_batch_blocks:
+            return True
+        return (
+            self._oldest is not None
+            and self._clock() - self._oldest >= self.deadline_s
+        )
+
+    def timeout(self) -> float | None:
+        """Seconds until the deadline would fire (None = nothing armed)."""
+        if self._oldest is None:
+            return None
+        return max(0.0, self.deadline_s - (self._clock() - self._oldest))
+
+    def fired(self) -> None:
+        self._oldest = None
+
+
+class AsyncStream:
+    """One stream's handle on an :class:`AsyncDecodeService`.
+
+    Wraps a pooled session; decoded bits are drained with :meth:`take` (or
+    folded into :meth:`finish`, same contract as ``PooledSession``). Tracks
+    the admission time and buffered-stage watermark of every in-flight
+    chunk for the service's latency accounting.
+    """
+
+    def __init__(self, service: "AsyncDecodeService", handle):
+        self._service = service
+        self._handle = handle
+        self._inflight: deque[tuple[float, int]] = deque()  # (t_admit, watermark)
+        self.finished = False
+
+    async def send(self, chunk) -> None:
+        """Admit one chunk (backpressure-aware; see the module docstring)."""
+        await self._service._admit(self, chunk)
+
+    def take(self) -> np.ndarray:
+        """Drain every decoded bit delivered by dispatches so far."""
+        return self._handle.take()
+
+    async def finish(self, n_bits: int | None = None) -> np.ndarray:
+        """Flush the stream and release its slab pages; returns undrained
+        delivery plus the tail, totalling ``n_bits`` with prior takes."""
+        return await self._service._finish(self, n_bits)
+
+    @property
+    def bits_emitted(self) -> int:
+        return self._handle.bits_emitted
+
+    # ---- service internals ---------------------------------------------------------
+    def _note_admitted(self, t: float) -> None:
+        s = self._handle._session
+        self._inflight.append((t, s._base + len(s._store)))
+
+    def _complete_upto(self, now: float) -> None:
+        """Resolve chunks whose every buffered stage is now decoded."""
+        s = self._handle._session
+        done_stages = s._blocks_done * s.cfg.D
+        lats = self._service._latencies_s
+        while self._inflight and self._inflight[0][1] <= done_stages:
+            t, _ = self._inflight.popleft()
+            lats.append(now - t)
+
+    def _drain_inflight(self, now: float) -> None:
+        lats = self._service._latencies_s
+        while self._inflight:
+            t, _ = self._inflight.popleft()
+            lats.append(now - t)
+
+
+class AsyncDecodeService:
+    """The asyncio front-end over a :class:`SessionPool` (module docstring).
+
+    Parameters
+    ----------
+    max_batch_blocks: ready blocks that trigger an immediate dispatch.
+    deadline_ms: max age of the oldest undispatched chunk before a dispatch
+        fires anyway (the tail-latency knob).
+    max_pending_blocks: admission cap on pool-wide ready-but-undecoded
+        blocks (default ``4 × max_batch_blocks``); senders beyond it wait.
+    slab: shared :class:`SymbolSlab` for paged session state (None = each
+        session keeps the default per-session array store).
+    clock: time source for the batcher and latency accounting. With a fake
+        clock, drive dispatch synchronously via :meth:`poll` — the
+        background task's waits use real event-loop time.
+    block_on_backpressure: False turns waiting senders into
+        :class:`Backpressure` raises (admission-control mode).
+    """
+
+    def __init__(
+        self,
+        *,
+        max_batch_blocks: int = 32,
+        deadline_ms: float = 5.0,
+        max_pending_blocks: int | None = None,
+        slab: SymbolSlab | None = None,
+        clock=time.monotonic,
+        block_on_backpressure: bool = True,
+    ):
+        self._pool = SessionPool()
+        self._slab = slab
+        self._clock = clock
+        self._batcher = DeadlineBatcher(
+            max_batch_blocks, deadline_ms / 1e3, clock=clock
+        )
+        self.max_pending_blocks = (
+            max_pending_blocks if max_pending_blocks is not None else 4 * max_batch_blocks
+        )
+        if self.max_pending_blocks < 1:
+            raise ValueError(
+                f"max_pending_blocks must be ≥ 1, got {self.max_pending_blocks}"
+            )
+        self.block_on_backpressure = block_on_backpressure
+        self._streams: list[AsyncStream] = []
+        self._latencies_s: list[float] = []
+        self._work = asyncio.Event()  # a chunk was admitted
+        self._space = asyncio.Event()  # a dispatch freed capacity/pages
+        self._task: asyncio.Task | None = None
+        self._closing = False
+        self.dispatches = 0
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        self._bits_delivered = 0
+
+    # ---- lifecycle -----------------------------------------------------------------
+    async def __aenter__(self) -> "AsyncDecodeService":
+        self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.aclose()
+
+    def start(self) -> None:
+        """Start the background dispatcher task (idempotent; must be called
+        from inside a running event loop — fake-clock tests skip it and
+        drive :meth:`poll` directly)."""
+        if self._task is None:
+            self._task = asyncio.get_running_loop().create_task(self._run())
+
+    async def aclose(self) -> None:
+        """Stop dispatching; flush nothing (streams own their finish)."""
+        self._closing = True
+        self._space.set()  # wake blocked senders so they observe the close
+        if self._task is not None:
+            self._task.cancel()
+            try:
+                await self._task
+            except asyncio.CancelledError:
+                pass
+            self._task = None
+
+    def open(self, engine, *, interpret: bool | None = None) -> AsyncStream:
+        """Admit a new stream; its session state pages out of the slab."""
+        if self._closing:
+            raise RuntimeError("service is closing")
+        store = self._slab.open_store() if self._slab is not None else None
+        handle = self._pool.open(engine, interpret=interpret, store=store)
+        stream = AsyncStream(self, handle)
+        self._streams.append(stream)
+        return stream
+
+    # ---- dispatch ------------------------------------------------------------------
+    def poll(self) -> bool:
+        """Fire one coalesced dispatch if the trigger is due; returns whether
+        it fired. The background task calls this; fake-clock tests drive it
+        directly for deterministic trigger sequences."""
+        if not self._batcher.due(self._pool.pending_blocks()):
+            return False
+        self._dispatch()
+        return True
+
+    def _dispatch(self) -> None:
+        self._batcher.fired()
+        before = sum(st._handle.bits_emitted for st in self._streams)
+        self._pool.step()
+        self.dispatches += 1
+        now = self._clock()
+        delivered = sum(st._handle.bits_emitted for st in self._streams) - before
+        if delivered:
+            self._bits_delivered += delivered
+            self._t_last = now
+        for stream in self._streams:
+            stream._complete_upto(now)
+        self._space.set()  # decoded blocks dropped pages + pending count
+
+    async def _run(self) -> None:
+        while True:
+            self._work.clear()
+            timeout = (
+                self._batcher.timeout() if self._pool.pending_blocks() > 0 else None
+            )
+            if timeout is None:
+                await self._work.wait()
+            else:
+                try:
+                    await asyncio.wait_for(self._work.wait(), timeout)
+                except asyncio.TimeoutError:
+                    pass
+            self.poll()
+            # yield so delivery consumers run between dispatches
+            await asyncio.sleep(0)
+
+    # ---- admission -----------------------------------------------------------------
+    async def _admit(self, stream: AsyncStream, chunk) -> None:
+        if stream.finished:
+            raise ValueError("send() on a finished stream")
+        while True:
+            if self._closing:
+                raise RuntimeError("service is closing")
+            if self._pool.pending_blocks() >= self.max_pending_blocks:
+                await self._wait_for_space("pending-block cap")
+                continue
+            try:
+                # session ingest is atomic w.r.t. slab exhaustion: page
+                # capacity is reserved before any symbol is written, so a
+                # failed admit can simply retry after the next dispatch
+                stream._handle.feed(chunk)
+            except SlabExhausted:
+                if self._pool.pending_blocks() <= 0:
+                    # nothing a dispatch could free — the chunk cannot fit
+                    raise
+                await self._wait_for_space("slab pages")
+                continue
+            break
+        now = self._clock()
+        if self._t_first is None:
+            self._t_first = now
+        stream._note_admitted(now)
+        self._batcher.note_feed()
+        self._work.set()
+
+    async def _wait_for_space(self, why: str) -> None:
+        if not self.block_on_backpressure:
+            raise Backpressure(f"admission refused: {why} exhausted")
+        self._space.clear()
+        self._work.set()  # ensure the dispatcher wakes to make progress
+        await self._space.wait()
+
+    async def _finish(self, stream: AsyncStream, n_bits: int | None) -> np.ndarray:
+        if stream.finished:
+            raise ValueError("finish() called twice on one stream")
+        before = stream._handle.bits_emitted
+        bits = stream._handle.finish(n_bits)  # take() fold + shared flush plan
+        now = self._clock()
+        self._bits_delivered += stream._handle.bits_emitted - before
+        self._t_last = now
+        stream._drain_inflight(now)
+        stream.finished = True
+        self._pool.close(stream._handle)  # idempotent pool exit
+        stream._handle._session.close()  # slab pages → free-list
+        self._streams.remove(stream)  # keep the live list O(live streams)
+        self._space.set()  # freed pages may unblock waiting senders
+        return bits
+
+    # ---- accounting ----------------------------------------------------------------
+    def metrics(self) -> dict:
+        """Chunk-latency percentiles + sustained throughput so far.
+
+        ``p50_ms``/``p99_ms`` are None until there are latency samples
+        (guarding ``np.percentile`` on empty input); with fewer than ~20
+        samples the p99 is the interpolated max and should be read as such.
+        """
+        lat = np.asarray(self._latencies_s, np.float64)
+        span = (
+            self._t_last - self._t_first
+            if self._t_first is not None and self._t_last is not None
+            else 0.0
+        )
+        return dict(
+            chunks=int(lat.size),
+            dispatches=self.dispatches,
+            launches=self._pool.launches,
+            bits_delivered=self._bits_delivered,
+            span_s=span,
+            sustained_mbps=(
+                self._bits_delivered / span / 1e6 if span > 0 else None
+            ),
+            p50_ms=float(np.percentile(lat, 50) * 1e3) if lat.size else None,
+            p99_ms=float(np.percentile(lat, 99) * 1e3) if lat.size else None,
+            slab_pages_high_water=(
+                self._slab.high_water if self._slab is not None else None
+            ),
+        )
+
+
+async def run_poisson_trace(
+    engine,
+    ys,
+    n_bits_list,
+    *,
+    chunk_symbols: int,
+    rate_chunks_per_s: float,
+    seed: int = 0,
+    service_kwargs: dict | None = None,
+    slab: SymbolSlab | None = None,
+) -> tuple[list[np.ndarray], dict]:
+    """Drive ``len(ys)`` concurrent streams through the service under a
+    Poisson arrival process and return (per-stream bits, service metrics).
+
+    Each stream ``i`` sends ``ys[i]`` in ``chunk_symbols``-sized chunks with
+    i.i.d. exponential inter-arrival gaps at ``rate_chunks_per_s``
+    (independent per stream — the aggregate arrival process at the service
+    is the superposition, i.e. Poisson). Chunk CONTENT is independent of
+    timing, so the decoded bits are bit-exact to per-stream one-shot
+    ``engine.decode`` no matter how the trace interleaves — the property
+    the serving tests pin.
+    """
+    service_kwargs = dict(service_kwargs or {})
+    async with AsyncDecodeService(slab=slab, **service_kwargs) as svc:
+
+        async def one(i: int) -> np.ndarray:
+            stream = svc.open(engine)
+            y = np.asarray(ys[i])
+            # independent per-stream rng: the trace is reproducible no matter
+            # how the event loop interleaves the stream tasks
+            rng = np.random.default_rng(seed + 7919 * i)
+            gaps = rng.exponential(1.0 / rate_chunks_per_s, -(-len(y) // chunk_symbols))
+            outs = []
+            for j, lo in enumerate(range(0, len(y), chunk_symbols)):
+                await asyncio.sleep(float(gaps[j]))
+                await stream.send(y[lo : lo + chunk_symbols])
+                outs.append(stream.take())
+            outs.append(await stream.finish(n_bits_list[i]))
+            return np.concatenate(outs)
+
+        bits = await asyncio.gather(*[one(i) for i in range(len(ys))])
+        report = svc.metrics()
+    return list(bits), report

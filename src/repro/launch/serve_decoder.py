@@ -75,22 +75,29 @@ class PooledSession:
         return out
 
     def finish(self, n_bits: int | None = None) -> np.ndarray:
-        """Flush the remaining blocks (zero-padded tail) and return the tail
-        bits, trimmed so take()+finish() totals ``n_bits``. Undelivered
-        step() output must be drained with :meth:`take` first."""
+        """Flush the stream: any undrained step() output first, then the
+        remaining blocks (zero-padded tail), trimmed so the session's total
+        delivery is ``n_bits``.
+
+        Undelivered step() output is FOLDED into the return value (an
+        implicit :meth:`take`), so ``finish`` alone always accounts for every
+        decoded bit — the old contract silently dropped queued bits when the
+        caller skipped ``take()``. The flush launch itself is framed and
+        trimmed by the same ``DecoderSession._finish_plan`` /
+        ``_frame_ready`` / ``_pad_lanes`` path as ``DecoderSession.finish``,
+        so pooled and solo tails are bit-identical by construction for every
+        non-block-aligned ``n_bits``.
+        """
         s = self._session
-        D = s.cfg.D
-        if n_bits is None:
-            n_bits = s._base + len(s._buf)
-        n_blocks = -(-n_bits // D)
-        prior = s._blocks_done * D
+        n_bits, n_blocks, prior = s._finish_plan(n_bits)
+        head = self.take()  # fold undrained step() output instead of losing it
         if n_blocks > s._blocks_done:
             tail = self._pool._launch([(self, n_blocks)])[0]
         else:
             tail = np.zeros((0,), np.int32)
         tail = tail[: max(0, n_bits - prior)]
         self.bits_emitted += len(tail)
-        return tail
+        return np.concatenate([head, tail]) if len(head) else tail
 
     def _deliver(self, bits: np.ndarray) -> None:
         self._queue.append(bits)
@@ -125,23 +132,51 @@ class SessionPool:
         # lifetime: the group key describes the mesh by CONTENT (axis names,
         # shape, device ids — never ``id()``, whose reuse after GC could
         # falsely coalesce sessions on different meshes), and pinning the
-        # object here guarantees no two live members' meshes can alias
-        self._mesh_refs: dict[int, object] = {}
+        # object here guarantees no two live members' meshes can alias.
+        # Keyed by the PooledSession OBJECT (identity hash): an ``id(ps)``
+        # key could alias a closed-and-GC'd member's reused id onto a new
+        # member, dropping or double-releasing the wrong mesh pin
+        self._mesh_refs: dict[PooledSession, object] = {}
         self.launches = 0  # batched launches issued (for reporting/tests)
 
     # ---- membership ----------------------------------------------------------------
-    def open(self, engine: DecoderEngine, *, interpret: bool | None = None) -> PooledSession:
-        """Open a pooled streaming session on ``engine``."""
-        ps = PooledSession(self, engine.session(interpret=interpret))
-        self._members.append(ps)
-        if engine.mesh is not None:
-            self._mesh_refs[id(ps)] = engine.mesh
+    def open(
+        self,
+        engine: DecoderEngine,
+        *,
+        interpret: bool | None = None,
+        store=None,
+    ) -> PooledSession:
+        """Open a pooled streaming session on ``engine``.
+
+        ``store`` is forwarded to :meth:`DecoderEngine.session` (slab-paged
+        session state for the async serving layer). Pool state is mutated
+        atomically: a partially failed open leaves neither a membership entry
+        nor a mesh pin behind.
+        """
+        ps = PooledSession(self, engine.session(interpret=interpret, store=store))
+        try:
+            self._members.append(ps)
+            if engine.mesh is not None:
+                self._mesh_refs[ps] = engine.mesh
+        except BaseException:
+            if ps in self._members:
+                self._members.remove(ps)
+            self._mesh_refs.pop(ps, None)
+            raise
         return ps
 
     def close(self, ps: PooledSession) -> None:
-        """Remove a session from the pool (it keeps its buffered state)."""
-        self._members.remove(ps)
-        self._mesh_refs.pop(id(ps), None)
+        """Remove a session from the pool (it keeps its buffered state).
+
+        Idempotent: closing an already-closed (or never-opened) member is a
+        no-op, and the member's mesh pin is released exactly once.
+        """
+        try:
+            self._members.remove(ps)
+        except ValueError:
+            pass
+        self._mesh_refs.pop(ps, None)
 
     def __len__(self) -> int:
         return len(self._members)
@@ -273,6 +308,19 @@ def _make_stream(spec, n_bits: int, ebn0: float, seed: int):
     return payload, y
 
 
+def _latency_summary(lat_ms) -> str:
+    """p50/p99 of a latency sample, guarded for tiny sample counts —
+    ``np.percentile`` on an empty array raises, and a p99 quoted from a
+    handful of chunks is noise dressed as a tail, so say so."""
+    lat = np.asarray(lat_ms, np.float64)
+    if lat.size == 0:
+        return "no latency samples"
+    out = f"p50={np.percentile(lat, 50):.1f} ms p99={np.percentile(lat, 99):.1f} ms"
+    if lat.size < 20:  # p99 interpolated from < 20 samples ≈ the max
+        out += f" (n={lat.size}: p99≈max)"
+    return out
+
+
 def _serve_single(engine, spec, cfg, args) -> None:
     n_bits = args.chunk_bits * args.n_chunks
     payload, y = _make_stream(spec, n_bits, args.ebn0, args.seed)
@@ -284,16 +332,18 @@ def _serve_single(engine, spec, cfg, args) -> None:
         t1 = time.perf_counter()
         decoded.append(sess.decode(y[lo:hi]))
         lat_ms.append((time.perf_counter() - t1) * 1e3)
+    # the finish flush decodes the final (often largest) window — leaving it
+    # out of lat_ms reported a p99 that omitted the worst chunk
+    t1 = time.perf_counter()
     decoded.append(sess.finish(n_bits))
+    lat_ms.append((time.perf_counter() - t1) * 1e3)
     dt = time.perf_counter() - t0
 
     bits = np.concatenate(decoded)
     ber = float(np.mean(bits != payload))
-    lat = np.array(lat_ms)
     print(
         f"[serve_decoder] {n_bits} bits in {dt*1e3:.0f} ms → {n_bits/dt/1e6:.2f} Mbps; "
-        f"chunk latency p50={np.percentile(lat, 50):.1f} ms "
-        f"p99={np.percentile(lat, 99):.1f} ms"
+        f"chunk latency {_latency_summary(lat_ms)}"
     )
     print(f"[serve_decoder] BER = {ber:.2e} ({int(ber * n_bits)} errors)")
 
@@ -326,14 +376,67 @@ def _serve_pooled(engine, spec, cfg, args) -> None:
     errors = sum(
         int(np.sum(np.concatenate(o) != p)) for o, (p, _) in zip(outs, streams)
     )
-    steps = np.array(step_ms)
     print(
         f"[serve_decoder] {args.streams} streams × {n_bits} bits in {dt*1e3:.0f} ms "
         f"→ aggregate {total_bits/dt/1e6:.2f} Mbps; "
         f"{pool.launches} batched launches "
         f"({args.n_chunks * args.streams} chunks fed); "
-        f"step p50={np.percentile(steps, 50):.1f} ms "
-        f"p99={np.percentile(steps, 99):.1f} ms"
+        f"step latency {_latency_summary(step_ms)}"
+    )
+    print(
+        f"[serve_decoder] BER = {errors/total_bits:.2e} ({errors} errors "
+        f"over {total_bits} bits)"
+    )
+
+
+def _serve_async(engine, spec, cfg, args) -> None:
+    """Drive the asyncio service under a Poisson arrival trace (the
+    serving-layer shape: admission → paged slabs → deadline dispatch)."""
+    import asyncio
+
+    from repro.launch.serve_async import run_poisson_trace
+    from repro.launch.slab import SymbolSlab
+
+    n_bits = args.chunk_bits * args.n_chunks
+    streams = [
+        _make_stream(spec, n_bits, args.ebn0, args.seed + i)
+        for i in range(args.streams)
+    ]
+    ys = [y for _, y in streams]
+    chunk_symbols = max(1, len(ys[0]) // args.n_chunks)
+    slab = SymbolSlab(
+        n_pages=args.slab_pages,
+        page_stages=cfg.D + 2 * cfg.L,
+        R=spec.code.R,
+    )
+    t0 = time.perf_counter()
+    bits, report = asyncio.run(
+        run_poisson_trace(
+            engine,
+            ys,
+            [n_bits] * len(ys),
+            chunk_symbols=chunk_symbols,
+            rate_chunks_per_s=args.rate_chunks_per_s,
+            seed=args.seed,
+            slab=slab,
+            service_kwargs=dict(
+                max_batch_blocks=args.max_batch_blocks,
+                deadline_ms=args.deadline_ms,
+            ),
+        )
+    )
+    dt = time.perf_counter() - t0
+    total_bits = n_bits * args.streams
+    errors = sum(
+        int(np.sum(b != p)) for b, (p, _) in zip(bits, streams)
+    )
+    print(
+        f"[serve_decoder] async: {args.streams} streams × {n_bits} bits in "
+        f"{dt*1e3:.0f} ms → sustained "
+        f"{report['sustained_mbps'] if report['sustained_mbps'] is not None else float('nan'):.2f} Mbps "
+        f"({report['dispatches']} dispatches, {report['launches']} launches, "
+        f"slab high-water {report['slab_pages_high_water']} pages); "
+        f"chunk latency p50={report['p50_ms']:.1f} ms p99={report['p99_ms']:.1f} ms"
     )
     print(
         f"[serve_decoder] BER = {errors/total_bits:.2e} ({errors} errors "
@@ -413,6 +516,37 @@ def main() -> None:
     )
     ap.add_argument("--ebn0", type=float, default=4.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--serve-async",
+        action="store_true",
+        help="drive the asyncio serving layer (repro.launch.serve_async) "
+        "under a Poisson arrival trace instead of the synchronous loop",
+    )
+    ap.add_argument(
+        "--deadline-ms",
+        type=float,
+        default=5.0,
+        help="async dispatch deadline: max age of the oldest undispatched "
+        "chunk before a coalesced step fires anyway",
+    )
+    ap.add_argument(
+        "--max-batch-blocks",
+        type=int,
+        default=32,
+        help="async dispatch size trigger: ready blocks that fire a step",
+    )
+    ap.add_argument(
+        "--slab-pages",
+        type=int,
+        default=1024,
+        help="session-state slab capacity (pages of D+2L stages each)",
+    )
+    ap.add_argument(
+        "--rate-chunks-per-s",
+        type=float,
+        default=1000.0,
+        help="per-stream Poisson chunk arrival rate for --serve-async",
+    )
     args = ap.parse_args()
 
     from repro.launch.mesh import make_decode_mesh, maybe_init_distributed
@@ -458,7 +592,9 @@ def main() -> None:
         f"{args.streams} stream(s) × {args.chunk_bits * args.n_chunks} payload bits "
         f"in {args.n_chunks} chunks at Eb/N0={args.ebn0} dB"
     )
-    if args.streams > 1:
+    if args.serve_async:
+        _serve_async(engine, spec, cfg, args)
+    elif args.streams > 1:
         _serve_pooled(engine, spec, cfg, args)
     else:
         _serve_single(engine, spec, cfg, args)

@@ -1,0 +1,533 @@
+"""Serving-layer suite: pool lifecycle, paged slabs, async dispatch.
+
+Four layers, matching DESIGN.md §13:
+
+* slab allocator + paged session store (free-list recycling, exhaustion,
+  page-boundary reads, bit-exactness of a slab-backed session);
+* SessionPool lifecycle (the PR's bugfix sweep): finish-before-step,
+  finish folding undrained step() output, pooled-vs-solo finish
+  bit-identity for every non-block-aligned tail across the golden CodeSpec
+  set × all metric modes, idempotent close, mesh pins that survive id
+  reuse after GC;
+* deadline-or-size dispatch determinism under a fake clock (no sleeps, no
+  background task — the trigger is a pure function of the injected clock);
+* admission control: bounded queues block (or raise in non-blocking mode)
+  instead of growing, slab exhaustion maps to backpressure, and the
+  64-stream Poisson trace decodes bit-exactly vs one-shot ``decode()`` no
+  matter how the event loop interleaves it.
+"""
+
+import asyncio
+import gc
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import transmit
+from repro.core.codespec import available_code_specs, get_code_spec
+from repro.core.encoder import encode_jax, terminate
+from repro.core.engine import ArraySessionStore, DecoderEngine
+from repro.core.pbvd import PBVDConfig
+from repro.launch.serve_async import (
+    AsyncDecodeService,
+    Backpressure,
+    DeadlineBatcher,
+    run_poisson_trace,
+)
+from repro.launch.serve_decoder import SessionPool, _latency_summary
+from repro.launch.slab import PagedSessionStore, SlabExhausted, SymbolSlab
+
+GEOM = dict(D=64, L=16, q=8)
+
+
+def _tx_stream(name: str, n_bits: int, ebn0: float, seed: int):
+    spec = get_code_spec(name)
+    rng = np.random.default_rng(seed)
+    payload = rng.integers(0, 2, n_bits)
+    coded = encode_jax(jnp.asarray(terminate(payload, spec.code)), spec.code)
+    tx = spec.puncture_stream(coded) if spec.is_punctured else coded
+    y = np.asarray(transmit(jax.random.PRNGKey(seed), tx, ebn0, spec.rate))
+    return spec, payload, y
+
+
+def _engine(spec, metric_mode="f32", **overrides):
+    kw = dict(GEOM)
+    kw.update(overrides)
+    return DecoderEngine(
+        PBVDConfig(spec=spec, backend="ref", metric_mode=metric_mode, **kw)
+    )
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# SymbolSlab + PagedSessionStore
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+def test_slab_alloc_free_recycles_lifo_and_zeroes():
+    slab = SymbolSlab(n_pages=3, page_stages=4, R=2)
+    a, b = slab.alloc(), slab.alloc()
+    assert slab.pages_in_use == 2 and slab.high_water == 2
+    slab._data[a] = 7.0  # dirty it
+    slab.free(a)
+    assert slab.pages_free == 2
+    c = slab.alloc()  # LIFO: the just-freed page comes back first
+    assert c == a
+    assert np.all(slab._data[c] == 0.0)  # zeroed on free → BM-neutral alloc
+    with pytest.raises(ValueError, match="double free"):
+        slab.free(b)
+        slab.free(b)
+    with pytest.raises(ValueError):
+        SymbolSlab(0, 4, 2)
+
+
+@pytest.mark.tier1
+def test_slab_exhaustion_is_explicit():
+    slab = SymbolSlab(n_pages=2, page_stages=8, R=2)
+    store = slab.open_store()
+    store.append(np.ones((16, 2)))  # fills both pages
+    with pytest.raises(SlabExhausted):
+        store.append(np.ones((1, 2)))
+    store.drop_prefix(8)  # retire one page back to the free-list
+    store.append(np.ones((8, 2)))  # recycled page absorbs the growth
+    assert slab.pages_in_use == 2
+
+
+@pytest.mark.tier1
+def test_paged_store_matches_array_store_reference():
+    """Randomized append/grow/scatter/read/drop: the paged store is
+    observationally identical to the contiguous reference store."""
+    rng = np.random.default_rng(3)
+    slab = SymbolSlab(n_pages=64, page_stages=5, R=3)  # odd page size on purpose
+    paged, ref = slab.open_store(), ArraySessionStore(3)
+    for _ in range(300):
+        op = rng.integers(0, 4)
+        if op == 0:
+            rows = rng.normal(size=(int(rng.integers(0, 12)), 3)).astype(np.float32)
+            paged.append(rows)
+            ref.append(rows)
+        elif op == 1:
+            n = int(rng.integers(0, 7))
+            paged.grow(n)
+            ref.grow(n)
+        elif op == 2 and len(ref):
+            k = int(rng.integers(1, 5))
+            si = rng.integers(0, len(ref), k)
+            sj = rng.integers(0, 3, k)
+            v = rng.normal(size=k).astype(np.float32)
+            paged.scatter(si, sj, v)
+            ref.scatter(si, sj, v)
+        elif op == 3 and len(ref):
+            n = int(rng.integers(0, len(ref) + 1))
+            paged.drop_prefix(n)
+            ref.drop_prefix(n)
+        assert len(paged) == len(ref)
+        lo = int(rng.integers(0, len(ref) + 1))
+        n = int(rng.integers(0, len(ref) - lo + 3))  # deliberately over-reads
+        np.testing.assert_array_equal(paged.read(lo, n), ref.read(lo, n))
+    paged.close()
+    assert slab.pages_in_use == 0
+    with pytest.raises(ValueError, match="closed"):
+        paged.append(np.zeros((1, 3)))
+    paged.close()  # idempotent
+
+
+@pytest.mark.tier1
+def test_slab_backed_session_bit_exact_and_releases_pages():
+    spec, _, y = _tx_stream("ccsds-3/4", 512, 4.5, 9)
+    eng = _engine(spec)
+    ref = np.asarray(eng.decode(jnp.asarray(y), 512))
+    slab = SymbolSlab(n_pages=32, page_stages=GEOM["D"] + 2 * GEOM["L"], R=spec.code.R)
+    sess = eng.session(store=slab.open_store())
+    rng = np.random.default_rng(0)
+    out, pos = [], 0
+    while pos < len(y):
+        n = int(rng.integers(1, 150))
+        out.append(sess.decode(y[pos : pos + n]))
+        pos += n
+    out.append(sess.finish(512))
+    np.testing.assert_array_equal(np.concatenate(out), ref)
+    assert slab.high_water > 0
+    sess.close()
+    assert slab.pages_in_use == 0  # every page back on the free-list
+
+
+# ---------------------------------------------------------------------------
+# SessionPool lifecycle: the finish paths
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+@pytest.mark.parametrize("name", available_code_specs())
+@pytest.mark.parametrize("metric_mode", ["f32", "i16", "i8"])
+def test_pooled_finish_bit_identical_to_solo_ragged_tails(name, metric_mode):
+    """Acceptance: PooledSession.finish ≡ DecoderSession.finish for every
+    non-block-aligned tail in the golden CodeSpec set, every metric mode."""
+    spec, _, y = _tx_stream(name, 300, 4.5, 21)
+    eng = _engine(spec, metric_mode=metric_mode)
+    D = GEOM["D"]
+    for n_bits in (300, 299, 257, 2 * D + 1, 2 * D - 1, 97):
+        solo = eng.session()
+        solo.ingest(y)
+        a = solo.finish(n_bits)
+        pool = SessionPool()
+        h = pool.open(eng)
+        h.feed(y)
+        b = h.finish(n_bits)
+        np.testing.assert_array_equal(a, b)
+        assert len(a) == n_bits
+        # and both equal the one-shot decode of the same stream
+        np.testing.assert_array_equal(
+            a, np.asarray(eng.decode(jnp.asarray(y), n_bits))
+        )
+
+
+@pytest.mark.tier1
+def test_pooled_finish_before_step_and_interleaved_steps():
+    spec, _, y = _tx_stream("ccsds", 400, 4.5, 4)
+    eng = _engine(spec)
+    ref = np.asarray(eng.decode(jnp.asarray(y), 400))
+
+    # finish before any step: the flush is the only launch
+    pool = SessionPool()
+    h = pool.open(eng)
+    h.feed(y)
+    np.testing.assert_array_equal(h.finish(400), ref)
+    assert h.bits_emitted == 400
+
+    # feed/step/feed/finish with takes in between
+    pool = SessionPool()
+    h = pool.open(eng)
+    h.feed(y[:300])
+    pool.step()
+    part = h.take()
+    h.feed(y[300:])
+    pool.step()
+    out = np.concatenate([part, h.take(), h.finish(400)])
+    np.testing.assert_array_equal(out, ref)
+
+
+@pytest.mark.tier1
+def test_pooled_finish_folds_undrained_queue():
+    """finish() without a prior take() must deliver the queued step() output
+    instead of silently dropping it (the old docstring caveat)."""
+    spec, _, y = _tx_stream("ccsds", 400, 4.5, 5)
+    eng = _engine(spec)
+    ref = np.asarray(eng.decode(jnp.asarray(y), 400))
+    pool = SessionPool()
+    h = pool.open(eng)
+    h.feed(y)
+    assert pool.step() > 0  # blocks decoded and queued on the session
+    out = h.finish(400)  # NO take() first — finish folds the queue
+    np.testing.assert_array_equal(out, ref)
+    assert len(h.take()) == 0  # nothing left behind
+    assert h.bits_emitted == 400
+
+
+# ---------------------------------------------------------------------------
+# SessionPool lifecycle: open/close
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+def test_pool_close_is_idempotent():
+    spec, _, y = _tx_stream("ccsds", 128, 5.0, 6)
+    eng = _engine(spec)
+    pool = SessionPool()
+    h = pool.open(eng)
+    pool.close(h)
+    pool.close(h)  # second close: no ValueError, no state corruption
+    assert len(pool) == 0
+    h2 = pool.open(eng)
+    pool.close(h2)
+    pool.close(h)  # stale handle close after reuse: still a no-op
+    assert len(pool) == 0 and not pool._mesh_refs
+
+
+@pytest.mark.tier1
+def test_pool_mesh_pin_released_once_and_survives_id_reuse():
+    """The mesh pin is keyed by the member OBJECT: a closed member's GC'd
+    id being reused by a new member can neither drop nor double-release a
+    pin (the old ``id(ps)`` key could)."""
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    spec = get_code_spec("ccsds")
+    eng = DecoderEngine(
+        PBVDConfig(spec=spec, backend="ref", **GEOM), mesh=mesh, block_axes=("data",)
+    )
+    pool = SessionPool()
+    h1 = pool.open(eng)
+    assert len(pool._mesh_refs) == 1
+    pool.close(h1)
+    assert len(pool._mesh_refs) == 0
+    pool.close(h1)  # double close: pin already released, exactly once
+    assert len(pool._mesh_refs) == 0
+    del h1
+    gc.collect()
+    # new members after the old id is reusable: pins track exactly the live
+    # membership, keyed by the member objects themselves
+    handles = [pool.open(eng) for _ in range(4)]
+    assert set(pool._mesh_refs) == set(handles)
+    assert all(m is mesh for m in pool._mesh_refs.values())
+    for h in handles:
+        pool.close(h)
+    assert len(pool._mesh_refs) == 0
+
+
+@pytest.mark.tier1
+def test_pool_open_partial_failure_leaves_no_state():
+    """A failure while registering a new member rolls the pool back to a
+    clean state — no orphan member, no leaked mesh pin."""
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    spec = get_code_spec("ccsds")
+    eng = DecoderEngine(
+        PBVDConfig(spec=spec, backend="ref", **GEOM), mesh=mesh, block_axes=("data",)
+    )
+    pool = SessionPool()
+
+    class ExplodingDict(dict):
+        def __setitem__(self, k, v):
+            raise RuntimeError("registration failed")
+
+    pool._mesh_refs = ExplodingDict()
+    with pytest.raises(RuntimeError, match="registration failed"):
+        pool.open(eng)
+    assert len(pool) == 0 and len(pool._mesh_refs) == 0
+
+
+# ---------------------------------------------------------------------------
+# Deadline-or-size dispatch: deterministic under a fake clock
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+def test_deadline_batcher_fake_clock_determinism():
+    clk = FakeClock()
+    b = DeadlineBatcher(max_batch_blocks=4, deadline_s=0.010, clock=clk.now)
+    assert not b.due(0) and b.timeout() is None  # nothing pending, nothing armed
+    b.note_feed()
+    assert b.timeout() == pytest.approx(0.010)
+    assert not b.due(1)  # below size, before deadline
+    clk.advance(0.0099)
+    assert not b.due(3)
+    clk.advance(0.0001)
+    assert b.due(1)  # exactly at the deadline
+    assert b.due(4) and b.due(9)  # size trigger holds regardless
+    b.fired()
+    assert b.timeout() is None and not b.due(1)  # arm cleared by dispatch
+    b.note_feed()
+    b.note_feed()  # later feeds do not push the oldest arrival back
+    assert b.timeout() == pytest.approx(0.010)
+    assert b.due(4)  # size trigger is immediate even with a fresh arm
+    with pytest.raises(ValueError):
+        DeadlineBatcher(0, 1.0)
+    with pytest.raises(ValueError):
+        DeadlineBatcher(1, -1.0)
+
+
+@pytest.mark.tier1
+def test_service_dispatch_deadline_determinism_fake_clock():
+    """Drive the service's poll() by hand under a fake clock: the dispatch
+    sequence and every recorded chunk latency are exact numbers."""
+    spec, _, y = _tx_stream("ccsds", 256, 4.5, 8)
+    eng = _engine(spec)
+    ref = np.asarray(eng.decode(jnp.asarray(y), 256))
+    clk = FakeClock()
+
+    async def scenario():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,  # size trigger out of the way
+            deadline_ms=10.0,
+            max_pending_blocks=10_000,
+            clock=clk.now,
+        )  # NOT started: poll() is driven manually, no background task
+        stream = svc.open(eng)
+        await stream.send(y[: len(y) // 2])  # completes ≥ 1 block
+        assert svc.poll() is False  # deadline not yet reached
+        clk.advance(0.009)
+        assert svc.poll() is False
+        clk.advance(0.001)
+        assert svc.poll() is True  # fires exactly at the 10 ms deadline
+        assert svc.dispatches == 1
+        assert svc.poll() is False  # nothing ready → no spurious dispatch
+        clk.advance(5.0)
+        assert svc.poll() is False  # deadline arm was cleared by the fire
+        await stream.send(y[len(y) // 2 :])
+        clk.advance(0.010)
+        assert svc.poll() is True
+        clk.advance(0.003)
+        # take() was never called, so finish folds both dispatches' queued
+        # bits plus the flushed tail — the whole stream comes back here
+        return await stream.finish(256), svc
+
+    out, svc = asyncio.run(scenario())
+    np.testing.assert_array_equal(out, ref)
+    m = svc.metrics()
+    assert m["dispatches"] == 2
+    assert m["chunks"] == 2
+    assert m["p50_ms"] is not None and m["p99_ms"] is not None
+    # latencies are exact fake-clock deltas — the accounting is
+    # deterministic, not wall-clock-dependent
+    lats = sorted(round(t, 6) for t in svc._latencies_s)
+    assert lats[0] == pytest.approx(0.013)  # chunk 2: resolved at finish
+    assert lats[1] == pytest.approx(5.020)  # chunk 1: idle gap + 2nd deadline
+
+
+@pytest.mark.tier1
+def test_service_metrics_guard_small_samples():
+    svc = AsyncDecodeService(max_batch_blocks=1, deadline_ms=1.0)
+    m = svc.metrics()
+    assert m["chunks"] == 0
+    assert m["p50_ms"] is None and m["p99_ms"] is None and m["sustained_mbps"] is None
+    assert _latency_summary([]) == "no latency samples"
+    assert "p99≈max" in _latency_summary([1.0, 2.0])
+    assert "p99≈max" not in _latency_summary(list(range(50)))
+
+
+# ---------------------------------------------------------------------------
+# Backpressure: bounded admission
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+def test_backpressure_raises_in_nonblocking_mode():
+    spec, _, y = _tx_stream("ccsds", 512, 4.5, 12)
+    eng = _engine(spec)
+
+    async def scenario():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,
+            deadline_ms=0.0,  # manual poll() is due as soon as anything is pending
+            max_pending_blocks=2,
+            block_on_backpressure=False,
+        )
+        stream = svc.open(eng)
+        await stream.send(y[:300])  # ≥ 2 blocks ready → at the cap
+        assert svc._pool.pending_blocks() >= 2
+        with pytest.raises(Backpressure, match="pending-block cap"):
+            await stream.send(y[300:])
+        # a dispatch drains the pool; admission opens again
+        assert svc.poll() is True
+        await stream.send(y[300:])
+        return np.concatenate([stream.take(), await stream.finish(512)])
+
+    out = asyncio.run(scenario())
+    np.testing.assert_array_equal(out, np.asarray(eng.decode(jnp.asarray(y), 512)))
+
+
+@pytest.mark.tier1
+def test_backpressure_blocks_sender_until_dispatch():
+    """In blocking mode the bounded queue parks the sender instead of
+    growing: the send only completes after a dispatch frees capacity."""
+    spec, _, y = _tx_stream("ccsds", 512, 4.5, 13)
+    eng = _engine(spec)
+
+    async def scenario():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,
+            deadline_ms=0.0,  # manual poll() is due as soon as anything is pending
+            max_pending_blocks=2,
+        )
+        stream = svc.open(eng)
+        await stream.send(y[:300])
+        blocked = asyncio.ensure_future(stream.send(y[300:]))
+        for _ in range(5):
+            await asyncio.sleep(0)
+        assert not blocked.done()  # parked on the cap, not queued unboundedly
+        assert svc.poll() is True  # manual dispatch (service not started)
+        await asyncio.wait_for(blocked, timeout=5)
+        return np.concatenate([stream.take(), await stream.finish(512)])
+
+    out = asyncio.run(scenario())
+    np.testing.assert_array_equal(out, np.asarray(eng.decode(jnp.asarray(y), 512)))
+
+
+@pytest.mark.tier1
+def test_slab_exhaustion_backpressure_and_hopeless_admit():
+    spec, _, y = _tx_stream("ccsds", 512, 4.5, 14)
+    eng = _engine(spec)
+    T = GEOM["D"] + 2 * GEOM["L"]
+
+    async def scenario():
+        # 4 pages: exactly one stream's full-slab working set
+        slab = SymbolSlab(n_pages=4, page_stages=T, R=spec.code.R)
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,
+            deadline_ms=0.0,  # manual poll() is due as soon as anything is pending
+            slab=slab,
+            block_on_backpressure=False,
+        )
+        stream = svc.open(eng)
+        await stream.send(y[: 4 * T])  # fills the slab exactly
+        with pytest.raises(Backpressure, match="slab pages"):
+            # pages can only come back via a dispatch; non-blocking mode
+            # maps the allocator's exhaustion to admission refusal
+            await stream.send(y[4 * T :])
+        assert svc.poll() is True  # decode → commit → pages freed
+        await stream.send(y[4 * T :])  # recycled pages absorb the retry
+        bits = np.concatenate([stream.take(), await stream.finish(512)])
+        assert slab.pages_in_use == 0  # finish released the stream's pages
+        return bits
+
+    out = asyncio.run(scenario())
+    np.testing.assert_array_equal(out, np.asarray(eng.decode(jnp.asarray(y), 512)))
+
+    async def hopeless():
+        # a chunk bigger than the whole slab can never be admitted: that
+        # must raise even in blocking mode rather than deadlock
+        slab = SymbolSlab(n_pages=1, page_stages=8, R=spec.code.R)
+        svc = AsyncDecodeService(max_batch_blocks=1000, deadline_ms=0.0, slab=slab)
+        stream = svc.open(eng)
+        with pytest.raises(SlabExhausted):
+            await stream.send(y[:300])
+
+    asyncio.run(hopeless())
+
+
+# ---------------------------------------------------------------------------
+# The acceptance trace: 64 Poisson streams, bit-exact
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+def test_async_service_64_stream_poisson_bit_exact():
+    """64 concurrent streams under Poisson arrivals through the full stack
+    (admission → slab paging → deadline dispatch → delivery) decode
+    bit-exactly vs per-stream one-shot ``decode()``."""
+    S, n_bits = 64, 256
+    spec = get_code_spec("ccsds")
+    eng = _engine(spec)
+    payloads, ys = [], []
+    for i in range(S):
+        _, p, y = _tx_stream("ccsds", n_bits, 4.5, 40 + i)
+        payloads.append(p)
+        ys.append(y)
+    refs = [np.asarray(eng.decode(jnp.asarray(y), n_bits)) for y in ys]
+    T = GEOM["D"] + 2 * GEOM["L"]
+    slab = SymbolSlab(n_pages=6 * S, page_stages=T, R=spec.code.R)
+    bits, report = asyncio.run(
+        run_poisson_trace(
+            eng,
+            ys,
+            [n_bits] * S,
+            chunk_symbols=100,
+            rate_chunks_per_s=5000.0,
+            seed=3,
+            slab=slab,
+            service_kwargs=dict(max_batch_blocks=64, deadline_ms=2.0),
+        )
+    )
+    for b, r in zip(bits, refs):
+        np.testing.assert_array_equal(b, r)
+    assert report["chunks"] == sum(-(-len(y) // 100) for y in ys)
+    assert report["bits_delivered"] == S * n_bits
+    assert report["p50_ms"] is not None
+    assert 0 < report["slab_pages_high_water"] <= slab.n_pages
+    assert slab.pages_in_use == 0  # every stream's pages returned
+    # the dispatcher coalesced: far fewer pool steps than chunks
+    assert report["dispatches"] < report["chunks"]

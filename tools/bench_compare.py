@@ -63,10 +63,20 @@ def compare(
             f"{k}={v}" for k, v in sorted(new.items()) if not _is_measurement(k)
         )
         for key, new_val in new.items():
-            if not key.endswith("_mbps") or key not in old:
+            if key not in old:
                 continue
             old_val = old[key]
             if not isinstance(old_val, (int, float)) or old_val <= 0:
+                continue
+            if key.endswith("_ms"):
+                # latency is REPORTED next to the gated throughput (so a
+                # serve_latency tail blow-up is visible in the job log) but
+                # never gated: it overlaps the mbps signal and double-gating
+                # doubles the noise
+                ratio = float(new_val) / float(old_val)
+                print(f"info        {label}: {key} {old_val} → {new_val} ({ratio:.2f}×)")
+                continue
+            if not key.endswith("_mbps"):
                 continue
             matched += 1
             ratio = float(new_val) / float(old_val)
