@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ops import check_mesh_launch, pbvd_decode_blocks
+from repro.launch.faults import SymbolError, check_finite_symbols
 from .codespec import CodeSpec
 
 __all__ = ["ArraySessionStore", "DecoderEngine", "DecoderSession"]
@@ -264,6 +265,10 @@ class DecoderEngine:
         from .pbvd import frame_stream
 
         y = self._to_full_rate(y)
+        # reject NaN/Inf before framing: a non-finite symbol would corrupt
+        # the path metrics of every lane coalesced into the launch, and the
+        # f32 metric path never passes through quantize_soft's own check
+        check_finite_symbols(y, "DecoderEngine.decode")
         if n_bits is None:
             n_bits = int(y.shape[0])
         cfg = self.cfg
@@ -289,6 +294,8 @@ class DecoderEngine:
         dtypes = {np.dtype(getattr(y, "dtype", np.float64)) for y in ys}
         if len(shapes) != 1 or len(dtypes) != 1 or len(set(n_bits_list)) != 1:
             return None
+        for i, y in enumerate(ys):
+            check_finite_symbols(y, f"DecoderEngine.decode_batch (stream {i})")
         y0 = jnp.stack([self._to_full_rate(jnp.asarray(y)) for y in ys])  # (S, n, R)
         S, n_sym, R = y0.shape
         n_bits = n_bits_list[0] if n_bits_list[0] is not None else n_sym
@@ -306,13 +313,13 @@ class DecoderEngine:
     def _to_full_rate(self, y):
         if y.ndim == 1:
             if not self.spec.is_punctured:
-                raise ValueError(
+                raise SymbolError(
                     "1-D symbol stream given but the code spec is unpunctured; "
                     "pass (n_stages, R) soft symbols"
                 )
             return self.spec.depuncture_stream(jnp.asarray(y))
         if y.shape[-1] != self.spec.code.R:
-            raise ValueError(f"stream rank {y.shape[-1]} != code R {self.spec.code.R}")
+            raise SymbolError(f"stream rank {y.shape[-1]} != code R {self.spec.code.R}")
         return y
 
     def _decode_blocks(
@@ -496,6 +503,10 @@ class DecoderSession:
     def _ingest(self, chunk: np.ndarray) -> None:
         R = self.spec.code.R
         if chunk.size:
+            # validate BEFORE buffering: a rejected chunk must leave the
+            # session state untouched so the stream (or its quarantine) never
+            # sees a half-ingested chunk
+            check_finite_symbols(chunk, "session send()")
             # pre-quantized (integer) streams skip the session's quantization,
             # mirroring engine.decode; mixing dtypes would corrupt the buffer
             is_int = np.issubdtype(chunk.dtype, np.integer)
@@ -503,7 +514,7 @@ class DecoderSession:
                 self._int_dtype = chunk.dtype if is_int else None
                 self._started = True
             elif is_int != (self._int_dtype is not None):
-                raise ValueError(
+                raise SymbolError(
                     "cannot mix integer (pre-quantized) and float chunks "
                     "within one session"
                 )
@@ -511,7 +522,7 @@ class DecoderSession:
             if chunk.ndim != 1:
                 # a punctured wire format is the 1-D kept-symbol stream; a
                 # full-rate chunk would desynchronize the puncture phase
-                raise ValueError(
+                raise SymbolError(
                     f"punctured sessions take 1-D punctured symbol chunks, "
                     f"got shape {chunk.shape}"
                 )
@@ -529,7 +540,7 @@ class DecoderSession:
         elif chunk.ndim == 2 and chunk.shape[1] == R:
             self._store.append(chunk)
         else:
-            raise ValueError(
+            raise SymbolError(
                 f"chunk shape {chunk.shape} invalid for code R={R} "
                 f"(punctured={self.spec.is_punctured})"
             )

@@ -40,9 +40,18 @@ def quantize_soft(y: jnp.ndarray, q: int = 8, scale: float | None = None) -> jnp
     Clipping is SYMMETRIC at ±(2^(q-1)-1): the folded branch-metric path
     negates quantized symbols in-register, and the two's-complement minimum
     (-2^(q-1)) has no negation in q bits — admitting it would silently wrap.
+
+    Non-finite inputs are refused: ``jnp.clip(round(nan))`` quantizes NaN to
+    an in-range integer, silently corrupting the path metrics of every
+    stream coalesced into the same launch. Concrete inputs raise
+    :func:`repro.launch.faults.nonfinite_error` here; tracers pass through
+    (validation is an eager-boundary concern).
     """
     if q < 2 or q > 16:
         raise ValueError("q must be in [2, 16]")
+    from repro.launch.faults import check_finite_symbols
+
+    check_finite_symbols(y, "quantize_soft")
     qmax = (1 << (q - 1)) - 1
     if scale is None:
         scale = qmax / 4.0

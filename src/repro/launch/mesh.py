@@ -37,6 +37,7 @@ __all__ = [
     "make_local_mesh",
     "parse_mesh_spec",
     "make_decode_mesh",
+    "shrink_mesh",
     "maybe_init_distributed",
 ]
 
@@ -123,6 +124,38 @@ def make_decode_mesh(spec: str, *, devices=None):
             f"--xla_force_host_platform_device_count={need})"
         )
     return Mesh(np.asarray(devs[:need]).reshape(sizes), names)
+
+
+def shrink_mesh(mesh, new_shape, *, devices=None):
+    """Rebuild ``mesh`` at ``new_shape`` (same axis names) over surviving
+    devices — the mesh-loss fallback of :func:`repro.launch.elastic.
+    rescale_decode_engine`.
+
+    ``devices`` lists the survivors explicitly; by default the first
+    ``prod(new_shape)`` devices of the old mesh are kept (the right default
+    for rehearsals and tests — a real casualty passes the live device set).
+    Device choice never affects decoded bits: the decode mesh only places
+    independent lanes.
+    """
+    from jax.sharding import Mesh
+
+    new_shape = tuple(int(n) for n in new_shape)
+    if len(new_shape) != len(mesh.axis_names):
+        raise ValueError(
+            f"new_shape {new_shape} has {len(new_shape)} axes, mesh has "
+            f"{len(mesh.axis_names)} ({tuple(mesh.axis_names)})"
+        )
+    need = 1
+    for n in new_shape:
+        if n < 1:
+            raise ValueError(f"new_shape {new_shape} has a non-positive axis")
+        need *= n
+    devs = list(mesh.devices.flat) if devices is None else list(devices)
+    if need > len(devs):
+        raise ValueError(
+            f"new_shape {new_shape} needs {need} devices, only {len(devs)} survive"
+        )
+    return Mesh(np.asarray(devs[:need]).reshape(new_shape), tuple(mesh.axis_names))
 
 
 def maybe_init_distributed() -> bool:

@@ -38,16 +38,38 @@ decides WHEN ``step()`` runs, never what a launch contains.
         await stream.send(chunk)           # backpressure-aware
         ...
         bits = await stream.finish(n_bits)  # take() fold + flushed tail
+
+Failure behaviour (DESIGN.md §14): per-stream causes quarantine ONLY that
+stream (its waiters get a typed :class:`~repro.launch.faults.StreamError`,
+everyone else completes bit-exact); transient dispatch failures retry under
+a bounded :class:`~repro.launch.faults.RetryPolicy`; device loss rebuilds a
+smaller mesh (or drops to meshless) via
+:func:`repro.launch.elastic.rescale_decode_engine` and replays in-flight
+blocks from session state; capacity exhaustion past ``shed_deadline_ms``
+sheds the admission instead of parking it forever; and an unexpected
+dispatcher death propagates to every parked sender/finisher and resurfaces
+from :meth:`AsyncDecodeService.aclose` — nothing hangs.
 """
 
 from __future__ import annotations
 
 import asyncio
 import time
-from collections import deque
+from collections import Counter, deque
 
 import numpy as np
 
+from repro.launch.faults import (
+    CapacityError,
+    DecodeError,
+    DispatchError,
+    FaultInjector,
+    MeshLost,
+    RetryPolicy,
+    ShedError,
+    StreamError,
+    nonfinite_error,
+)
 from repro.launch.serve_decoder import SessionPool
 from repro.launch.slab import SlabExhausted, SymbolSlab
 
@@ -60,7 +82,7 @@ __all__ = [
 ]
 
 
-class Backpressure(RuntimeError):
+class Backpressure(CapacityError):
     """Admission refused: the service is at capacity (non-blocking mode)."""
 
 
@@ -133,13 +155,21 @@ class AsyncStream:
         self._handle = handle
         self._inflight: deque[tuple[float, int]] = deque()  # (t_admit, watermark)
         self.finished = False
+        self.failed: StreamError | None = None  # set when quarantined
 
     async def send(self, chunk) -> None:
-        """Admit one chunk (backpressure-aware; see the module docstring)."""
+        """Admit one chunk (backpressure-aware; see the module docstring).
+
+        Raises this stream's :class:`StreamError` if it was quarantined, the
+        service-wide failure if the dispatcher died, :class:`Backpressure` /
+        :class:`ShedError` when capacity admission gives up.
+        """
         await self._service._admit(self, chunk)
 
     def take(self) -> np.ndarray:
         """Drain every decoded bit delivered by dispatches so far."""
+        if self.failed is not None:
+            raise self.failed
         return self._handle.take()
 
     async def finish(self, n_bits: int | None = None) -> np.ndarray:
@@ -184,11 +214,22 @@ class AsyncDecodeService:
         blocks (default ``4 × max_batch_blocks``); senders beyond it wait.
     slab: shared :class:`SymbolSlab` for paged session state (None = each
         session keeps the default per-session array store).
-    clock: time source for the batcher and latency accounting. With a fake
-        clock, drive dispatch synchronously via :meth:`poll` — the
-        background task's waits use real event-loop time.
+    clock: time source for the batcher, latency accounting, retry backoff
+        and the shed deadline. With a fake clock, drive dispatch
+        synchronously via :meth:`poll` — the background task's waits use
+        real event-loop time.
     block_on_backpressure: False turns waiting senders into
         :class:`Backpressure` raises (admission-control mode).
+    retry: :class:`~repro.launch.faults.RetryPolicy` bounding dispatch
+        retries; backoff is armed against ``clock`` (no real sleeping), so
+        the whole retry schedule is fake-clock deterministic.
+    shed_deadline_ms: load-shedding deadline — a sender whose capacity wait
+        (pending-block cap or slab pages) spans this long sheds with
+        :class:`~repro.launch.faults.ShedError` instead of parking forever.
+        None (default) parks indefinitely, the pre-fault behaviour.
+    fault_injector: a :class:`~repro.launch.faults.FaultInjector` consulted
+        at the admission / slab / dispatch / mesh / open boundaries (chaos
+        testing + the degraded-mode benchmark). None injects nothing.
     """
 
     def __init__(
@@ -200,6 +241,9 @@ class AsyncDecodeService:
         slab: SymbolSlab | None = None,
         clock=time.monotonic,
         block_on_backpressure: bool = True,
+        retry: RetryPolicy | None = None,
+        shed_deadline_ms: float | None = None,
+        fault_injector: FaultInjector | None = None,
     ):
         self._pool = SessionPool()
         self._slab = slab
@@ -215,7 +259,14 @@ class AsyncDecodeService:
                 f"max_pending_blocks must be ≥ 1, got {self.max_pending_blocks}"
             )
         self.block_on_backpressure = block_on_backpressure
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.shed_deadline_ms = shed_deadline_ms
+        self._injector = fault_injector
+        if fault_injector is not None:
+            self._pool.fault_hook = self._fault_hook
         self._streams: list[AsyncStream] = []
+        self._by_handle: dict[object, AsyncStream] = {}
+        self._poisoned: set = set()  # handles marked by the stream_poison site
         self._latencies_s: list[float] = []
         self._work = asyncio.Event()  # a chunk was admitted
         self._space = asyncio.Event()  # a dispatch freed capacity/pages
@@ -225,6 +276,14 @@ class AsyncDecodeService:
         self._t_first: float | None = None
         self._t_last: float | None = None
         self._bits_delivered = 0
+        # ---- failure-model state (DESIGN.md §14) ----
+        self._failure: DecodeError | None = None  # service-fatal, surfaced everywhere
+        self._retry_at: float | None = None  # clock time before which poll() waits
+        self._attempts = 0  # consecutive failed dispatch attempts
+        self._errors_by_class: Counter[str] = Counter()
+        self.retries = 0
+        self.shed_blocks = 0
+        self.quarantined_streams = 0
 
     # ---- lifecycle -----------------------------------------------------------------
     async def __aenter__(self) -> "AsyncDecodeService":
@@ -242,7 +301,11 @@ class AsyncDecodeService:
             self._task = asyncio.get_running_loop().create_task(self._run())
 
     async def aclose(self) -> None:
-        """Stop dispatching; flush nothing (streams own their finish)."""
+        """Stop dispatching; flush nothing (streams own their finish).
+
+        If the dispatcher died with a service-fatal error, it re-raises here
+        — a crashed service never closes silently.
+        """
         self._closing = True
         self._space.set()  # wake blocked senders so they observe the close
         if self._task is not None:
@@ -252,79 +315,280 @@ class AsyncDecodeService:
             except asyncio.CancelledError:
                 pass
             self._task = None
+        if self._failure is not None:
+            raise self._failure
 
     def open(self, engine, *, interpret: bool | None = None) -> AsyncStream:
         """Admit a new stream; its session state pages out of the slab."""
+        if self._failure is not None:
+            raise self._failure
         if self._closing:
             raise RuntimeError("service is closing")
         store = self._slab.open_store() if self._slab is not None else None
         handle = self._pool.open(engine, interpret=interpret, store=store)
         stream = AsyncStream(self, handle)
         self._streams.append(stream)
+        self._by_handle[handle] = stream
+        if self._injector is not None and self._injector.fire("stream_poison"):
+            # this stream's symbols will reproducibly kill any launch that
+            # contains them (the bisection protocol isolates it)
+            self._poisoned.add(handle)
         return stream
 
     # ---- dispatch ------------------------------------------------------------------
     def poll(self) -> bool:
         """Fire one coalesced dispatch if the trigger is due; returns whether
         it fired. The background task calls this; fake-clock tests drive it
-        directly for deterministic trigger sequences."""
+        directly for deterministic trigger sequences.
+
+        A failed dispatch arms ``_retry_at`` (retry backoff on the injected
+        clock); until the clock passes it no new dispatch fires, and once it
+        does the retry fires regardless of the batcher — the pending blocks
+        that triggered the original dispatch are still there.
+        """
+        if self._failure is not None:
+            return False
+        if self._retry_at is not None:
+            if self._clock() < self._retry_at:
+                return False
+            self._retry_at = None
+            self._dispatch()
+            return True
         if not self._batcher.due(self._pool.pending_blocks()):
             return False
         self._dispatch()
         return True
 
     def _dispatch(self) -> None:
-        self._batcher.fired()
-        before = sum(st._handle.bits_emitted for st in self._streams)
-        self._pool.step()
+        """One coalesced step under the failure model (DESIGN.md §14).
+
+        Success resets the retry state. A transient failure arms a bounded
+        exponential-backoff retry; retries exhausted (or a typed
+        :class:`StreamError`) escalate to the pool's bisection protocol,
+        which quarantines culprit streams while the rest deliver bit-exact.
+        :class:`MeshLost` rebuilds the fleet's engines on a smaller mesh (or
+        meshless) and replays the in-flight blocks on the next poll. An
+        exception escaping even the isolation step is service-fatal and
+        propagates (the background task turns it into ``_fail_service``).
+        """
         self.dispatches += 1
+        self._batcher.fired()
+        before = {id(st): st._handle.bits_emitted for st in self._streams}
+        try:
+            self._pool.step()
+        except MeshLost as exc:
+            self._count_error(exc)
+            self._handle_mesh_loss(exc)
+            self.retries += 1
+            self._retry_at = self._clock()  # replay on the next poll
+            return
+        except StreamError as exc:
+            # a typed per-stream fault: retrying the same batch would fail
+            # the same way, so go straight to isolation
+            self._count_error(exc)
+            self._pool.step(isolate=True)
+            self._attempts = 0
+        except Exception as exc:  # noqa: BLE001 - classify, don't mask
+            self._count_error(exc)
+            if self._attempts < self.retry.max_retries:
+                self._attempts += 1
+                self.retries += 1
+                self._retry_at = self._clock() + self.retry.delay_s(self._attempts - 1)
+                return
+            # retries exhausted: a deterministic fault — bisect it out; if
+            # even single-member launches fail, every member quarantines and
+            # the pool drains rather than wedging the service
+            self._attempts = 0
+            self._pool.step(isolate=True)
+        else:
+            self._attempts = 0
+        self._retry_at = None
         now = self._clock()
-        delivered = sum(st._handle.bits_emitted for st in self._streams) - before
+        delivered = sum(
+            st._handle.bits_emitted - before[id(st)]
+            for st in self._streams
+            if id(st) in before
+        )
         if delivered:
             self._bits_delivered += delivered
             self._t_last = now
         for stream in self._streams:
             stream._complete_upto(now)
+        for ps, err in self._pool.drain_quarantined():
+            st = self._by_handle.get(ps)
+            if st is not None:
+                self._fail_stream(st, err)
         self._space.set()  # decoded blocks dropped pages + pending count
 
     async def _run(self) -> None:
-        while True:
-            self._work.clear()
-            timeout = (
-                self._batcher.timeout() if self._pool.pending_blocks() > 0 else None
-            )
-            if timeout is None:
-                await self._work.wait()
-            else:
-                try:
-                    await asyncio.wait_for(self._work.wait(), timeout)
-                except asyncio.TimeoutError:
-                    pass
-            self.poll()
-            # yield so delivery consumers run between dispatches
-            await asyncio.sleep(0)
+        try:
+            while True:
+                self._work.clear()
+                timeout = self._next_timeout()
+                if timeout is None:
+                    await self._work.wait()
+                else:
+                    try:
+                        await asyncio.wait_for(self._work.wait(), timeout)
+                    except asyncio.TimeoutError:
+                        pass
+                self.poll()
+                # yield so delivery consumers run between dispatches
+                await asyncio.sleep(0)
+        except asyncio.CancelledError:
+            raise
+        except BaseException as exc:  # noqa: BLE001 - the stranded-waiter fix
+            # the dispatcher must NEVER die silently: senders parked in
+            # _wait_for_space and finishers would hang forever. Record the
+            # failure, wake every waiter (they re-check and raise), and let
+            # aclose() re-raise it to the caller.
+            self._fail_service(exc)
+
+    def _next_timeout(self) -> float | None:
+        """Sleep bound for the dispatcher: deadline arm and/or retry backoff."""
+        t = self._batcher.timeout() if self._pool.pending_blocks() > 0 else None
+        if self._retry_at is not None:
+            r = max(0.0, self._retry_at - self._clock())
+            t = r if t is None else min(t, r)
+        return t
+
+    # ---- failure handling ----------------------------------------------------------
+    def _count_error(self, exc: BaseException) -> None:
+        self._errors_by_class[type(exc).__name__] += 1
+
+    def _fault_hook(self, entries, isolating: bool) -> None:
+        """The pool's pre-launch injection point (``FaultInjector`` wiring).
+
+        Transient dispatch/mesh faults are suppressed while the pool is
+        bisecting — they model launch-level weather, and firing them
+        mid-isolation would quarantine innocent streams. Poisoned-stream
+        faults fire always: they model symbols that reproducibly kill any
+        launch containing them, which is exactly what bisection isolates.
+        """
+        inj = self._injector
+        if inj is None:
+            return
+        if not isolating:
+            if inj.fire("mesh"):
+                raise MeshLost(
+                    "injected: device loss during dispatch",
+                    lost_chips=inj.mesh_lost_chips,
+                )
+            if inj.fire("dispatch"):
+                raise DispatchError("injected: transient launch failure")
+        for ps, _ in entries:
+            if ps in self._poisoned:
+                raise StreamError(
+                    "injected: poisoned stream symbols in the coalesced batch",
+                    stream=ps,
+                )
+
+    def _handle_mesh_loss(self, exc: MeshLost) -> None:
+        """Rebuild every meshed engine in the fleet on a post-loss mesh.
+
+        Uses :func:`repro.launch.elastic.rescale_decode_engine` (the decode
+        port of the trainer's ``plan_rescale``): shrink the engine's
+        ``block_axes``, or drop to meshless dispatch when nothing useful
+        survives. Sessions are repointed in place; their ready-but-undecoded
+        blocks replay on the retried dispatch, bit-exact to the
+        uninterrupted run (the mesh only places independent lanes).
+        """
+        from repro.launch.elastic import rescale_decode_engine
+
+        engines, seen = [], set()
+        for st in self._streams:
+            eng = st._handle._session.engine
+            if eng.mesh is not None and id(eng) not in seen:
+                seen.add(id(eng))
+                engines.append(eng)
+        for eng in engines:
+            self._pool.repoint_engine(eng, rescale_decode_engine(eng, exc.lost_chips))
+
+    def _fail_stream(self, stream: AsyncStream, err: StreamError) -> None:
+        """Quarantine one stream: typed failure to its waiters, pages freed.
+
+        Idempotent. The slab pages are released (and zeroed, per the slab
+        contract) so capacity poisoned streams held flows back to healthy
+        admissions — hence the final ``_space.set()``.
+        """
+        if stream.failed is not None:
+            return
+        stream.failed = err
+        stream.finished = True
+        stream._inflight.clear()  # failed chunks are not latency samples
+        self._pool.close(stream._handle)
+        self._poisoned.discard(stream._handle)
+        stream._handle._session.close()  # slab pages → free-list (zeroed)
+        if stream in self._streams:
+            self._streams.remove(stream)
+        self._by_handle.pop(stream._handle, None)
+        self.quarantined_streams += 1
+        self._space.set()  # freed pages may unblock parked senders
+
+    def _fail_service(self, exc: BaseException) -> None:
+        """Mark the whole service failed; every waiter observes it."""
+        if self._failure is not None:
+            return
+        if isinstance(exc, DecodeError):
+            err = exc
+        else:
+            err = DispatchError(f"decode service dispatcher died: {exc!r}")
+            err.__cause__ = exc
+        self._failure = err
+        self._count_error(err)
+        self._space.set()  # parked senders wake → _check_live raises
+        self._work.set()
 
     # ---- admission -----------------------------------------------------------------
+    def _check_live(self, stream: AsyncStream) -> None:
+        """Raise the most specific standing failure before touching state."""
+        if stream.failed is not None:
+            raise stream.failed
+        if self._failure is not None:
+            raise self._failure
+        if self._closing:
+            raise RuntimeError("service is closing")
+
     async def _admit(self, stream: AsyncStream, chunk) -> None:
-        if stream.finished:
+        if stream.finished and stream.failed is None:
             raise ValueError("send() on a finished stream")
+        self._check_live(stream)
+        if self._injector is not None and self._injector.fire("admission"):
+            err = nonfinite_error("send() [injected]", 1, int(np.size(chunk)) or 1)
+            self._count_error(err)
+            self._fail_stream(stream, err)
+            raise err
+        t0 = self._clock()  # the shed deadline spans the WHOLE admission
         while True:
-            if self._closing:
-                raise RuntimeError("service is closing")
+            self._check_live(stream)
             if self._pool.pending_blocks() >= self.max_pending_blocks:
-                await self._wait_for_space("pending-block cap")
+                await self._wait_for_space("pending-block cap", t0)
                 continue
             try:
+                if self._injector is not None and self._injector.fire("slab"):
+                    exc = SlabExhausted("injected: slab pages exhausted")
+                    exc.injected = True
+                    raise exc
                 # session ingest is atomic w.r.t. slab exhaustion: page
                 # capacity is reserved before any symbol is written, so a
                 # failed admit can simply retry after the next dispatch
                 stream._handle.feed(chunk)
-            except SlabExhausted:
+            except SlabExhausted as exc:
+                self._count_error(exc)
                 if self._pool.pending_blocks() <= 0:
+                    if getattr(exc, "injected", False):
+                        continue  # synthetic fault, nothing to free: re-admit
                     # nothing a dispatch could free — the chunk cannot fit
                     raise
-                await self._wait_for_space("slab pages")
+                await self._wait_for_space("slab pages", t0)
                 continue
+            except StreamError as err:
+                # engine-boundary validation (non-finite or shape-invalid
+                # symbols): per-stream poison — quarantine it, nobody else
+                # is touched and the rejected chunk never entered the buffer
+                self._count_error(err)
+                self._fail_stream(stream, err)
+                raise
             break
         now = self._clock()
         if self._t_first is None:
@@ -333,18 +597,69 @@ class AsyncDecodeService:
         self._batcher.note_feed()
         self._work.set()
 
-    async def _wait_for_space(self, why: str) -> None:
+    async def _wait_for_space(self, why: str, t0: float) -> None:
         if not self.block_on_backpressure:
-            raise Backpressure(f"admission refused: {why} exhausted")
+            exc = Backpressure(f"admission refused: {why} exhausted")
+            self._count_error(exc)
+            raise exc
+        if (
+            self.shed_deadline_ms is not None
+            and (self._clock() - t0) * 1e3 >= self.shed_deadline_ms
+        ):
+            exc = ShedError(
+                f"admission shed: {why} still exhausted after "
+                f"{self.shed_deadline_ms} ms"
+            )
+            self._count_error(exc)
+            self.shed_blocks += 1
+            raise exc
         self._space.clear()
         self._work.set()  # ensure the dispatcher wakes to make progress
-        await self._space.wait()
+        if self.shed_deadline_ms is None:
+            await self._space.wait()
+            return
+        # real-time backstop so a stalled dispatcher cannot outlive the shed
+        # deadline; the deterministic check above (injected clock) decides
+        remaining = self.shed_deadline_ms / 1e3 - (self._clock() - t0)
+        try:
+            await asyncio.wait_for(self._space.wait(), max(0.0, remaining))
+        except asyncio.TimeoutError:
+            pass
 
     async def _finish(self, stream: AsyncStream, n_bits: int | None) -> np.ndarray:
+        self._check_live(stream)
         if stream.finished:
             raise ValueError("finish() called twice on one stream")
         before = stream._handle.bits_emitted
-        bits = stream._handle.finish(n_bits)  # take() fold + shared flush plan
+        attempt = 0
+        while True:
+            try:
+                bits = stream._handle.finish(n_bits)  # take() fold + flush plan
+                break
+            except StreamError as err:
+                # the stream's own flush launch is what fails: quarantine it
+                self._count_error(err)
+                self._fail_stream(stream, err)
+                raise err from None
+            except CapacityError:
+                raise  # a flush never allocates; surface allocator bugs loudly
+            except MeshLost as exc:
+                self._count_error(exc)
+                self._handle_mesh_loss(exc)
+                self.retries += 1
+                continue  # flush replays on the rebuilt engine, bit-exact
+            except Exception as exc:  # noqa: BLE001 - transient flush failure
+                self._count_error(exc)
+                if attempt >= self.retry.max_retries:
+                    err = StreamError(
+                        f"stream flush failed after {attempt} retries ({exc!r})"
+                    )
+                    err.__cause__ = exc
+                    self._fail_stream(stream, err)
+                    raise err from exc
+                await asyncio.sleep(self.retry.delay_s(attempt))
+                attempt += 1
+                self.retries += 1
         now = self._clock()
         self._bits_delivered += stream._handle.bits_emitted - before
         self._t_last = now
@@ -353,6 +668,7 @@ class AsyncDecodeService:
         self._pool.close(stream._handle)  # idempotent pool exit
         stream._handle._session.close()  # slab pages → free-list
         self._streams.remove(stream)  # keep the live list O(live streams)
+        self._by_handle.pop(stream._handle, None)
         self._space.set()  # freed pages may unblock waiting senders
         return bits
 
@@ -384,6 +700,11 @@ class AsyncDecodeService:
             slab_pages_high_water=(
                 self._slab.high_water if self._slab is not None else None
             ),
+            # failure-model observability (DESIGN.md §14)
+            errors_by_class=dict(self._errors_by_class),
+            retries=self.retries,
+            shed_blocks=self.shed_blocks,
+            quarantined_streams=self.quarantined_streams,
         )
 
 
@@ -397,9 +718,10 @@ async def run_poisson_trace(
     seed: int = 0,
     service_kwargs: dict | None = None,
     slab: SymbolSlab | None = None,
-) -> tuple[list[np.ndarray], dict]:
+    fault_injector: FaultInjector | None = None,
+) -> tuple[list, dict]:
     """Drive ``len(ys)`` concurrent streams through the service under a
-    Poisson arrival process and return (per-stream bits, service metrics).
+    Poisson arrival process and return (per-stream results, service metrics).
 
     Each stream ``i`` sends ``ys[i]`` in ``chunk_symbols``-sized chunks with
     i.i.d. exponential inter-arrival gaps at ``rate_chunks_per_s``
@@ -408,11 +730,18 @@ async def run_poisson_trace(
     timing, so the decoded bits are bit-exact to per-stream one-shot
     ``engine.decode`` no matter how the trace interleaves — the property
     the serving tests pin.
+
+    With a ``fault_injector``, a stream that the injector (or real
+    validation) kills returns its typed :class:`DecodeError` in the results
+    list instead of a bit array — healthy streams are unaffected and still
+    deliver bit-exact arrays (the chaos acceptance criterion).
     """
     service_kwargs = dict(service_kwargs or {})
+    if fault_injector is not None:
+        service_kwargs.setdefault("fault_injector", fault_injector)
     async with AsyncDecodeService(slab=slab, **service_kwargs) as svc:
 
-        async def one(i: int) -> np.ndarray:
+        async def one(i: int):
             stream = svc.open(engine)
             y = np.asarray(ys[i])
             # independent per-stream rng: the trace is reproducible no matter
@@ -420,11 +749,17 @@ async def run_poisson_trace(
             rng = np.random.default_rng(seed + 7919 * i)
             gaps = rng.exponential(1.0 / rate_chunks_per_s, -(-len(y) // chunk_symbols))
             outs = []
-            for j, lo in enumerate(range(0, len(y), chunk_symbols)):
-                await asyncio.sleep(float(gaps[j]))
-                await stream.send(y[lo : lo + chunk_symbols])
-                outs.append(stream.take())
-            outs.append(await stream.finish(n_bits_list[i]))
+            try:
+                for j, lo in enumerate(range(0, len(y), chunk_symbols)):
+                    await asyncio.sleep(float(gaps[j]))
+                    await stream.send(y[lo : lo + chunk_symbols])
+                    outs.append(stream.take())
+                outs.append(await stream.finish(n_bits_list[i]))
+            except DecodeError as exc:
+                # typed per-stream failure: report it as this stream's result
+                # (quarantine already released its pages); service-fatal
+                # failures resurface from aclose() instead
+                return exc
             return np.concatenate(outs)
 
         bits = await asyncio.gather(*[one(i) for i in range(len(ys))])

@@ -37,6 +37,7 @@ from repro.core.codespec import available_code_specs, get_code_spec
 from repro.core.encoder import encode_jax, terminate
 from repro.core.engine import DecoderEngine, DecoderSession
 from repro.core.pbvd import PBVDConfig
+from repro.launch.faults import StreamError
 from repro.kernels.ops import (
     DEFAULT_TB_CHUNK,
     available_backends,
@@ -90,11 +91,15 @@ class PooledSession:
         """
         s = self._session
         n_bits, n_blocks, prior = s._finish_plan(n_bits)
-        head = self.take()  # fold undrained step() output instead of losing it
         if n_blocks > s._blocks_done:
+            # launch BEFORE draining the queue: a failed flush launch then
+            # leaves the handle exactly as it was (the launch commits nothing
+            # on failure), so the serving layer can retry finish() without
+            # losing the undrained step() output
             tail = self._pool._launch([(self, n_blocks)])[0]
         else:
             tail = np.zeros((0,), np.int32)
+        head = self.take()  # fold undrained step() output instead of losing it
         tail = tail[: max(0, n_bits - prior)]
         self.bits_emitted += len(tail)
         return np.concatenate([head, tail]) if len(head) else tail
@@ -138,6 +143,13 @@ class SessionPool:
         # member, dropping or double-releasing the wrong mesh pin
         self._mesh_refs: dict[PooledSession, object] = {}
         self.launches = 0  # batched launches issued (for reporting/tests)
+        # fault-tolerance hooks (DESIGN.md §14): ``fault_hook(entries,
+        # isolating)`` is consulted before every launch (the injection point
+        # for repro.launch.faults.FaultInjector); quarantined members land in
+        # ``quarantined`` as (session, StreamError) pairs for the serving
+        # layer to drain
+        self.fault_hook = None
+        self.quarantined: list[tuple[PooledSession, StreamError]] = []
 
     # ---- membership ----------------------------------------------------------------
     def open(
@@ -189,11 +201,22 @@ class SessionPool:
             for ps in self._members
         )
 
-    def step(self) -> int:
+    def step(self, *, isolate: bool = False) -> int:
         """Decode every ready block in the pool; returns the block count.
 
         Sessions with no complete window are skipped; compatible sessions
-        share one launch per group.
+        share one launch per group. A failed launch commits nothing —
+        sessions only advance after their bits exist — so a plain ``step``
+        that raises is safely retryable as-is.
+
+        ``isolate=True`` switches to the quarantine protocol: a group whose
+        launch raises is bisected until the culprit member(s) are isolated,
+        each culprit is removed from the pool with a typed
+        :class:`~repro.launch.faults.StreamError` recorded in
+        ``self.quarantined``, and every healthy member's relaunch delivers
+        bits identical to an undisturbed step (PBVD blocks are mutually
+        independent, so batch composition never changes per-stream bits —
+        the paper property that makes isolation cheap).
         """
         groups: dict[tuple, list[tuple[PooledSession, int]]] = defaultdict(list)
         for ps in self._members:
@@ -203,8 +226,12 @@ class SessionPool:
                 groups[self._group_key(s)].append((ps, b1))
         total = 0
         for entries in groups.values():
-            outs = self._launch(entries)
-            for (ps, _), bits in zip(entries, outs):
+            if isolate:
+                delivered = self._launch_isolated(entries)
+            else:
+                outs = self._launch(entries)
+                delivered = list(zip(entries, outs))
+            for (ps, _), bits in delivered:
                 ps._deliver(bits)
                 total += len(bits) // ps._session.cfg.D
         return total
@@ -266,12 +293,21 @@ class SessionPool:
             mesh_key,
         )
 
-    def _launch(self, entries: list[tuple[PooledSession, int]]) -> list[np.ndarray]:
+    def _launch(
+        self,
+        entries: list[tuple[PooledSession, int]],
+        *,
+        isolating: bool = False,
+    ) -> list[np.ndarray]:
         """One batched launch for ``entries`` = [(session, decode-up-to-b1)].
 
         Returns each entry's decoded bits (whole blocks, forward order) and
-        commits each session's overlap tail past the decoded blocks.
+        commits each session's overlap tail past the decoded blocks. An
+        exception (from the hook or the kernel) commits NOTHING, so the
+        identical launch can be rebuilt from session state.
         """
+        if self.fault_hook is not None:
+            self.fault_hook(entries, isolating)
         frames, counts = [], []
         for ps, b1 in entries:
             s = ps._session
@@ -294,6 +330,77 @@ class SessionPool:
             outs.append(sub)
             lo += k
         return outs
+
+    # ---- quarantine ----------------------------------------------------------------
+    def _launch_isolated(
+        self, entries: list[tuple[PooledSession, int]]
+    ) -> list[tuple[tuple[PooledSession, int], np.ndarray]]:
+        """Launch ``entries``, bisecting on failure to isolate culprits.
+
+        Healthy members decode bit-exact to the full coalesced launch (block
+        independence); members whose SINGLE-lane-group launch still fails are
+        quarantined via :meth:`_quarantine` and excluded from the result.
+        Worst case this costs O(f·log n) launches for f culprits among n
+        members — each bisection level relaunches only the halves that
+        contain a failure.
+        """
+        try:
+            outs = self._launch(entries, isolating=True)
+            return list(zip(entries, outs))
+        except Exception as exc:  # noqa: BLE001 - classify, don't mask
+            if len(entries) == 1:
+                ps = entries[0][0]
+                err = (
+                    exc
+                    if isinstance(exc, StreamError)
+                    else StreamError(
+                        f"stream quarantined: its lane-group reproducibly "
+                        f"fails the launch ({exc!r})",
+                        stream=ps,
+                    )
+                )
+                if err.__cause__ is None and err is not exc:
+                    err.__cause__ = exc
+                self._quarantine(ps, err)
+                return []
+            mid = len(entries) // 2
+            return self._launch_isolated(entries[:mid]) + self._launch_isolated(
+                entries[mid:]
+            )
+
+    def _quarantine(self, ps: PooledSession, err: StreamError) -> None:
+        """Remove ``ps`` from the pool and record its typed failure.
+
+        The member's buffered session state is left intact — the serving
+        layer owns the slab pages and frees them when it fails the stream's
+        waiters (``AsyncDecodeService._fail_stream``).
+        """
+        self.close(ps)
+        self.quarantined.append((ps, err))
+
+    def drain_quarantined(self) -> list[tuple[PooledSession, StreamError]]:
+        """Hand the accumulated quarantine records to the caller (and reset)."""
+        out, self.quarantined = self.quarantined, []
+        return out
+
+    def repoint_engine(self, old: DecoderEngine, new: DecoderEngine) -> int:
+        """Swap every member bound to engine ``old`` onto ``new`` (mesh-loss
+        rescale). Members' ready-but-undecoded blocks replay on the new
+        engine at the next step, bit-exact to the uninterrupted run — block
+        content is host-side session state and the mesh only places lanes.
+        Returns the number of members repointed.
+        """
+        n = 0
+        for ps in self._members:
+            s = ps._session
+            if s.engine is old:
+                s.engine = new
+                if new.mesh is not None:
+                    self._mesh_refs[ps] = new.mesh
+                else:
+                    self._mesh_refs.pop(ps, None)
+                n += 1
+        return n
 
 
 # ---------------------------------------------------------------------------

@@ -32,11 +32,18 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.launch.faults import CapacityError
+
 __all__ = ["SlabExhausted", "SymbolSlab", "PagedSessionStore"]
 
 
-class SlabExhausted(RuntimeError):
-    """No free pages left in the slab (admission should apply backpressure)."""
+class SlabExhausted(CapacityError):
+    """No free pages left in the slab (admission should apply backpressure).
+
+    A :class:`~repro.launch.faults.CapacityError`: the service — not the
+    stream or the launch — is out of room, so waiting for a dispatch to
+    retire pages (or shedding the admission) is the right response.
+    """
 
 
 class SymbolSlab:

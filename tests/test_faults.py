@@ -1,0 +1,589 @@
+"""Fault-isolated serving suite (DESIGN.md §14).
+
+Layers, matching the failure model:
+
+* taxonomy + injector + retry-policy units (pure host-side, no engine);
+* engine-boundary symbol validation: non-finite soft symbols are refused at
+  ``quantize_soft`` / ``DecoderEngine.decode*`` / session ``send`` with the
+  uniform ``nonfinite_error`` message, and one NaN stream cannot change any
+  other stream's decoded bits (property test);
+* SessionPool quarantine: bisection isolates the culprit lane-group, the
+  rest of the batch delivers bit-exact, quarantined pages are reclaimed
+  zeroed;
+* AsyncDecodeService degradation: deterministic retry/backoff on a fake
+  clock, load shedding past the deadline, mesh-loss fallback to a rescaled
+  (or meshless) engine with bit-exact replay, and the stranded-waiter fix
+  (a dying dispatcher propagates to every parked sender and to aclose);
+* the chaos acceptance trace: 64 Poisson streams with injected
+  stream-poison + dispatch + slab + mesh faults — healthy streams bit-exact,
+  poisoned streams fail typed, nothing hangs, no slab page leaks.
+"""
+
+import asyncio
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codespec import get_code_spec
+from repro.core.engine import DecoderEngine
+from repro.core.pbvd import PBVDConfig
+from repro.core.quantize import quantize_soft
+from repro.launch.faults import (
+    CapacityError,
+    DecodeError,
+    DispatchError,
+    FaultInjector,
+    MeshLost,
+    RetryPolicy,
+    ShedError,
+    StreamError,
+    SymbolError,
+    check_finite_symbols,
+    nonfinite_error,
+)
+from repro.launch.serve_async import (
+    AsyncDecodeService,
+    Backpressure,
+    run_poisson_trace,
+)
+from repro.launch.serve_decoder import SessionPool
+from repro.launch.slab import SlabExhausted, SymbolSlab
+
+from test_serve_async import GEOM, FakeClock, _engine, _tx_stream
+
+T_PAGE = GEOM["D"] + 2 * GEOM["L"]
+
+
+# ---------------------------------------------------------------------------
+# Taxonomy + injector + retry policy
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+def test_error_taxonomy_hierarchy():
+    # every serving failure is a DecodeError (and a RuntimeError for
+    # pre-taxonomy callers); capacity unifies Backpressure + SlabExhausted
+    assert issubclass(StreamError, DecodeError)
+    assert issubclass(DispatchError, DecodeError)
+    assert issubclass(MeshLost, DispatchError)
+    assert issubclass(CapacityError, DecodeError)
+    assert issubclass(Backpressure, CapacityError)
+    assert issubclass(SlabExhausted, CapacityError)
+    assert issubclass(ShedError, CapacityError)
+    assert issubclass(DecodeError, RuntimeError)
+    # SymbolError keeps the engine's historical ValueError contract
+    assert issubclass(SymbolError, StreamError)
+    assert issubclass(SymbolError, ValueError)
+    err = nonfinite_error("decode()", 3, 100)
+    assert isinstance(err, SymbolError)
+    assert "3 of 100" in str(err) and "decode()" in str(err)
+    assert MeshLost("gone", lost_chips=4).lost_chips == 4
+
+
+@pytest.mark.tier1
+def test_check_finite_symbols():
+    check_finite_symbols(np.ones((4, 2), np.float32), "t")  # finite: fine
+    check_finite_symbols(np.ones((4, 2), np.int8), "t")  # ints: skipped
+    bad = np.ones((4, 2), np.float32)
+    bad[1, 0] = np.nan
+    bad[2, 1] = np.inf
+    with pytest.raises(SymbolError, match="2 of 8"):
+        check_finite_symbols(bad, "t")
+    # tracers pass through (eager-boundary concern only)
+    jax.jit(lambda y: (check_finite_symbols(y, "t"), y * 2)[1])(jnp.ones(3))
+
+
+@pytest.mark.tier1
+def test_retry_policy_schedule():
+    p = RetryPolicy(max_retries=4, backoff_s=0.01, multiplier=2.0, max_backoff_s=0.05)
+    assert [p.delay_s(k) for k in range(5)] == [0.01, 0.02, 0.04, 0.05, 0.05]
+    with pytest.raises(ValueError):
+        p.delay_s(-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(multiplier=0.5)
+
+
+@pytest.mark.tier1
+def test_fault_injector_schedule_and_rates():
+    inj = FaultInjector(schedule={"dispatch": {1, 3}})
+    assert [inj.fire("dispatch") for _ in range(5)] == [
+        False,
+        True,
+        False,
+        True,
+        False,
+    ]
+    assert inj.counts["dispatch"] == 5 and inj.fired["dispatch"] == 2
+    assert inj.counts["slab"] == 0
+    # rate mode is deterministic per (seed, site): two injectors with the
+    # same seed fire on exactly the same consultations
+    a = FaultInjector(seed=7, rates={"slab": 0.3})
+    b = FaultInjector(seed=7, rates={"slab": 0.3})
+    seq = [a.fire("slab") for _ in range(50)]
+    assert seq == [b.fire("slab") for _ in range(50)]
+    assert 0 < sum(seq) < 50
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultInjector(schedule={"bogus": {0}})
+    with pytest.raises(ValueError, match="unknown fault site"):
+        a.fire("bogus")
+    with pytest.raises(ValueError):
+        FaultInjector(rates={"slab": 1.5})
+
+
+# ---------------------------------------------------------------------------
+# Engine-boundary validation: non-finite symbols are refused, uniformly
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+def test_nonfinite_rejected_at_every_engine_boundary():
+    spec, _, y = _tx_stream("ccsds", 256, 4.5, 21)
+    eng = _engine(spec)
+    bad = y.copy()
+    bad[7] = np.nan
+
+    with pytest.raises(SymbolError, match="non-finite"):
+        quantize_soft(jnp.asarray([[1.0, np.inf]]))
+    with pytest.raises(SymbolError, match="non-finite"):
+        eng.decode(jnp.asarray(bad), 256)
+    with pytest.raises(SymbolError, match="stream 1"):
+        eng.decode_batch([jnp.asarray(y), jnp.asarray(bad)], [256, 256])
+    sess = eng.session()
+    with pytest.raises(SymbolError, match="session send"):
+        sess.decode(bad[:200])
+    # the rejected chunk never entered the buffer: the session still decodes
+    # the clean stream bit-exactly from scratch
+    out = np.concatenate([sess.decode(y), sess.finish(256)])
+    np.testing.assert_array_equal(out, np.asarray(eng.decode(jnp.asarray(y), 256)))
+
+
+@pytest.mark.tier1
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 199), st.integers(0, 2**16))
+def test_one_nan_stream_cannot_change_anothers_bits(pos, seed):
+    """The isolation property behind the whole PR: stream A's decoded bits
+    are identical whether its batch sibling B is healthy or poisoned —
+    because a poisoned B is REJECTED (batch path) or QUARANTINED (service
+    path) before its symbols can share a launch with A's."""
+    spec, _, ya = _tx_stream("ccsds", 192, 4.0, seed % 1000)
+    _, _, yb = _tx_stream("ccsds", 192, 4.0, seed % 1000 + 1)
+    eng = _engine(spec)
+    ref_a = np.asarray(eng.decode(jnp.asarray(ya), 192))
+    bad_b = yb.copy()
+    bad_b[pos % len(yb)] = np.nan
+    # batch path: the poisoned batch refuses up front, naming the stream
+    with pytest.raises(SymbolError):
+        eng.decode_batch([jnp.asarray(ya), jnp.asarray(bad_b)], [192, 192])
+
+    async def scenario():
+        svc = AsyncDecodeService(max_batch_blocks=1000, deadline_ms=0.0)
+        a, b = svc.open(eng), svc.open(eng)
+        await a.send(ya[: len(ya) // 2])
+        with pytest.raises(SymbolError):
+            await b.send(bad_b)  # B quarantines at admission
+        assert b.failed is not None
+        await a.send(ya[len(ya) // 2 :])
+        svc.poll()
+        bits = np.concatenate([a.take(), await a.finish(192)])
+        assert svc.metrics()["quarantined_streams"] == 1
+        return bits
+
+    np.testing.assert_array_equal(asyncio.run(scenario()), ref_a)
+
+
+# ---------------------------------------------------------------------------
+# SessionPool quarantine: bisection isolates culprits, the rest is bit-exact
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+@pytest.mark.parametrize("n_streams,culprits", [(4, {1}), (5, {0, 3}), (1, {0})])
+def test_pool_bisection_quarantines_culprits_healthy_bit_exact(n_streams, culprits):
+    spec = get_code_spec("ccsds")
+    eng = _engine(spec)
+    ys = [_tx_stream("ccsds", 256, 4.5, 60 + i)[2] for i in range(n_streams)]
+    refs = [np.asarray(eng.decode(jnp.asarray(y), 256)) for y in ys]
+
+    pool = SessionPool()
+    handles = [pool.open(eng) for _ in ys]
+    marked = {handles[i] for i in culprits}
+
+    def hook(entries, isolating):
+        for ps, _ in entries:
+            if ps in marked:
+                raise StreamError("poisoned lane-group", stream=ps)
+
+    pool.fault_hook = hook
+    for h, y in zip(handles, ys):
+        h.feed(y)
+    with pytest.raises(StreamError):
+        pool.step()  # the plain step fails whole — nothing committed
+    assert pool.pending_blocks() > 0  # retryable: sessions unchanged
+    pool.step(isolate=True)
+    bad = pool.drain_quarantined()
+    assert {ps for ps, _ in bad} == marked
+    assert all(isinstance(err, StreamError) for _, err in bad)
+    assert len(pool) == n_streams - len(culprits)
+    for i, (h, r) in enumerate(zip(handles, refs)):
+        if i in culprits:
+            continue
+        # healthy members delivered from the bisected launches, bit-exact
+        np.testing.assert_array_equal(
+            np.concatenate([h.take(), h.finish(256)]), r
+        )
+    assert pool.drain_quarantined() == []  # drained exactly once
+
+
+# ---------------------------------------------------------------------------
+# Service degradation: retry/backoff, shedding, mesh loss, stranded waiters
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+def test_dispatch_retry_backoff_deterministic_on_fake_clock():
+    spec, _, y = _tx_stream("ccsds", 512, 4.5, 22)
+    eng = _engine(spec)
+    clk = FakeClock()
+
+    async def scenario():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1,
+            deadline_ms=0.0,
+            clock=clk.now,
+            retry=RetryPolicy(max_retries=3, backoff_s=0.010, multiplier=2.0),
+            fault_injector=FaultInjector(schedule={"dispatch": {0, 1}}),
+        )
+        stream = svc.open(eng)
+        await stream.send(y)
+        assert svc.poll() is True  # attempt 1: injected failure → backoff armed
+        assert svc._retry_at == pytest.approx(clk.now() + 0.010)
+        assert svc.poll() is False  # backoff gates the retry
+        clk.advance(0.010)
+        assert svc.poll() is True  # attempt 2: fails again → 20 ms backoff
+        assert svc._retry_at == pytest.approx(clk.now() + 0.020)
+        clk.advance(0.020)
+        assert svc.poll() is True  # attempt 3: schedule exhausted → success
+        m = svc.metrics()
+        assert m["retries"] == 2
+        assert m["errors_by_class"] == {"DispatchError": 2}
+        assert m["quarantined_streams"] == 0
+        return np.concatenate([stream.take(), await stream.finish(512)])
+
+    out = asyncio.run(scenario())
+    np.testing.assert_array_equal(out, np.asarray(eng.decode(jnp.asarray(y), 512)))
+
+
+@pytest.mark.tier1
+def test_poisoned_stream_quarantined_same_step_healthy_delivers():
+    """A StreamError during dispatch short-circuits retry: the same poll
+    bisects, quarantines the poisoned stream, and delivers the healthy one."""
+    spec, _, y0 = _tx_stream("ccsds", 512, 4.5, 23)
+    _, _, y1 = _tx_stream("ccsds", 512, 4.5, 24)
+    eng = _engine(spec)
+
+    async def scenario():
+        slab = SymbolSlab(n_pages=16, page_stages=T_PAGE, R=spec.code.R)
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,
+            deadline_ms=0.0,  # manual poll() is due as soon as anything is pending
+            max_pending_blocks=10_000,
+            slab=slab,
+            fault_injector=FaultInjector(schedule={"stream_poison": {1}}),
+        )
+        healthy, poisoned = svc.open(eng), svc.open(eng)
+        await healthy.send(y0)
+        await poisoned.send(y1)
+        held = slab.pages_in_use
+        assert held > 0
+        assert svc.poll() is True  # one poll: bisect + quarantine + deliver
+        assert poisoned.failed is not None
+        with pytest.raises(StreamError):
+            poisoned.take()
+        with pytest.raises(StreamError):
+            await poisoned.send(y1[:10])
+        # the quarantined stream's pages went back to the free-list, zeroed
+        assert slab.pages_in_use < held
+        assert np.all(slab._data[slab._free] == 0.0)
+        m = svc.metrics()
+        assert m["quarantined_streams"] == 1
+        assert m["errors_by_class"]["StreamError"] >= 1
+        bits = np.concatenate([healthy.take(), await healthy.finish(512)])
+        assert slab.pages_in_use == 0
+        # a fresh stream reuses the reclaimed (zeroed) pages bit-exactly
+        reuse = svc.open(eng)
+        await reuse.send(y1)
+        svc.poll()
+        reuse_bits = np.concatenate([reuse.take(), await reuse.finish(512)])
+        return bits, reuse_bits
+
+    bits, reuse_bits = asyncio.run(scenario())
+    np.testing.assert_array_equal(bits, np.asarray(eng.decode(jnp.asarray(y0), 512)))
+    np.testing.assert_array_equal(
+        reuse_bits, np.asarray(eng.decode(jnp.asarray(y1), 512))
+    )
+
+
+@pytest.mark.tier1
+def test_load_shedding_past_deadline_on_fake_clock():
+    spec, _, y = _tx_stream("ccsds", 512, 4.5, 25)
+    eng = _engine(spec)
+    clk = FakeClock()
+
+    async def scenario():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,
+            deadline_ms=0.0,
+            max_pending_blocks=2,
+            clock=clk.now,
+            shed_deadline_ms=50.0,
+        )
+        stream = svc.open(eng)
+        await stream.send(y[:300])  # at the pending-block cap
+        blocked = asyncio.ensure_future(stream.send(y[300:]))
+        for _ in range(5):
+            await asyncio.sleep(0)
+        assert not blocked.done()  # parked within the deadline
+        # a wake that frees nothing re-parks the sender (no exception) while
+        # the deadline has not yet passed
+        svc._space.set()
+        for _ in range(5):
+            await asyncio.sleep(0)
+        assert not blocked.done()
+        clk.advance(0.051)  # past the shed deadline (injected clock)
+        svc._space.set()  # next failed wake now sheds
+        with pytest.raises(ShedError, match="shed"):
+            await asyncio.wait_for(blocked, timeout=5)
+        m = svc.metrics()
+        assert m["shed_blocks"] == 1
+        assert m["errors_by_class"]["ShedError"] == 1
+        # the stream itself is NOT quarantined: shedding drops the chunk, not
+        # the stream — and the pool still drains normally
+        assert stream.failed is None
+        assert svc.poll() is True
+        await stream.send(y[300:])
+        svc.poll()
+        return np.concatenate([stream.take(), await stream.finish(512)])
+
+    out = asyncio.run(scenario())
+    np.testing.assert_array_equal(out, np.asarray(eng.decode(jnp.asarray(y), 512)))
+
+
+@pytest.mark.tier1
+def test_blocked_sender_reparks_after_failed_wake():
+    """A wake that frees no capacity must re-park the sender (indefinitely,
+    with no shed deadline configured) — not fail it, not admit it early."""
+    spec, _, y = _tx_stream("ccsds", 512, 4.5, 29)
+    eng = _engine(spec)
+
+    async def scenario():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,
+            deadline_ms=0.0,  # manual poll() is due as soon as anything is pending
+            max_pending_blocks=2,
+        )
+        stream = svc.open(eng)
+        await stream.send(y[:300])  # ≥ 2 blocks ready → at the cap
+        blocked = asyncio.ensure_future(stream.send(y[300:]))
+        for _ in range(5):
+            await asyncio.sleep(0)
+        assert not blocked.done()
+        # spurious wake: nothing was freed, so the sender re-parks
+        svc._space.set()
+        for _ in range(5):
+            await asyncio.sleep(0)
+        assert not blocked.done()
+        assert svc.poll() is True  # a real dispatch frees capacity…
+        await asyncio.wait_for(blocked, timeout=5)  # …and the send completes
+        svc.poll()
+        return np.concatenate([stream.take(), await stream.finish(512)])
+
+    out = asyncio.run(scenario())
+    np.testing.assert_array_equal(out, np.asarray(eng.decode(jnp.asarray(y), 512)))
+
+
+@pytest.mark.tier1
+def test_mesh_loss_falls_back_and_replays_bit_exact():
+    """Losing the mesh mid-dispatch rebuilds the engine (meshless here — a
+    1-device mesh has no smaller mesh) and replays the in-flight blocks from
+    session state, bit-exact to the uninterrupted run."""
+    from repro.launch.mesh import make_decode_mesh
+
+    spec, _, y = _tx_stream("ccsds", 512, 4.5, 26)
+    mesh = make_decode_mesh("data=1")
+    cfg = PBVDConfig(spec=spec, backend="ref", **GEOM)
+    eng = DecoderEngine(cfg, mesh=mesh, block_axes=("data",))
+    ref = np.asarray(DecoderEngine(cfg).decode(jnp.asarray(y), 512))
+    clk = FakeClock()
+
+    async def scenario():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1,
+            deadline_ms=0.0,
+            clock=clk.now,
+            fault_injector=FaultInjector(
+                schedule={"mesh": {0}}, mesh_lost_chips=1
+            ),
+        )
+        stream = svc.open(eng)
+        await stream.send(y)
+        assert svc.poll() is True  # MeshLost → engines rebuilt, retry armed
+        sess = stream._handle._session
+        assert sess.engine is not eng and sess.engine.mesh is None
+        assert svc.poll() is True  # the replay dispatch (retry_at == now)
+        m = svc.metrics()
+        assert m["errors_by_class"] == {"MeshLost": 1}
+        assert m["retries"] == 1
+        return np.concatenate([stream.take(), await stream.finish(512)])
+
+    np.testing.assert_array_equal(asyncio.run(scenario()), ref)
+
+
+@pytest.mark.tier1
+def test_dispatcher_death_propagates_to_waiters_and_aclose():
+    """The stranded-waiter regression: a SessionPool whose step() raises
+    something unhandled must fail parked senders and aclose() — before this
+    PR the background task died silently and every waiter hung forever."""
+    spec, _, y = _tx_stream("ccsds", 512, 4.5, 27)
+    eng = _engine(spec)
+
+    class RaisingPool(SessionPool):
+        def step(self, *, isolate=False):
+            raise RuntimeError("XLA launch exploded")
+
+    async def scenario():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1,
+            deadline_ms=0.0,
+            max_pending_blocks=1,
+            retry=RetryPolicy(max_retries=1, backoff_s=0.0),
+        )
+        raising = RaisingPool()
+        raising._members = svc._pool._members  # adopt the open membership
+        raising._mesh_refs = svc._pool._mesh_refs
+        svc._pool = raising
+        svc.start()
+        stream = svc.open(eng)
+        await stream.send(y[:300])  # ≥ 1 pending block: the dispatcher fires
+        parked = asyncio.ensure_future(stream.send(y[300:]))  # parks on the cap
+        with pytest.raises(DispatchError, match="dispatcher died"):
+            await asyncio.wait_for(parked, timeout=10)
+        # new work is refused with the same typed failure...
+        with pytest.raises(DispatchError):
+            await stream.send(y[300:])
+        with pytest.raises(DispatchError):
+            await stream.finish(512)
+        with pytest.raises(DispatchError):
+            svc.open(eng)
+        # ...and aclose() resurfaces it instead of closing silently
+        with pytest.raises(DispatchError, match="dispatcher died"):
+            await svc.aclose()
+        m = svc.metrics()
+        assert m["errors_by_class"]["RuntimeError"] == 2  # attempt + retry
+        assert m["errors_by_class"]["DispatchError"] == 1
+        assert m["retries"] == 1
+
+    asyncio.run(scenario())
+
+
+@pytest.mark.tier1
+def test_capacity_errors_are_counted_in_metrics():
+    spec, _, y = _tx_stream("ccsds", 512, 4.5, 28)
+    eng = _engine(spec)
+
+    async def cap_scenario():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,
+            deadline_ms=0.0,
+            max_pending_blocks=2,
+            block_on_backpressure=False,
+        )
+        stream = svc.open(eng)
+        await stream.send(y[:300])  # ≥ 2 blocks ready → at the cap
+        with pytest.raises(Backpressure, match="pending-block cap"):
+            await stream.send(y[300:])
+        m = svc.metrics()
+        assert m["errors_by_class"] == {"Backpressure": 1}
+        assert m["shed_blocks"] == 0 and m["quarantined_streams"] == 0
+
+    async def slab_scenario():
+        slab = SymbolSlab(n_pages=4, page_stages=T_PAGE, R=spec.code.R)
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,
+            deadline_ms=0.0,
+            slab=slab,
+            block_on_backpressure=False,
+        )
+        stream = svc.open(eng)
+        await stream.send(y[: 4 * T_PAGE])  # fills the slab exactly
+        with pytest.raises(Backpressure, match="slab pages"):
+            await stream.send(y[4 * T_PAGE :])
+        m = svc.metrics()
+        # the allocator's refusal AND the non-blocking mapping both count
+        assert m["errors_by_class"] == {"SlabExhausted": 1, "Backpressure": 1}
+
+    asyncio.run(cap_scenario())
+    asyncio.run(slab_scenario())
+
+
+# ---------------------------------------------------------------------------
+# The chaos acceptance trace
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+def test_chaos_64_stream_trace_healthy_bit_exact_poisoned_typed():
+    """The PR's acceptance criterion: a 64-stream Poisson trace with
+    injected stream-poison + transient dispatch + slab-exhaustion + mesh
+    faults completes with every healthy stream bit-exact to its one-shot
+    reference, every poisoned stream failing with a typed StreamError, no
+    hung futures (the trace returns) and no leaked slab pages."""
+    S, n_bits = 64, 256
+    spec = get_code_spec("ccsds")
+    eng = _engine(spec)
+    ys = [_tx_stream("ccsds", n_bits, 4.5, 80 + i)[2] for i in range(S)]
+    refs = [np.asarray(eng.decode(jnp.asarray(y), n_bits)) for y in ys]
+    slab = SymbolSlab(n_pages=6 * S, page_stages=T_PAGE, R=spec.code.R)
+    poisoned = {3, 17}
+    injector = FaultInjector(
+        seed=5,
+        schedule={
+            "stream_poison": poisoned,  # the 4th and 18th open() are poison
+            "dispatch": {1, 4},  # transient launch failures → retried
+            "slab": {5, 30},  # synthetic page exhaustion → re-admitted
+            "mesh": {2},  # device loss (meshless engine: absorbed)
+            "admission": {100},  # validation failure on the 101st send
+        },
+    )
+    results, report = asyncio.run(
+        run_poisson_trace(
+            eng,
+            ys,
+            [n_bits] * S,
+            chunk_symbols=100,
+            rate_chunks_per_s=5000.0,
+            seed=9,
+            slab=slab,
+            service_kwargs=dict(max_batch_blocks=64, deadline_ms=2.0),
+            fault_injector=injector,
+        )
+    )
+    failed = {i for i, r in enumerate(results) if isinstance(r, Exception)}
+    # every poisoned stream failed with its typed StreamError…
+    assert poisoned <= failed
+    assert all(isinstance(results[i], StreamError) for i in failed)
+    # …the admission fault may land on a healthy stream (interleaving-
+    # dependent) or on an already-failed one — never more than one extra
+    assert len(failed) <= len(poisoned) + 1
+    # every healthy stream is bit-exact to its one-shot reference
+    for i in range(S):
+        if i not in failed:
+            np.testing.assert_array_equal(results[i], refs[i])
+    # nothing leaked, nothing hung, and the degradation is observable
+    assert slab.pages_in_use == 0
+    assert report["quarantined_streams"] == len(failed)
+    # one isolation pass may quarantine BOTH poisoned streams (a single
+    # StreamError catch), so assert presence, not a per-stream count
+    assert report["errors_by_class"].get("StreamError", 0) >= 1
+    assert report["errors_by_class"].get("DispatchError", 0) >= 1
+    assert report["errors_by_class"].get("SlabExhausted", 0) >= 1
+    assert report["retries"] >= 1
+    assert injector.fired["stream_poison"] == 2
+    assert injector.fired["mesh"] == 1
+    # healthy throughput survived: the service still coalesced dispatches
+    assert report["bits_delivered"] >= (S - len(failed)) * n_bits
