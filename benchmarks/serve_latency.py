@@ -35,12 +35,23 @@ the retry/backpressure machinery of DESIGN.md §14 — every stream still
 asserts bit-exact; the row carries a ``fault_rate`` identity field so
 tools/bench_compare.py never matches it against a clean baseline
 (degradation is reported, not gated) plus ``retry_steps`` for context.
+
+``--kill-at N`` adds a ``kind="serve_recovery"`` row measuring crash
+recovery (DESIGN.md §15): a journaled trace is abandoned mid-flight after
+its N-th dispatch (simulating SIGKILL at a dispatch boundary), the journal
+is reopened and ``AsyncDecodeService.recover`` rebuilds the service —
+``recovery_ms`` is that rebuild (checkpoint restore + WAL replay), and the
+resumed trace must still deliver every stream bit-exact. The ``_ms``
+suffix makes the row report-only under tools/bench_compare.py: recovery
+latency is context, never a gate.
 """
 
 from __future__ import annotations
 
 import argparse
 import asyncio
+import tempfile
+import time
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +68,8 @@ from repro.core.encoder import encode_jax, terminate
 from repro.core.engine import DecoderEngine
 from repro.core.pbvd import PBVDConfig
 from repro.launch.faults import FaultInjector
-from repro.launch.serve_async import run_poisson_trace
+from repro.launch.journal import ChunkJournal
+from repro.launch.serve_async import AsyncDecodeService, run_poisson_trace
 from repro.launch.slab import SymbolSlab
 
 TABLE3 = bench_json.TABLE3
@@ -179,8 +191,115 @@ def run(
     return [row]
 
 
+def run_recovery(
+    *,
+    code: str = "ccsds",
+    backend: str = "ref",
+    n_streams: int = 16,
+    payload_bits: int = 2048,
+    chunk_bits: int = 512,
+    max_batch_blocks: int = 32,
+    kill_at: int = 2,
+    reps: int = 3,
+    ebn0: float = 4.0,
+    smoke: bool = False,
+) -> list[dict]:
+    """Measure ``recover()`` latency at a dispatch-boundary crash point.
+
+    The first incarnation drives the service manually (no background task)
+    with a journal attached, abandons it the moment its ``kill_at``-th
+    dispatch commits — nothing is closed, exactly like a SIGKILL — and the
+    second incarnation rebuilds from the journal (fresh slab: a new process
+    would not inherit the old allocator) and finishes the trace. Every
+    stream must come out bit-exact to the one-shot reference or the row is
+    not reported at all.
+    """
+    spec = get_code_spec(code)
+    geom = dict(D=64, L=16, q=8) if smoke else TABLE3
+    cfg = PBVDConfig(spec=spec, backend=backend, **geom)
+    engine = DecoderEngine(cfg)
+    payloads, ys = _streams(spec, n_streams, payload_bits, ebn0, seed=7)
+    chunk_symbols = max(1, int(round(len(ys[0]) * chunk_bits / payload_bits)))
+    page_stages = geom["D"] + 2 * geom["L"]
+    pages_per_stream = 2 + -(-chunk_symbols // page_stages) * 2
+    refs = [np.asarray(engine.decode(jnp.asarray(y), payload_bits)) for y in ys]
+    chunk_lists = [
+        [y[k * chunk_symbols : (k + 1) * chunk_symbols] for k in range(-(-len(y) // chunk_symbols))]
+        for y in ys
+    ]
+
+    def slab():
+        return SymbolSlab(
+            n_pages=pages_per_stream * n_streams, page_stages=page_stages, R=spec.code.R
+        )
+
+    def one_rep():
+        jdir = tempfile.mkdtemp(prefix="serve_recovery_")
+        kwargs = dict(max_batch_blocks=max_batch_blocks, deadline_ms=0.0)
+
+        async def crash_half():
+            # incarnation 1: journaled, manually polled, abandoned mid-trace
+            svc = AsyncDecodeService(slab=slab(), journal=ChunkJournal(jdir), **kwargs)
+            streams = [svc.open(engine) for _ in range(n_streams)]
+            for k in range(len(chunk_lists[0])):
+                for st, chunks in zip(streams, chunk_lists):
+                    if k < len(chunks):
+                        await st.send(chunks[k])
+                svc.poll()
+                if svc.dispatches >= kill_at:
+                    return True  # "SIGKILL": drop everything unclosed
+            return False
+
+        async def recover_half():
+            t0 = time.perf_counter()
+            svc = AsyncDecodeService.recover(
+                ChunkJournal(jdir), engine, slab=slab(), **kwargs
+            )
+            ms = (time.perf_counter() - t0) * 1e3
+            replayed = sum(
+                st.chunks_admitted for st in svc.recovered_streams.values()
+            )
+            for i in range(n_streams):
+                st = svc.recovered_streams[i]
+                for k in range(st.chunks_admitted, len(chunk_lists[i])):
+                    await st.send(chunk_lists[i][k])
+                    svc.poll()
+                got = np.concatenate([st.take(), await st.finish(payload_bits)])
+                np.testing.assert_array_equal(got, refs[i])
+            return ms, replayed
+
+        if not asyncio.run(crash_half()):
+            raise RuntimeError(
+                f"trace completed before dispatch {kill_at}: the recovery row "
+                f"would measure an empty journal — shrink max_batch_blocks"
+            )
+        return asyncio.run(recover_half())
+
+    one_rep()  # warm-up: compile the launch shapes out of the measurement
+    results = [one_rep() for _ in range(max(1, reps))]
+    return [
+        dict(
+            kind="serve_recovery",
+            code=code,
+            backend=backend,
+            n_streams=n_streams,
+            payload_bits=payload_bits,
+            chunk_bits=chunk_bits,
+            max_batch_blocks=max_batch_blocks,
+            kill_at_dispatch=kill_at,
+            chunks_replayed=int(np.median([r[1] for r in results])),
+            recovery_ms=round(float(np.median([r[0] for r in results])), 2),
+        )
+    ]
+
+
 def merge_bench_json(rows: list[dict], path: str) -> None:
-    bench_json.merge_rows(path, rows, ("serve_latency",), geometry=TABLE3)
+    # own "serve_recovery" only when actually merging such a row — a plain
+    # latency run must not wipe recovery rows merged earlier
+    kinds = ("serve_latency",)
+    if any(r.get("kind") == "serve_recovery" for r in rows):
+        kinds = ("serve_latency", "serve_recovery")
+    bench_json.merge_rows(path, rows, kinds, geometry=TABLE3)
 
 
 def main(argv=None):
@@ -202,6 +321,16 @@ def main(argv=None):
         "faults injected i.i.d. at this rate (seeded), absorbed by "
         "retry/backpressure — streams stay bit-exact, the row reports the "
         "throughput/latency cost and is never gated",
+    )
+    ap.add_argument(
+        "--kill-at",
+        type=int,
+        default=None,
+        metavar="N",
+        help="ALSO measure a crash-recovery row: abandon a journaled trace "
+        "after its N-th dispatch, rebuild with AsyncDecodeService.recover, "
+        "report recovery_ms (never gated) — resumed streams must still "
+        "deliver bit-exact",
     )
     ap.add_argument(
         "--smoke",
@@ -236,6 +365,16 @@ def main(argv=None):
     if args.fault_rate > 0.0:
         # the degraded row rides NEXT TO the clean one: same trace, faults on
         rows += run(**kw, fault_rate=args.fault_rate)
+    if args.kill_at is not None:
+        rkw = {k: kw[k] for k in (
+            "code", "backend", "n_streams", "payload_bits", "chunk_bits",
+            "max_batch_blocks", "reps", "smoke",
+        )}
+        if args.smoke:
+            # recovery_ms is report-only; a small fleet measures it just as
+            # well and keeps the CI job from doubling its runtime
+            rkw.update(n_streams=4, payload_bits=1024, chunk_bits=256, reps=1)
+        rows += run_recovery(**rkw, kill_at=args.kill_at)
     for r in rows:
         print("serve_latency," + ",".join(f"{k}={v}" for k, v in r.items()))
     if args.out:

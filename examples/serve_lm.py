@@ -11,8 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.models import lm
-from repro.serve.serve_step import make_decode_step
+from repro._unused.models import lm
+from repro._unused.serve.serve_step import make_decode_step
 
 
 def serve(arch: str, n_new: int = 48, batch: int = 4):

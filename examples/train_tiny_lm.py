@@ -14,7 +14,7 @@ import argparse
 from repro.configs.base import get_config
 from repro.launch.mesh import make_local_mesh
 from repro.launch.train import TrainLoop, preset_config
-from repro.train.optimizer import AdamWConfig
+from repro._unused.train.optimizer import AdamWConfig
 
 
 def main():
@@ -28,7 +28,7 @@ def main():
     args = ap.parse_args()
 
     cfg = preset_config(args.arch, args.preset)
-    from repro.models import lm as _lm
+    from repro._unused.models import lm as _lm
     import jax
 
     n_params = sum(

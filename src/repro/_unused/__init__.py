@@ -1,0 +1,11 @@
+"""Quarantined seed LM stack — not part of the decoder surface.
+
+The growth seed shipped a full transformer serving/training stack
+(``models/``, ``train/``, ``serve/``, the flash-attention kernel) that
+nothing on the PBVD decode path imports; only the seed's LM smoke tests
+and the ``launch/{train,serve,dryrun,specs}`` LM drivers exercise it.
+It lives under ``_unused/`` — alongside :mod:`repro.configs._unused` —
+so coverage gates, refactors, and the packaging surface track only the
+decoder (ROADMAP item 4). Everything still imports and its tests still
+run; the quarantine is a boundary marker, not a deletion.
+"""

@@ -65,7 +65,7 @@ def _use_flash() -> bool:
 
 
 def _flash_with_xla_bwd(q, k, v, *, causal, window, scale):
-    from repro.kernels.flash_attention import flash_attention
+    from repro._unused.flash_attention import flash_attention
 
     @jax.custom_vjp
     def f(q, k, v):

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import lm
+from repro._unused.models import lm
 
 __all__ = ["make_decode_step", "make_prefill_step", "greedy_generate"]
 

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import lm
+from repro._unused.models import lm
 from repro.sharding.rules import shard
 from .optimizer import AdamWConfig, OptState, adamw_update
 

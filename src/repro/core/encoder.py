@@ -12,7 +12,7 @@ import numpy as np
 
 from .trellis import ConvCode
 
-__all__ = ["encode_np", "encode_jax", "terminate"]
+__all__ = ["encode_np", "encode_jax", "encoder_state", "terminate"]
 
 
 def terminate(bits: np.ndarray, code: ConvCode) -> np.ndarray:
@@ -33,6 +33,25 @@ def encode_np(bits: np.ndarray, code: ConvCode, init_state: int = 0) -> np.ndarr
         out[t] = code.output_bits(s, int(x))
         s = (int(x) << (code.v - 1)) | (s >> 1)
     return out
+
+
+def encoder_state(bits: np.ndarray, code: ConvCode, init_state: int = 0) -> int:
+    """Encoder state after consuming ``bits`` from ``init_state``.
+
+    The shift register holds the last ``v`` input bits, so only
+    ``bits[-v:]`` can influence the result — the fold is O(v) regardless of
+    stream length.  This is what lets the serving layer's integrity sentinel
+    re-encode any delivered block mid-stream: tracking the last ``v``
+    delivered bits per stream reproduces ``encode_np``'s state at every
+    block boundary.
+    """
+    bits = np.asarray(bits, dtype=np.int64)
+    if len(bits) > code.v:
+        bits = bits[-code.v :]
+    s = int(init_state)
+    for x in bits:
+        s = (int(x) << (code.v - 1)) | (s >> 1)
+    return s
 
 
 def encode_jax(bits: jnp.ndarray, code: ConvCode, init_state: int = 0) -> jnp.ndarray:

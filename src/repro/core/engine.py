@@ -63,7 +63,15 @@ class ArraySessionStore:
     * ``read(lo, n)`` — up to ``n`` rows from ``lo`` (short at the tail,
       never padded: framing owns the zero-padding);
     * ``drop_prefix(n)`` — discard the first ``n`` stages (committed blocks);
-    * ``close()`` — release backing storage (idempotent).
+    * ``close()`` — release backing storage (idempotent);
+    * ``snapshot()`` — a picklable dict of the held rows (logical content
+      only — paged stores do NOT record page ids, so a snapshot restores
+      into any store, slab-backed or not);
+    * ``restore(snap)`` — load a snapshot into an EMPTY store.
+
+    ``snapshot``/``restore`` are the durability seam (DESIGN.md §15): the
+    serving layer's checkpoint writer snapshots every live session and the
+    crash-recovery path restores them into freshly allocated stores.
     """
 
     def __init__(self, R: int):
@@ -93,6 +101,14 @@ class ArraySessionStore:
 
     def close(self) -> None:
         self._a = np.zeros((0, self._a.shape[1]), np.float32)
+
+    def snapshot(self) -> dict:
+        return {"rows": self._a.copy()}
+
+    def restore(self, snap: dict) -> None:
+        if len(self._a):
+            raise ValueError("restore() target store is not empty")
+        self._a = np.asarray(snap["rows"], np.float32).copy()
 
 
 def _pow2_at_least(n: int) -> int:
@@ -471,6 +487,36 @@ class DecoderSession:
     def ingest(self, chunk) -> None:
         """Buffer a chunk without decoding (used by pooled sessions)."""
         self._ingest(np.asarray(chunk))
+
+    def snapshot(self) -> dict:
+        """Picklable session state: the buffered-symbol window plus the
+        scalars that position it in the stream (overlap base, block counter,
+        puncture phase, quantization dtype).  Restoring the snapshot into a
+        fresh session continues the stream bit-exact — the checkpoint half
+        of the serving layer's crash-recovery contract (DESIGN.md §15)."""
+        return dict(
+            store=self._store.snapshot(),
+            base=self._base,
+            blocks_done=self._blocks_done,
+            kept_seen=self._kept_seen,
+            int_dtype=(
+                np.dtype(self._int_dtype).str if self._int_dtype is not None else None
+            ),
+            started=self._started,
+            bits_emitted=self.bits_emitted,
+        )
+
+    def restore(self, snap: dict) -> None:
+        """Load a :meth:`snapshot` into this (freshly created) session."""
+        self._store.restore(snap["store"])
+        self._base = int(snap["base"])
+        self._blocks_done = int(snap["blocks_done"])
+        self._kept_seen = int(snap["kept_seen"])
+        self._int_dtype = (
+            np.dtype(snap["int_dtype"]) if snap["int_dtype"] is not None else None
+        )
+        self._started = bool(snap["started"])
+        self.bits_emitted = int(snap["bits_emitted"])
 
     def ready_blocks(self) -> int:
         """Highest block index b1 such that blocks [0, b1) are decodable now."""

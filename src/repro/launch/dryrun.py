@@ -50,10 +50,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
     from repro.launch.mesh import make_production_mesh
     from repro.launch.specs import ENCODER_CTX, SKIPS, input_specs, make_cell
     from repro.sharding.rules import axis_rules, tree_shardings
-    from repro.models import lm
-    from repro.serve.serve_step import make_decode_step, make_prefill_step
-    from repro.train.optimizer import AdamWConfig, adamw_init
-    from repro.train.train_step import make_train_step
+    from repro._unused.models import lm
+    from repro._unused.serve.serve_step import make_decode_step, make_prefill_step
+    from repro._unused.train.optimizer import AdamWConfig, adamw_init
+    from repro._unused.train.train_step import make_train_step
 
     t0 = time.time()
     if (arch, shape_name) in SKIPS:
@@ -87,7 +87,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
             opt_cfg = AdamWConfig()
             opt_specs = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), specs["params"])
             repl = jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
-            from repro.train.optimizer import OptState
+            from repro._unused.train.optimizer import OptState
 
             oshard = OptState(step=repl, m=pspec, v=pspec)
             bshard = {

@@ -50,6 +50,7 @@ __all__ = [
     "StreamError",
     "SymbolError",
     "DispatchError",
+    "IntegrityError",
     "MeshLost",
     "CapacityError",
     "ShedError",
@@ -88,6 +89,31 @@ class SymbolError(StreamError, ValueError):
         # ValueError.__init__ via StreamError's super() chain only stores
         # args; run StreamError's to also pin the stream attribute.
         StreamError.__init__(self, message, stream=stream)
+
+
+class IntegrityError(StreamError):
+    """Delivered bits failed the re-encode integrity screen.
+
+    Raised by the serving layer's end-to-end sentinel
+    (:class:`repro.launch.journal.IntegritySentinel`): the delivered block,
+    re-encoded with the stream's convolutional code, agrees with the received
+    hard decisions on fewer symbols than the path-metric-implied bound allows
+    — the signature of silent data corruption between the kernel and the
+    delivery queue, not of channel noise.  ``agreement`` carries the measured
+    fraction and ``bound`` the threshold it fell below.
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        stream: object | None = None,
+        agreement: float | None = None,
+        bound: float | None = None,
+    ):
+        super().__init__(message, stream=stream)
+        self.agreement = agreement
+        self.bound = bound
 
 
 class DispatchError(DecodeError):
@@ -179,7 +205,17 @@ class RetryPolicy:
         return float(min(self.backoff_s * self.multiplier**attempt, self.max_backoff_s))
 
 
-FAULT_SITES = ("admission", "slab", "dispatch", "mesh", "stream_poison")
+FAULT_SITES = (
+    "admission",
+    "slab",
+    "dispatch",
+    "mesh",
+    "stream_poison",
+    # new sites append at the END: per-site rng streams are seeded by the
+    # site's index in this tuple, so reordering would silently reshuffle
+    # every rate-based chaos schedule
+    "decode_corrupt",
+)
 
 
 class FaultInjector:
@@ -207,6 +243,10 @@ class FaultInjector:
     * ``"stream_poison"`` — the Nth ``open()``-ed stream carries symbols
       that reproducibly kill any launch containing them; isolated by
       bisection.
+    * ``"decode_corrupt"`` — silent data corruption: one bit of a freshly
+      delivered block is flipped AFTER the kernel ran (consulted once per
+      stream-with-delivery per dispatch); caught by the re-encode
+      integrity sentinel, never by launch-level validation.
 
     ``counts[site]`` is how often a site was consulted, ``fired[site]`` how
     often it injected — both live on the instance for test assertions.

@@ -19,8 +19,8 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.launch.mesh import make_local_mesh
-from repro.models import lm
-from repro.serve.serve_step import make_decode_step
+from repro._unused.models import lm
+from repro._unused.serve.serve_step import make_decode_step
 from repro.sharding.rules import axis_rules
 
 

@@ -54,11 +54,13 @@ from :meth:`AsyncDecodeService.aclose` — nothing hangs.
 from __future__ import annotations
 
 import asyncio
+import copy
 import time
 from collections import Counter, deque
 
 import numpy as np
 
+from repro.core.encoder import encoder_state
 from repro.launch.faults import (
     CapacityError,
     DecodeError,
@@ -70,6 +72,7 @@ from repro.launch.faults import (
     StreamError,
     nonfinite_error,
 )
+from repro.launch.journal import ChunkJournal, IntegritySentinel
 from repro.launch.serve_decoder import SessionPool
 from repro.launch.slab import SlabExhausted, SymbolSlab
 
@@ -156,6 +159,14 @@ class AsyncStream:
         self._inflight: deque[tuple[float, int]] = deque()  # (t_admit, watermark)
         self.finished = False
         self.failed: StreamError | None = None  # set when quarantined
+        # ---- durability state (DESIGN.md §15) ----
+        self.sid = -1  # journal stream id (assigned by the service's open())
+        self.chunks_admitted = 0  # admitted chunks ever (resume cursor)
+        self.bits_taken = 0  # client-visible bits returned by take()/finish()
+        self.acked_bits = 0  # durable client watermark (journal "ack" records)
+        self._retained: list[np.ndarray] = []  # taken-but-unacked (redeliverable)
+        self._suppress = 0  # post-recovery bits the client already holds
+        self._enc_state = 0  # encoder state after all delivered bits (sentinel)
 
     async def send(self, chunk) -> None:
         """Admit one chunk (backpressure-aware; see the module docstring).
@@ -166,11 +177,40 @@ class AsyncStream:
         """
         await self._service._admit(self, chunk)
 
-    def take(self) -> np.ndarray:
-        """Drain every decoded bit delivered by dispatches so far."""
+    def take(self, *, ack: bool = True) -> np.ndarray:
+        """Drain every decoded bit delivered by dispatches so far.
+
+        ``ack=True`` (default) also marks the bits as durably held by the
+        client — the journal may forget them and recovery will not
+        redeliver.  A client that persists bits itself should take with
+        ``ack=False``, persist, then call :meth:`ack`: bits taken but
+        unacked are retained service-side and redelivered after a crash.
+        """
         if self.failed is not None:
             raise self.failed
-        return self._handle.take()
+        out = self._consume(self._handle.take())
+        if ack:
+            self.ack()
+        elif len(out):
+            self._retained.append(out)
+        return out
+
+    def ack(self) -> None:
+        """Durably acknowledge every bit taken so far (journal watermark)."""
+        self._retained.clear()
+        if self.acked_bits != self.bits_taken:
+            self.acked_bits = self.bits_taken
+            self._service._journal_ack(self)
+
+    def _consume(self, raw: np.ndarray) -> np.ndarray:
+        """Client-position bookkeeping: swallow the post-recovery overlap
+        (bits the client durably acked before the crash), then advance."""
+        if self._suppress:
+            cut = min(self._suppress, len(raw))
+            raw = raw[cut:]
+            self._suppress -= cut
+        self.bits_taken += len(raw)
+        return raw
 
     async def finish(self, n_bits: int | None = None) -> np.ndarray:
         """Flush the stream and release its slab pages; returns undrained
@@ -228,8 +268,30 @@ class AsyncDecodeService:
         :class:`~repro.launch.faults.ShedError` instead of parking forever.
         None (default) parks indefinitely, the pre-fault behaviour.
     fault_injector: a :class:`~repro.launch.faults.FaultInjector` consulted
-        at the admission / slab / dispatch / mesh / open boundaries (chaos
-        testing + the degraded-mode benchmark). None injects nothing.
+        at the admission / slab / dispatch / mesh / open / decode_corrupt
+        boundaries (chaos testing + the degraded-mode benchmark). None
+        injects nothing.
+    journal: a :class:`~repro.launch.journal.ChunkJournal` making the
+        service crash-safe (DESIGN.md §15): admitted chunks, delivered-bit
+        acks, and dispatch commits are write-ahead logged, and per-stream
+        session state checkpoints every ``checkpoint_every`` dispatches.
+        After a crash, :meth:`recover` rebuilds the service bit-exact. None
+        (default) serves ephemerally, the pre-PR-10 behaviour.
+    checkpoint_every: dispatches between periodic checkpoints (with a
+        journal); each checkpoint truncates the superseded log. 0/None
+        disables periodic checkpoints (the journal alone still recovers —
+        replay just starts further back).
+    integrity_rate: probability that a delivered block span is screened by
+        the re-encode integrity sentinel (0.0 = off, the default; 1.0 =
+        every delivery). A flagged stream quarantines with a typed
+        :class:`~repro.launch.faults.IntegrityError` exactly like any other
+        per-stream fault.
+    integrity_min_agreement: the sentinel's re-encode agreement bound
+        (see DESIGN.md §15 for the derivation of the 0.85 default).
+    integrity_seed: seed for the sentinel's sampling rng.
+    on_dispatch: optional callback ``on_dispatch(service)`` invoked after
+        every completed dispatch (the crash-drill kill hook; also handy for
+        external metrics scrapes).
     """
 
     def __init__(
@@ -244,6 +306,12 @@ class AsyncDecodeService:
         retry: RetryPolicy | None = None,
         shed_deadline_ms: float | None = None,
         fault_injector: FaultInjector | None = None,
+        journal: ChunkJournal | None = None,
+        checkpoint_every: int | None = 16,
+        integrity_rate: float = 0.0,
+        integrity_min_agreement: float = 0.85,
+        integrity_seed: int = 0,
+        on_dispatch=None,
     ):
         self._pool = SessionPool()
         self._slab = slab
@@ -284,6 +352,24 @@ class AsyncDecodeService:
         self.retries = 0
         self.shed_blocks = 0
         self.quarantined_streams = 0
+        # ---- durability + integrity state (DESIGN.md §15) ----
+        self._journal = journal
+        self.checkpoint_every = checkpoint_every
+        self._sentinel = (
+            IntegritySentinel(
+                rate=integrity_rate,
+                min_agreement=integrity_min_agreement,
+                seed=integrity_seed,
+            )
+            if integrity_rate > 0.0
+            else None
+        )
+        self.on_dispatch = on_dispatch
+        self._by_sid: dict[int, AsyncStream] = {}
+        self._next_sid = 0
+        self._recovering = False  # replay in progress: suppress re-journaling
+        self.checkpoints_written = 0
+        self.recovered_streams: dict[int, AsyncStream] = {}
 
     # ---- lifecycle -----------------------------------------------------------------
     async def __aenter__(self) -> "AsyncDecodeService":
@@ -327,8 +413,13 @@ class AsyncDecodeService:
         store = self._slab.open_store() if self._slab is not None else None
         handle = self._pool.open(engine, interpret=interpret, store=store)
         stream = AsyncStream(self, handle)
+        stream.sid = self._next_sid
+        self._next_sid += 1
         self._streams.append(stream)
         self._by_handle[handle] = stream
+        self._by_sid[stream.sid] = stream
+        if self._journal is not None and not self._recovering:
+            self._journal.append("open", stream.sid)
         if self._injector is not None and self._injector.fire("stream_poison"):
             # this stream's symbols will reproducibly kill any launch that
             # contains them (the bisection protocol isolates it)
@@ -373,7 +464,13 @@ class AsyncDecodeService:
         """
         self.dispatches += 1
         self._batcher.fired()
+        checks = (
+            self._sentinel_capture()
+            if self._sentinel is not None and not self._recovering
+            else []
+        )
         before = {id(st): st._handle.bits_emitted for st in self._streams}
+        qmarks = {id(st): len(st._handle._queue) for st in self._streams}
         try:
             self._pool.step()
         except MeshLost as exc:
@@ -412,13 +509,40 @@ class AsyncDecodeService:
         if delivered:
             self._bits_delivered += delivered
             self._t_last = now
+        # ---- end-to-end integrity pipeline (DESIGN.md §15): the
+        # decode_corrupt fault site mutates freshly delivered bits, the
+        # sentinel screens them against the pre-step soft symbols, and the
+        # per-stream encoder state folds forward over whatever was (really)
+        # delivered — corrupted or not, the state must follow the bits the
+        # client will see
+        new_bits = self._collect_new_bits(qmarks)
+        for st, window, code, state0 in checks:
+            bits = new_bits.get(id(st))
+            if st.failed is not None or bits is None:
+                continue
+            err = self._sentinel.check(bits, window, code, state0, stream=st._handle)
+            if err is not None:
+                self._count_error(err)
+                self._fail_stream(st, err)
+        for st in self._streams:
+            bits = new_bits.get(id(st))
+            if bits is not None and len(bits):
+                st._enc_state = encoder_state(
+                    bits, st._handle._session.spec.code, st._enc_state
+                )
         for stream in self._streams:
             stream._complete_upto(now)
         for ps, err in self._pool.drain_quarantined():
             st = self._by_handle.get(ps)
             if st is not None:
                 self._fail_stream(st, err)
+        if self._journal is not None and not self._recovering:
+            self._journal.append("commit", self.dispatches)
+            if self.checkpoint_every and self.dispatches % self.checkpoint_every == 0:
+                self._checkpoint()
         self._space.set()  # decoded blocks dropped pages + pending count
+        if self.on_dispatch is not None and not self._recovering:
+            self.on_dispatch(self)
 
     async def _run(self) -> None:
         try:
@@ -522,7 +646,11 @@ class AsyncDecodeService:
         if stream in self._streams:
             self._streams.remove(stream)
         self._by_handle.pop(stream._handle, None)
+        self._by_sid.pop(stream.sid, None)
         self.quarantined_streams += 1
+        if self._journal is not None and not self._recovering:
+            # replay drops the stream instead of re-feeding a known-bad one
+            self._journal.append("fail", stream.sid, str(err))
         self._space.set()  # freed pages may unblock parked senders
 
     def _fail_service(self, exc: BaseException) -> None:
@@ -538,6 +666,213 @@ class AsyncDecodeService:
         self._count_error(err)
         self._space.set()  # parked senders wake → _check_live raises
         self._work.set()
+
+    # ---- durability + integrity (DESIGN.md §15) --------------------------------------
+    def _journal_ack(self, stream: AsyncStream) -> None:
+        if self._journal is not None and not self._recovering:
+            self._journal.append("ack", stream.sid, stream.acked_bits)
+
+    def _checkpoint(self) -> None:
+        """Atomically persist every live stream's session state + the
+        unacked delivery tail; truncates the superseded journal log."""
+        if self._journal is None:
+            return
+        streams = {}
+        for st in self._streams:
+            s = st._handle._session
+            streams[st.sid] = dict(
+                session=s.snapshot(),
+                # the UNACKED tail: taken-but-unacked bits rejoin the queue
+                # so recovery redelivers everything past the ack watermark
+                queue=[np.asarray(a) for a in (*st._retained, *st._handle._queue)],
+                handle_bits=st._handle.bits_emitted,
+                acked=st.acked_bits,
+                enc_state=st._enc_state,
+                chunks_admitted=st.chunks_admitted,
+            )
+        self._journal.write_checkpoint(
+            dict(dispatches=self.dispatches, streams=streams)
+        )
+        self.checkpoints_written += 1
+
+    def _sentinel_capture(self) -> list[tuple]:
+        """Pre-step capture for the re-encode sentinel: each sampled
+        stream's about-to-decode soft-symbol span (the commit will drop it
+        from the store) plus its encoder state at the span's first stage."""
+        checks = []
+        for st in self._streams:
+            s = st._handle._session
+            b1 = s.ready_blocks()
+            if b1 <= s._blocks_done or not self._sentinel.sample():
+                continue
+            D = s.cfg.D
+            lo = s._blocks_done * D - s._base  # = min(blocks_done·D, L) ≥ 0
+            window = np.array(
+                s._store.read(lo, (b1 - s._blocks_done) * D), np.float32
+            )
+            checks.append((st, window, s.spec.code, st._enc_state))
+        return checks
+
+    def _collect_new_bits(self, qmarks: dict) -> dict[int, np.ndarray]:
+        """Bits THIS dispatch delivered per stream (delivery-queue growth
+        past the pre-step mark), with the ``decode_corrupt`` fault site
+        applied in place — silent corruption strikes after the kernel."""
+        out = {}
+        for st in list(self._streams):
+            k = qmarks.get(id(st))
+            if k is None:
+                continue
+            new = st._handle._queue[k:]
+            if not new:
+                continue
+            if self._injector is not None and self._injector.fire("decode_corrupt"):
+                # one delivered payload bit flips, silently — in the QUEUE
+                # itself (the client takes the corrupt bit; only the
+                # sentinel can notice), via a copy: queue arrays may be
+                # read-only views of device output
+                first = np.array(new[0])
+                first[0] ^= 1
+                new[0] = st._handle._queue[k] = first
+            out[id(st)] = np.concatenate(new) if len(new) > 1 else new[0]
+        return out
+
+    @classmethod
+    def recover(
+        cls,
+        journal: ChunkJournal,
+        engine,
+        *,
+        interpret: bool | None = None,
+        **service_kwargs,
+    ) -> "AsyncDecodeService":
+        """Rebuild a service from ``journal`` after a crash (DESIGN.md §15).
+
+        Restores every checkpointed stream's session into fresh (slab)
+        stores, then replays the unapplied journal records in admission
+        order — re-feeding unacked chunks, re-applying ack watermarks, and
+        dropping finished/quarantined streams.  Block independence makes
+        the continuation bit-exact: recovered streams deliver exactly the
+        bits past each client's ack watermark that the uninterrupted run
+        would have delivered.
+
+        ``engine`` is the decode engine for every recovered stream (engines
+        hold meshes/compiled state and are not serializable; a restarted
+        process rebuilds them the same way it did originally).  Recovered
+        streams are exposed in :attr:`recovered_streams` keyed by their
+        stable ``sid`` — assigned in ``open()`` order, so a driver that
+        opens its streams deterministically can rebind them. Ends with a
+        fresh checkpoint, so a crash during a long replay never compounds.
+        """
+        svc = cls(journal=journal, **service_kwargs)
+        svc._recovering = True
+        try:
+            ckpt, records = journal.load()
+            if ckpt is not None:
+                svc.dispatches = int(ckpt.get("dispatches", 0))
+                for sid in sorted(ckpt["streams"]):
+                    svc._restore_stream(
+                        int(sid), engine, ckpt["streams"][sid], interpret=interpret
+                    )
+            for rec in records:
+                svc._replay(rec, engine, interpret)
+        finally:
+            svc._recovering = False
+        svc.recovered_streams = dict(svc._by_sid)
+        svc._checkpoint()  # collapse the replay: a re-crash replays nothing
+        if svc._pool.pending_blocks() > 0:
+            svc._batcher.note_feed()  # replayed blocks are ready: arm dispatch
+            svc._work.set()
+        return svc
+
+    def _restore_stream(
+        self, sid: int, engine, snap: dict, *, interpret: bool | None = None
+    ) -> AsyncStream:
+        store = self._slab.open_store() if self._slab is not None else None
+        handle = self._pool.open(engine, interpret=interpret, store=store)
+        handle._session.restore(snap["session"])
+        handle._queue.extend(np.asarray(a) for a in snap["queue"])
+        handle.bits_emitted = int(snap["handle_bits"])
+        stream = AsyncStream(self, handle)
+        stream.sid = sid
+        # the client's position restarts at the checkpoint's ack watermark;
+        # replayed ack records past it turn into suppression below
+        stream.bits_taken = stream.acked_bits = int(snap["acked"])
+        stream._enc_state = int(snap["enc_state"])
+        stream.chunks_admitted = int(snap["chunks_admitted"])
+        self._streams.append(stream)
+        self._by_handle[handle] = stream
+        self._by_sid[sid] = stream
+        self._next_sid = max(self._next_sid, sid + 1)
+        return stream
+
+    def _replay(self, rec: tuple, engine, interpret: bool | None) -> None:
+        """Apply one journal record during :meth:`recover`."""
+        _seq, kind, *fields = rec
+        if kind == "open":
+            (sid,) = fields
+            if sid in self._by_sid:
+                return
+            self._next_sid = max(self._next_sid, int(sid))
+            st = self.open(engine, interpret=interpret)
+            assert st.sid == sid, f"replayed open sid {sid} != assigned {st.sid}"
+        elif kind == "admit":
+            sid, chunk = fields
+            st = self._by_sid.get(sid)
+            if st is None or st.failed is not None or st.finished:
+                return
+            self._feed_replay(st, np.asarray(chunk))
+        elif kind == "ack":
+            sid, acked = fields
+            st = self._by_sid.get(sid)
+            if st is None:
+                return
+            gap = int(acked) - st.acked_bits
+            if gap > 0:
+                # the client durably holds these bits: swallow them instead
+                # of redelivering (the no-duplicate-delivery invariant)
+                st._suppress += gap
+                st.acked_bits = st.bits_taken = int(acked)
+        elif kind == "finish":
+            (sid,) = fields
+            st = self._by_sid.pop(sid, None)
+            if st is None:
+                return
+            st.finished = True
+            self._pool.close(st._handle)
+            st._handle._session.close()
+            if st in self._streams:
+                self._streams.remove(st)
+            self._by_handle.pop(st._handle, None)
+        elif kind == "fail":
+            sid, msg = fields
+            st = self._by_sid.get(sid)
+            if st is not None:
+                self._fail_stream(st, StreamError(f"recovered quarantine: {msg}"))
+        elif kind == "commit":
+            (dispatches,) = fields
+            self.dispatches = max(self.dispatches, int(dispatches))
+        # unknown kinds are skipped: an older journal replays under a newer
+        # service as long as the kinds it DID write still mean the same
+
+    def _feed_replay(self, st: AsyncStream, chunk: np.ndarray) -> None:
+        """Re-feed a journaled chunk, retiring slab pages via a dispatch on
+        exhaustion exactly like live backpressure would have."""
+        try:
+            try:
+                st._handle.feed(chunk)
+            except SlabExhausted:
+                if self._pool.pending_blocks() <= 0:
+                    raise
+                self._dispatch()  # frees committed pages, as a live wait would
+                st._handle.feed(chunk)
+        except StreamError as err:
+            # deterministically bad symbols fail on replay exactly as they
+            # did live: quarantine and move on
+            self._count_error(err)
+            self._fail_stream(st, err)
+            return
+        st.chunks_admitted += 1
+        self._batcher.note_feed()
 
     # ---- admission -----------------------------------------------------------------
     def _check_live(self, stream: AsyncStream) -> None:
@@ -590,6 +925,18 @@ class AsyncDecodeService:
                 self._fail_stream(stream, err)
                 raise
             break
+        # WAL the admitted chunk BEFORE admission completes (before the
+        # chunk becomes dispatchable). Logging after the feed keeps shed/
+        # quarantined admissions out of the journal; a crash in the gap
+        # just loses an unconfirmed send() — the client's resume cursor
+        # (chunks_admitted, derived from this record) re-sends it.
+        if self._journal is not None and not self._recovering:
+            try:
+                self._journal.append("admit", stream.sid, np.asarray(chunk))
+            except OSError as exc:  # durability broken → the service is dead
+                self._fail_service(exc)
+                raise self._failure from exc
+        stream.chunks_admitted += 1
         now = self._clock()
         if self._t_first is None:
             self._t_first = now
@@ -631,6 +978,18 @@ class AsyncDecodeService:
         if stream.finished:
             raise ValueError("finish() called twice on one stream")
         before = stream._handle.bits_emitted
+        cap = None
+        if self._sentinel is not None and not self._recovering:
+            s = stream._handle._session
+            nb, _n_blocks, prior = s._finish_plan(n_bits)
+            if nb > prior and self._sentinel.sample():
+                # flush-tail capture: the store may be short of the padded
+                # window — check() treats missing stages as excluded zeros
+                cap = (
+                    np.array(s._store.read(prior - s._base, nb - prior), np.float32),
+                    s.spec.code,
+                    stream._enc_state,
+                )
         attempt = 0
         while True:
             try:
@@ -660,6 +1019,24 @@ class AsyncDecodeService:
                 await asyncio.sleep(self.retry.delay_s(attempt))
                 attempt += 1
                 self.retries += 1
+        if cap is not None:
+            tail_len = stream._handle.bits_emitted - before
+            tail = bits[len(bits) - tail_len :] if tail_len else bits[:0]
+            err = self._sentinel.check(
+                tail, cap[0], cap[1], cap[2], stream=stream._handle
+            )
+            if err is not None:
+                self._count_error(err)
+                self._fail_stream(stream, err)
+                raise err
+        bits = stream._consume(bits)
+        stream._retained.clear()
+        if stream.acked_bits != stream.bits_taken:
+            # finish() is the terminal hand-off: returning implies delivery
+            stream.acked_bits = stream.bits_taken
+            self._journal_ack(stream)
+        if self._journal is not None and not self._recovering:
+            self._journal.append("finish", stream.sid)
         now = self._clock()
         self._bits_delivered += stream._handle.bits_emitted - before
         self._t_last = now
@@ -669,7 +1046,10 @@ class AsyncDecodeService:
         stream._handle._session.close()  # slab pages → free-list
         self._streams.remove(stream)  # keep the live list O(live streams)
         self._by_handle.pop(stream._handle, None)
+        self._by_sid.pop(stream.sid, None)
         self._space.set()  # freed pages may unblock waiting senders
+        if self._journal is not None and not self._recovering and not self._streams:
+            self._checkpoint()  # everything delivered + acked: log truncates
         return bits
 
     # ---- accounting ----------------------------------------------------------------
@@ -700,11 +1080,26 @@ class AsyncDecodeService:
             slab_pages_high_water=(
                 self._slab.high_water if self._slab is not None else None
             ),
-            # failure-model observability (DESIGN.md §14)
-            errors_by_class=dict(self._errors_by_class),
+            # failure-model observability (DESIGN.md §14) — deep-copied:
+            # callers mutating the snapshot must never reach live counters
+            errors_by_class=copy.deepcopy(dict(self._errors_by_class)),
+            faults_injected=(
+                copy.deepcopy(dict(self._injector.fired))
+                if self._injector is not None
+                else {}
+            ),
             retries=self.retries,
             shed_blocks=self.shed_blocks,
             quarantined_streams=self.quarantined_streams,
+            # durability + integrity observability (DESIGN.md §15)
+            checkpoints=self.checkpoints_written,
+            journal_seq=(self._journal.seq if self._journal is not None else None),
+            integrity_checked=(
+                self._sentinel.checked if self._sentinel is not None else 0
+            ),
+            integrity_flagged=(
+                self._sentinel.flagged if self._sentinel is not None else 0
+            ),
         )
 
 

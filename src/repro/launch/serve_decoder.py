@@ -496,6 +496,144 @@ def _serve_pooled(engine, spec, cfg, args) -> None:
     )
 
 
+def _serve_async_durable(engine, spec, cfg, args) -> int:
+    """Durable serving drill: journaled admissions, client-side delivered-bit
+    persistence, optional mid-trace SIGKILL, and ``recover()`` restart.
+
+    The client protocol per stream ``i``:
+
+    * deliveries are drained with ``take(ack=False)``, appended to
+      ``{journal_dir}/delivered-{i}.bits`` (one uint8 byte per bit),
+      fsync'd, and only THEN acked — so the service's ack watermark never
+      runs ahead of the durable file;
+    * sending resumes from ``stream.chunks_admitted`` (the WAL-derived
+      cursor), so a chunk lost in the crash gap between ``send()`` and its
+      admit record is simply re-sent;
+    * on ``--recover``, each file is truncated back to the recovered ack
+      watermark — bytes persisted after the last durable ack are exactly
+      the bits recovery will redeliver (the no-duplicate invariant).
+
+    Returns a process exit code: 0 = every stream's delivered bits match
+    the one-shot reference decode, 1 = mismatch, 3 = ``--kill-at`` was set
+    but the trace completed without reaching the kill point.
+    """
+    import asyncio
+    import os
+    import signal
+
+    from repro.launch.journal import ChunkJournal
+    from repro.launch.serve_async import AsyncDecodeService
+    from repro.launch.slab import SymbolSlab
+
+    n_bits = args.chunk_bits * args.n_chunks
+    streams = [
+        _make_stream(spec, n_bits, args.ebn0, args.seed + i)
+        for i in range(args.streams)
+    ]
+    cs = max(1, len(streams[0][1]) // args.n_chunks)
+    chunk_lists = [
+        [y[k * cs : (k + 1) * cs] for k in range(-(-len(y) // cs))]
+        for _, y in streams
+    ]
+    slab = SymbolSlab(
+        n_pages=args.slab_pages, page_stages=cfg.D + 2 * cfg.L, R=spec.code.R
+    )
+    journal = ChunkJournal(args.journal_dir)
+    service_kwargs = dict(
+        max_batch_blocks=args.max_batch_blocks,
+        deadline_ms=args.deadline_ms,
+        slab=slab,
+        journal=journal,
+        integrity_rate=args.integrity_rate,
+    )
+    if args.kill_at is not None:
+
+        def _kill_hook(svc):
+            if svc.dispatches >= args.kill_at:
+                os.kill(os.getpid(), signal.SIGKILL)  # no cleanup: a real crash
+
+        service_kwargs["on_dispatch"] = _kill_hook
+
+    async def _client(i, stream):
+        path = os.path.join(args.journal_dir, f"delivered-{i}.bits")
+        if stream is None:  # finished before the crash; its file is complete
+            return
+        mode = "r+b" if args.recover and os.path.exists(path) else "wb"
+        with open(path, mode) as f:
+            if mode == "r+b":
+                f.seek(0, os.SEEK_END)
+                assert f.tell() >= stream.acked_bits, (
+                    f"stream {i}: durable file shorter than ack watermark "
+                    f"({f.tell()} < {stream.acked_bits})"
+                )
+                f.truncate(stream.acked_bits)  # un-acked tail gets redelivered
+                f.seek(0, os.SEEK_END)
+
+            def persist(bits):
+                if len(bits):
+                    f.write(np.asarray(bits, np.uint8).tobytes())
+                    f.flush()
+                    os.fsync(f.fileno())
+                stream.ack()
+
+            chunks = chunk_lists[i]
+            # paced sends (unlike the ephemeral trace, deterministic spacing
+            # not Poisson): the deadline dispatcher must actually run between
+            # arrivals or the whole trace would flush inside finish() and a
+            # --kill-at dispatch boundary would never be crossed
+            gap_s = 1.0 / args.rate_chunks_per_s if args.rate_chunks_per_s else 0.0
+            for k in range(stream.chunks_admitted, len(chunks)):
+                await stream.send(chunks[k])
+                await asyncio.sleep(gap_s)
+                persist(stream.take(ack=False))
+            persist(await stream.finish(n_bits))
+
+    async def drive():
+        if args.recover:
+            kw = {k: v for k, v in service_kwargs.items() if k != "journal"}
+            svc = AsyncDecodeService.recover(journal, engine, **kw)
+        else:
+            svc = AsyncDecodeService(**service_kwargs)
+        async with svc:
+            # sid == stream index by construction: streams open in index
+            # order on the fresh run, and sids are stable across recovery
+            if args.recover:
+                handles = [svc.recovered_streams.get(i) for i in range(args.streams)]
+            else:
+                handles = [svc.open(engine) for _ in range(args.streams)]
+            await asyncio.gather(*(_client(i, h) for i, h in enumerate(handles)))
+            return svc.metrics()
+
+    t0 = time.perf_counter()
+    m = asyncio.run(drive())
+    dt = time.perf_counter() - t0
+    journal.close()
+    if args.kill_at is not None:
+        print(
+            f"[serve_decoder] --kill-at {args.kill_at} never reached "
+            f"({m['dispatches']} dispatches total)"
+        )
+        return 3
+
+    bad = 0
+    for i, (_, y) in enumerate(streams):
+        path = os.path.join(args.journal_dir, f"delivered-{i}.bits")
+        got = np.frombuffer(open(path, "rb").read(), np.uint8)
+        sess = engine.session()
+        ref = np.concatenate([sess.decode(y), sess.finish(n_bits)])
+        if len(got) != n_bits or np.any(got != ref):
+            bad += 1
+            print(f"[serve_decoder] stream {i}: delivered bits != reference")
+    print(
+        f"[serve_decoder] durable: {args.streams} streams × {n_bits} bits in "
+        f"{dt*1e3:.0f} ms ({m['dispatches']} dispatches, "
+        f"{m['checkpoints']} checkpoints, journal seq {m['journal_seq']}, "
+        f"integrity {m['integrity_flagged']}/{m['integrity_checked']} flagged); "
+        f"{'all streams bit-exact vs reference' if not bad else f'{bad} stream(s) MISMATCHED'}"
+    )
+    return 0 if bad == 0 else 1
+
+
 def _serve_async(engine, spec, cfg, args) -> None:
     """Drive the asyncio service under a Poisson arrival trace (the
     serving-layer shape: admission → paged slabs → deadline dispatch)."""
@@ -654,7 +792,41 @@ def main() -> None:
         default=1000.0,
         help="per-stream Poisson chunk arrival rate for --serve-async",
     )
+    ap.add_argument(
+        "--journal-dir",
+        default=None,
+        help="with --serve-async: write-ahead journal admitted chunks + "
+        "checkpoint session state under this directory, and persist each "
+        "stream's delivered bits to delivered-<i>.bits (crash-safe serving, "
+        "DESIGN.md §15)",
+    )
+    ap.add_argument(
+        "--integrity-rate",
+        type=float,
+        default=0.0,
+        help="fraction of deliveries screened by the re-encode integrity "
+        "sentinel (0 = off; 1 = every delivery); flagged streams quarantine "
+        "with IntegrityError",
+    )
+    ap.add_argument(
+        "--kill-at",
+        type=int,
+        default=None,
+        help="with --journal-dir: SIGKILL this process the moment the "
+        "dispatch counter reaches N (crash drill; exit 3 if never reached)",
+    )
+    ap.add_argument(
+        "--recover",
+        action="store_true",
+        help="with --journal-dir: rebuild the service from the journal "
+        "(checkpoint + replay) instead of starting fresh, resume the trace, "
+        "and verify delivered bits against the one-shot reference",
+    )
     args = ap.parse_args()
+    if (args.kill_at is not None or args.recover) and args.journal_dir is None:
+        ap.error("--kill-at/--recover require --journal-dir")
+    if args.journal_dir is not None and not args.serve_async:
+        ap.error("--journal-dir requires --serve-async")
 
     from repro.launch.mesh import make_decode_mesh, maybe_init_distributed
 
@@ -699,7 +871,9 @@ def main() -> None:
         f"{args.streams} stream(s) × {args.chunk_bits * args.n_chunks} payload bits "
         f"in {args.n_chunks} chunks at Eb/N0={args.ebn0} dB"
     )
-    if args.serve_async:
+    if args.serve_async and args.journal_dir is not None:
+        raise SystemExit(_serve_async_durable(engine, spec, cfg, args))
+    elif args.serve_async:
         _serve_async(engine, spec, cfg, args)
     elif args.streams > 1:
         _serve_pooled(engine, spec, cfg, args)

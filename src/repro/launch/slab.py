@@ -200,6 +200,22 @@ class PagedSessionStore:
                 self._slab.free(p)
             self._pages.clear()
 
+    def snapshot(self) -> dict:
+        """Logical content only — a copy of the held rows, never page ids.
+
+        Restoring allocates FRESH pages from whatever slab backs the target
+        store (``_head`` restarts at 0); page boundaries shift but every
+        logical stage is identical, which is all the session framing reads.
+        """
+        self._check_open()
+        return {"rows": np.array(self.read(0, self._n), np.float32)}
+
+    def restore(self, snap: dict) -> None:
+        self._check_open()
+        if self._n or self._pages:
+            raise ValueError("restore() target store is not empty")
+        self.append(np.asarray(snap["rows"], np.float32))
+
     def close(self) -> None:
         """Return every page to the slab; safe to call repeatedly."""
         if self._closed:

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SHAPES, ModelConfig, ShapeSpec, get_config
-from repro.models import lm
+from repro._unused.models import lm
 
 __all__ = ["Cell", "make_cell", "iter_cells", "SKIPS", "ENCODER_CTX", "input_specs"]
 

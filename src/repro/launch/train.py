@@ -22,13 +22,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.models import lm
+from repro._unused.models import lm
 from repro.sharding.rules import axis_rules, tree_shardings
 from repro.launch.mesh import make_local_mesh
-from repro.train.checkpoint import CheckpointManager
-from repro.train.data import PrefetchPipeline, SyntheticLMStream
-from repro.train.optimizer import AdamWConfig, OptState, adamw_init
-from repro.train.train_step import make_train_step
+from repro._unused.train.checkpoint import CheckpointManager
+from repro._unused.train.data import PrefetchPipeline, SyntheticLMStream
+from repro._unused.train.optimizer import AdamWConfig, OptState, adamw_init
+from repro._unused.train.train_step import make_train_step
 
 __all__ = ["TrainLoop", "main"]
 

@@ -15,7 +15,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import get_config
-from repro.models import lm
+from repro._unused.models import lm
 
 
 def _roundtrip(cfg, S=16, seed=1):

@@ -62,10 +62,10 @@ def test_sharded_train_step_matches_single_device():
     _run("""
         import jax, jax.numpy as jnp, numpy as np, dataclasses
         from repro.configs.base import get_config
-        from repro.models import lm
+        from repro._unused.models import lm
         from repro.sharding.rules import axis_rules, tree_shardings
-        from repro.train.optimizer import AdamWConfig, adamw_init
-        from repro.train.train_step import make_train_step
+        from repro._unused.train.optimizer import AdamWConfig, adamw_init
+        from repro._unused.train.train_step import make_train_step
 
         cfg = dataclasses.replace(get_config("minitron-8b").reduced(), compute_dtype="float32")
         opt_cfg = AdamWConfig(warmup_steps=1, total_steps=10)
@@ -124,11 +124,11 @@ def test_dryrun_smoke_tiny_mesh():
     _run("""
         import jax, jax.numpy as jnp
         from repro.configs.base import get_config
-        from repro.models import lm
+        from repro._unused.models import lm
         from repro.sharding.rules import axis_rules, tree_shardings
         from repro.launch.hlo_analysis import analyze_hlo
-        from repro.train.optimizer import AdamWConfig, adamw_init, OptState
-        from repro.train.train_step import make_train_step
+        from repro._unused.train.optimizer import AdamWConfig, adamw_init, OptState
+        from repro._unused.train.train_step import make_train_step
 
         cfg = get_config("mixtral-8x22b").reduced()
         mesh = jax.make_mesh((4, 2), ("data", "model"))

@@ -10,15 +10,15 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.train.checkpoint import CheckpointManager
-from repro.train.compression import (
+from repro._unused.train.checkpoint import CheckpointManager
+from repro._unused.train.compression import (
     compress_decompress_tree,
     dequantize_int8,
     ef_compress,
     ef_init,
     quantize_int8,
 )
-from repro.train.data import PrefetchPipeline, SyntheticLMStream
+from repro._unused.train.data import PrefetchPipeline, SyntheticLMStream
 
 
 # ---- checkpoint -----------------------------------------------------------------------
@@ -258,7 +258,7 @@ def test_train_loop_failure_recovery(tmp_path):
     from repro.configs.base import get_config
     from repro.launch.mesh import make_local_mesh
     from repro.launch.train import TrainLoop
-    from repro.train.optimizer import AdamWConfig
+    from repro._unused.train.optimizer import AdamWConfig
 
     cfg = get_config("starcoder2-3b").reduced()
     loop = TrainLoop(

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_attention import flash_attention, ref_mha
+from repro._unused.flash_attention import flash_attention, ref_mha
 
 
 def _mk(rng, B, S, T, Hkv, G, dh, dtype):
@@ -62,7 +62,7 @@ def test_flash_matches_model_streaming_path():
     """The kernel agrees with the model's XLA streaming attention (which
     stores the probability tensor in bf16 — §Perf iteration — hence the
     bf16-level tolerance)."""
-    from repro.models.attention import _attend_chunked
+    from repro._unused.models.attention import _attend_chunked
 
     rng = np.random.default_rng(4)
     q, k, v = _mk(rng, 2, 128, 128, 2, 2, 32, np.float32)

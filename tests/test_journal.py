@@ -1,0 +1,509 @@
+"""Crash-safety suite: chunk journal, checkpoint/restore, integrity sentinel.
+
+The DESIGN.md §15 contract end to end:
+
+* **journal mechanics** — record roundtrip, monotone seq across reopen,
+  torn-tail tolerance (a SIGKILL mid-``write()`` loses at most the torn
+  record), CRC corruption stopping replay at the crash frontier, atomic
+  checkpoints compacting the log;
+* **snapshot/restore** — store snapshots (array + paged) and session
+  snapshots restore into fresh objects and continue the stream bit-exact
+  to an uninterrupted run;
+* **kill-point matrix** — a journaled multi-stream trace abandoned at
+  EVERY dispatch boundary (plus before the first dispatch) recovers to
+  deliver exactly the reference bits: acked prefixes never redeliver
+  (suppression), taken-but-unacked tails do redeliver, zero slab pages
+  leak in the recovered incarnation;
+* **property fuzz** — random chunk partitions × metric modes × punctured
+  specs × random kill points (hypothesis, env-scaled example count);
+* **integrity sentinel** — an injected post-kernel bit flip
+  (``decode_corrupt``) is flagged by the re-encode screen and quarantines
+  ONLY the corrupted stream; clean streams pass at the same threshold;
+* **metrics** — the snapshot is a deep copy and carries injector fired
+  counts.
+"""
+
+import asyncio
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.codespec import available_code_specs, get_code_spec
+from repro.core.engine import ArraySessionStore
+from repro.launch.faults import FaultInjector, IntegrityError
+from repro.launch.journal import ChunkJournal, IntegritySentinel
+from repro.launch.serve_async import AsyncDecodeService
+from repro.launch.slab import SymbolSlab
+
+from test_serve_async import GEOM, FakeClock, _engine, _tx_stream
+
+MAX_EXAMPLES = int(os.environ.get("PROPERTY_MAX_EXAMPLES", "3"))
+
+
+# ---------------------------------------------------------------------------
+# ChunkJournal mechanics
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+def test_journal_roundtrip_and_seq_survives_reopen(tmp_path):
+    j = ChunkJournal(tmp_path)
+    s1 = j.append("open", 0)
+    s2 = j.append("admit", 0, np.arange(6, dtype=np.float32))
+    assert (s1, s2) == (1, 2) and j.seq == 2
+    recs = j.records()
+    assert [r[:2] for r in recs] == [(1, "open"), (2, "admit")]
+    np.testing.assert_array_equal(recs[1][3], np.arange(6, dtype=np.float32))
+    j.close()
+    j2 = ChunkJournal(tmp_path)  # restart: seq continues, never reuses
+    assert j2.append("ack", 0, 64) == 3
+    j2.close()
+
+
+@pytest.mark.tier1
+def test_journal_torn_tail_tolerated(tmp_path):
+    j = ChunkJournal(tmp_path)
+    j.append("open", 0)
+    j.append("ack", 0, 128)
+    j.close()
+    with open(j.log_path, "ab") as f:  # SIGKILL mid-write: half a record
+        f.write(b"\x40\x00\x00\x00\x99\x99")
+    j2 = ChunkJournal(tmp_path)
+    assert [r[1] for r in j2.records()] == ["open", "ack"]
+    assert j2.append("finish", 0) == 3  # appends continue past the torn tail
+    j2.close()
+
+
+@pytest.mark.tier1
+def test_journal_crc_corruption_stops_replay_at_frontier(tmp_path):
+    j = ChunkJournal(tmp_path)
+    j.append("open", 0)
+    mid_off = os.path.getsize(j.log_path)
+    j.append("ack", 0, 64)
+    j.append("finish", 0)
+    j.close()
+    with open(j.log_path, "r+b") as f:  # flip one payload byte mid-log
+        f.seek(mid_off + 8)
+        b = f.read(1)
+        f.seek(mid_off + 8)
+        f.write(bytes([b[0] ^ 0xFF]))
+    j2 = ChunkJournal(tmp_path)
+    # nothing after the corrupt record is trustworthy, even if intact
+    assert [r[1] for r in j2.records()] == ["open"]
+    j2.close()
+
+
+@pytest.mark.tier1
+def test_checkpoint_is_atomic_and_compacts_log(tmp_path):
+    j = ChunkJournal(tmp_path)
+    for sid in range(4):
+        j.append("open", sid)
+    j.write_checkpoint({"dispatches": 7, "streams": {}})
+    assert os.path.getsize(j.log_path) == 0  # superseded log truncated
+    j.append("open", 99)  # lands after the checkpoint
+    ckpt, pending = j.load()
+    assert ckpt["dispatches"] == 7 and ckpt["last_seq"] == 4
+    assert [r[1:] for r in pending] == [("open", 99)]
+    # a stale tmp from a crash mid-checkpoint is ignored (never promoted)
+    with open(j.ckpt_path + ".tmp", "wb") as f:
+        f.write(b"garbage that never got renamed")
+    assert ChunkJournal(tmp_path).load_checkpoint()["dispatches"] == 7
+    # a truncated checkpoint file reads as absent, not as an error
+    with open(j.ckpt_path, "r+b") as f:
+        f.truncate(5)
+    assert ChunkJournal(tmp_path).load_checkpoint() is None
+    j.close()
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+def test_store_snapshot_restore_roundtrip_array_and_paged():
+    rng = np.random.default_rng(5)
+    rows = rng.normal(size=(23, 2)).astype(np.float32)
+    a = ArraySessionStore(2)
+    a.append(rows)
+    a.drop_prefix(4)
+    a2 = ArraySessionStore(2)
+    a2.restore(a.snapshot())
+    np.testing.assert_array_equal(a2.read(0, len(a2)), rows[4:])
+
+    slab = SymbolSlab(n_pages=16, page_stages=5, R=2)  # page-misaligned
+    p = slab.open_store()
+    p.append(rows)
+    p.drop_prefix(4)
+    p2 = slab.open_store()
+    p2.restore(p.snapshot())
+    np.testing.assert_array_equal(np.array(p2.read(0, len(p2))), rows[4:])
+    with pytest.raises(ValueError, match="not empty"):
+        p2.restore(p.snapshot())
+    p.close()
+    p2.close()
+    assert slab.pages_in_use == 0
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("name", ["ccsds", "ccsds-3/4"])
+def test_session_snapshot_restores_bit_exact(name):
+    """Snapshot a session mid-stream, restore into a fresh one, continue:
+    the combined output equals the uninterrupted session bit for bit."""
+    spec, _, y = _tx_stream(name, 700, 4.5, 31)
+    eng = _engine(spec)
+    cut = len(y) // 3
+    ref_sess = eng.session()
+    ref = np.concatenate([ref_sess.decode(y), ref_sess.finish(700)])
+
+    s1 = eng.session()
+    head = s1.decode(y[:cut])
+    snap = s1.snapshot()
+    s2 = eng.session()
+    s2.restore(snap)
+    out = np.concatenate([head, s2.decode(y[cut:]), s2.finish(700)])
+    np.testing.assert_array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# Crash → recover: the kill-point matrix
+# ---------------------------------------------------------------------------
+def _chunks(y, n_chunks):
+    bounds = np.linspace(0, len(y), n_chunks + 1).astype(int)
+    return [y[lo:hi] for lo, hi in zip(bounds[:-1], bounds[1:])]
+
+
+def _slab(spec, n_streams):
+    return SymbolSlab(
+        n_pages=8 * n_streams, page_stages=GEOM["D"] + 2 * GEOM["L"], R=spec.code.R
+    )
+
+
+def _crash_recover_roundtrip(
+    name, n_bits, n_chunks, n_streams, kill_at, jdir, *, metric_mode="f32", seed=40
+):
+    """Run a journaled manual-poll trace, abandon it after its ``kill_at``-th
+    dispatch (0 = before any), recover into a fresh slab, resume, and return
+    per-stream (durable_prefix + recovered_delivery, reference) pairs plus
+    the recovered slab for leak assertions.
+
+    The simulated client acks what it takes after every dispatch EXCEPT the
+    last one before the crash — those taken-but-unacked bits are "lost with
+    the process" and recovery must redeliver them (while never redelivering
+    the acked prefix).
+    """
+    spec = get_code_spec(name)
+    eng = _engine(spec, metric_mode=metric_mode)
+    txs = [_tx_stream(name, n_bits, 4.5, seed + i) for i in range(n_streams)]
+    refs = [
+        np.asarray(eng.decode(jnp.asarray(y), n_bits)) for _, _, y in txs
+    ]
+    chunk_lists = [_chunks(y, n_chunks) for _, _, y in txs]
+
+    async def crash_half():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,
+            deadline_ms=0.0,  # manual poll() is due as soon as anything is pending
+            slab=_slab(spec, n_streams),
+            journal=ChunkJournal(jdir),
+            checkpoint_every=2,  # some acks land in the log, some fold away
+        )
+        streams = [svc.open(eng) for _ in txs]
+        durable = [[] for _ in txs]
+        fired = 0
+        for k in range(n_chunks):
+            if fired >= kill_at:
+                return durable  # "SIGKILL": nothing closed, nothing flushed
+            for st, chunks in zip(streams, chunk_lists):
+                await st.send(chunks[k])
+            if svc.poll():
+                fired += 1
+                last = fired >= kill_at
+                for i, st in enumerate(streams):
+                    got = st.take(ack=False)
+                    if last:
+                        continue  # taken but never acked: dies with the process
+                    if len(got):
+                        durable[i].append(got)
+                    st.ack()
+        return durable
+
+    durable = asyncio.run(crash_half())
+
+    async def recover_half():
+        slab2 = _slab(spec, n_streams)
+        svc = AsyncDecodeService.recover(
+            ChunkJournal(jdir),
+            eng,
+            slab=slab2,
+            max_batch_blocks=1000,
+            deadline_ms=0.0,
+        )
+        outs = []
+        for i in range(n_streams):
+            st = svc.recovered_streams[i]
+            assert st.acked_bits == sum(len(d) for d in durable[i])
+            for k in range(st.chunks_admitted, n_chunks):
+                await st.send(chunk_lists[i][k])
+                svc.poll()
+            tail = np.concatenate([st.take(), await st.finish(n_bits)])
+            outs.append(np.concatenate([*durable[i], tail]).astype(np.int64))
+        return outs, slab2
+
+    outs, slab2 = asyncio.run(recover_half())
+    return outs, refs, slab2
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("kill_at", range(0, 5))
+def test_kill_point_matrix_recovery_is_bit_exact(tmp_path, kill_at):
+    """Crash at EVERY dispatch boundary (and before the first): the durable
+    prefix plus the recovered redelivery is the reference, exactly once —
+    no missing bits, no duplicates, no leaked slab pages."""
+    n_bits, n_chunks, n_streams = 512, 4, 3
+    outs, refs, slab2 = _crash_recover_roundtrip(
+        "ccsds", n_bits, n_chunks, n_streams, kill_at, tmp_path
+    )
+    for got, ref in zip(outs, refs):
+        assert len(got) == n_bits  # exactly-once: length alone catches dups
+        np.testing.assert_array_equal(got, ref)
+    assert slab2.pages_in_use == 0  # every recovered stream released its pages
+
+
+@pytest.mark.tier1
+def test_recover_after_clean_finish_is_empty(tmp_path):
+    """A trace that finished everything leaves a journal that recovers to an
+    empty service (the all-acked checkpoint truncated the log)."""
+    spec, _, y = _tx_stream("ccsds", 512, 4.5, 50)
+    eng = _engine(spec)
+
+    async def scenario():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,
+            deadline_ms=0.0,
+            slab=_slab(spec, 1),
+            journal=ChunkJournal(tmp_path),
+        )
+        st = svc.open(eng)
+        await st.send(y)
+        svc.poll()
+        return np.concatenate([st.take(), await st.finish(512)])
+
+    out = asyncio.run(scenario())
+    np.testing.assert_array_equal(out, np.asarray(eng.decode(jnp.asarray(y), 512)))
+    j = ChunkJournal(tmp_path)
+    assert j.load()[1] == []  # no unapplied records
+    svc = AsyncDecodeService.recover(j, eng, slab=_slab(spec, 1))
+    assert svc.recovered_streams == {} and svc._streams == []
+
+
+_PUNCTURED = [n for n in available_code_specs() if get_code_spec(n).is_punctured]
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(
+    st.sampled_from(["ccsds", *_PUNCTURED]),
+    st.sampled_from(["f32", "i16", "i8"]),
+    st.integers(2, 5),
+    st.floats(0.0, 1.0),
+)
+def test_property_crash_recovery_bit_exact(
+    tmp_path_factory, name, metric_mode, n_chunks, kill_frac
+):
+    """Fuzz the recovery contract: random punctured/unpunctured spec ×
+    metric mode × chunk partition × kill point (including 0 = the journal
+    holds only opens/admits, and points past the last dispatch)."""
+    kill_at = int(round(kill_frac * n_chunks))
+    jdir = tmp_path_factory.mktemp("journal")
+    n_bits, n_streams = 448, 2
+    outs, refs, slab2 = _crash_recover_roundtrip(
+        name, n_bits, n_chunks, n_streams, kill_at, jdir,
+        metric_mode=metric_mode, seed=60,
+    )
+    for got, ref in zip(outs, refs):
+        assert len(got) == n_bits
+        np.testing.assert_array_equal(got, ref)
+    assert slab2.pages_in_use == 0
+
+
+@pytest.mark.tier1
+def test_recovery_tolerates_torn_tail_mid_trace(tmp_path):
+    """Tear the journal's tail AFTER a crash (the half-written record a real
+    SIGKILL leaves): recovery replays the intact prefix; the client cursor
+    shrinks accordingly and re-sends, still bit-exact."""
+    spec, _, y = _tx_stream("ccsds", 512, 4.5, 55)
+    eng = _engine(spec)
+    chunks = _chunks(y, 4)
+
+    async def crash_half():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,
+            deadline_ms=0.0,
+            slab=_slab(spec, 1),
+            journal=ChunkJournal(tmp_path),
+            checkpoint_every=None,  # keep every record in the log
+        )
+        st = svc.open(eng)
+        for c in chunks[:3]:
+            await st.send(c)
+        svc.poll()
+
+    asyncio.run(crash_half())
+    with open(os.path.join(tmp_path, "journal.log"), "ab") as f:
+        f.write(b"\xff" * 7)  # the torn half-record
+
+    async def recover_half():
+        slab2 = _slab(spec, 1)
+        svc = AsyncDecodeService.recover(
+            ChunkJournal(tmp_path), eng, slab=slab2,
+            max_batch_blocks=1000, deadline_ms=0.0,
+        )
+        st = svc.recovered_streams[0]
+        assert st.chunks_admitted == 3  # all three admits were intact
+        for c in chunks[3:]:
+            await st.send(c)
+            svc.poll()
+        return np.concatenate([st.take(), await st.finish(512)])
+
+    out = asyncio.run(recover_half())
+    np.testing.assert_array_equal(out, np.asarray(eng.decode(jnp.asarray(y), 512)))
+
+
+# ---------------------------------------------------------------------------
+# Integrity sentinel
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+def test_sentinel_unit_flags_flip_not_noise():
+    """Unit-level: at high SNR a clean block passes the 0.95 bound and a
+    single-bit flip (which disturbs ~(v+1)·R re-encoded symbols) fails it;
+    punctured erasure slots (exact zeros) are excluded either way."""
+    spec, payload, y = _tx_stream("ccsds", 64, 8.0, 70)  # one D=64 block span
+    sen = IntegritySentinel(rate=1.0, min_agreement=0.95)
+    window = y.reshape(-1, spec.code.R)[:64]
+    assert sen.check(payload, window, spec.code, 0) is None
+    bad = payload.copy()
+    bad[32] ^= 1
+    err = sen.check(bad, window, spec.code, 0)
+    assert isinstance(err, IntegrityError)
+    assert err.agreement < 0.95 == err.bound
+    assert sen.checked == 2 and sen.flagged == 1
+    # zero-symbol windows (all-erasure / flush padding) never flag
+    assert sen.check(payload, np.zeros_like(window), spec.code, 0) is None
+    with pytest.raises(ValueError, match="rate"):
+        IntegritySentinel(rate=1.5)
+
+
+@pytest.mark.tier1
+def test_sentinel_catches_decode_corrupt_and_quarantines_one_stream():
+    """An injected post-kernel bit flip on stream A is flagged by the
+    re-encode sentinel and quarantines A with a typed IntegrityError;
+    stream B (same dispatches, clean) delivers bit-exact — the blast
+    radius is one stream."""
+    n_bits = 512
+    spec, _, ya = _tx_stream("ccsds", n_bits, 8.0, 80)  # high SNR: clean
+    _, _, yb = _tx_stream("ccsds", n_bits, 8.0, 81)  # blocks pass 0.95 easily
+    eng = _engine(spec)
+    inj = FaultInjector(schedule={"decode_corrupt": {0}})  # first delivery → A
+
+    async def scenario():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,
+            deadline_ms=0.0,
+            slab=_slab(spec, 2),
+            fault_injector=inj,
+            integrity_rate=1.0,
+            integrity_min_agreement=0.95,
+        )
+        a, b = svc.open(eng), svc.open(eng)
+        # per-block deliveries: one flip in a 64-bit span drops agreement to
+        # ~0.92, well under 0.95 — a whole-stream span would dilute it away
+        ca, cb = _chunks(ya, 8), _chunks(yb, 8)
+        for k in range(2):
+            await a.send(ca[k])
+            await b.send(cb[k])
+        svc.poll()  # first delivery: decode_corrupt consultation 0 hits A
+        with pytest.raises(IntegrityError, match="integrity sentinel"):
+            a.take()
+        assert isinstance(a.failed, IntegrityError)
+        for c in cb[2:]:
+            await b.send(c)
+            svc.poll()
+        out_b = np.concatenate([b.take(), await b.finish(n_bits)])
+        m = svc.metrics()
+        return out_b, m
+
+    out_b, m = asyncio.run(scenario())
+    np.testing.assert_array_equal(out_b, np.asarray(eng.decode(jnp.asarray(yb), n_bits)))
+    assert m["integrity_flagged"] == 1 and m["integrity_checked"] >= 2
+    assert m["quarantined_streams"] == 1
+    assert m["errors_by_class"]["IntegrityError"] == 1
+    assert m["faults_injected"]["decode_corrupt"] == 1
+
+
+@pytest.mark.tier1
+def test_sentinel_clean_trace_passes_at_operating_snr():
+    """No injection: a full trace at the 4 dB operating point sails under
+    the default 0.85 bound — the sentinel screens corruption, not noise."""
+    n_bits = 512
+    spec, _, y = _tx_stream("ccsds", n_bits, 4.0, 85)
+    eng = _engine(spec)
+
+    async def scenario():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,
+            deadline_ms=0.0,
+            slab=_slab(spec, 1),
+            integrity_rate=1.0,
+        )
+        st = svc.open(eng)
+        for c in _chunks(y, 3):
+            await st.send(c)
+            svc.poll()
+        out = np.concatenate([st.take(), await st.finish(n_bits)])
+        return out, svc.metrics()
+
+    out, m = asyncio.run(scenario())
+    np.testing.assert_array_equal(out, np.asarray(eng.decode(jnp.asarray(y), n_bits)))
+    assert m["integrity_checked"] >= 1 and m["integrity_flagged"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Metrics hygiene
+# ---------------------------------------------------------------------------
+@pytest.mark.tier1
+def test_metrics_returns_deep_copy_with_fault_counts():
+    """metrics() must hand back a snapshot: mutating it cannot corrupt the
+    live counters, and injector fired counts ride along."""
+    spec, _, y = _tx_stream("ccsds", 256, 4.5, 90)
+    eng = _engine(spec)
+    clk = FakeClock()
+    inj = FaultInjector(schedule={"dispatch": {0}})
+
+    async def scenario():
+        svc = AsyncDecodeService(
+            max_batch_blocks=1000,
+            deadline_ms=0.0,
+            clock=clk.now,
+            slab=_slab(spec, 1),
+            fault_injector=inj,
+        )
+        st = svc.open(eng)
+        await st.send(y)
+        assert svc.poll() is True  # attempt 1: injected failure → backoff armed
+        assert svc.poll() is False  # backoff gates the retry
+        clk.advance(60.0)
+        assert svc.poll() is True  # retry lands
+        m = svc.metrics()
+        m["errors_by_class"]["DispatchError"] = 999
+        m["faults_injected"]["dispatch"] = 999
+        m["errors_by_class"]["Phantom"] = 1
+        m2 = svc.metrics()
+        assert m2["errors_by_class"]["DispatchError"] == 1
+        assert m2["faults_injected"]["dispatch"] == 1
+        assert "Phantom" not in m2["errors_by_class"]
+        assert m2["retries"] == 1
+        return np.concatenate([st.take(), await st.finish(256)])
+
+    out = asyncio.run(scenario())
+    np.testing.assert_array_equal(out, np.asarray(eng.decode(jnp.asarray(y), 256)))

@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import SHAPES, get_config, list_archs
-from repro.models import lm
+from repro._unused.models import lm
 
 ARCHS = list_archs()
 
@@ -52,7 +52,7 @@ def test_smoke_forward(arch):
     rng = np.random.default_rng(0)
     B, S = 2, 32
     logits = lm.apply_train(params, _batch_for(cfg, B, S, rng), cfg)
-    from repro.models.layers import round_vocab
+    from repro._unused.models.layers import round_vocab
 
     assert logits.shape == (B, S, round_vocab(cfg.vocab))
     assert bool(jnp.isfinite(logits).all())
